@@ -1,0 +1,80 @@
+"""Paper Fig. 2: runtime of lazily reading N .trk files into the
+nibabel-like reader, S3Fs-style sequential vs Rolling Prefetch.
+
+Claims validated:
+  * speed-up grows with dataset size (more blocks to mask);
+  * Rolling Prefetch never falls meaningfully below sequential (worst case
+    ~= S3Fs per the paper);
+  * all speed-ups < 2 (Eq. 3 bound).
+"""
+
+from __future__ import annotations
+
+from repro.core.rolling import RollingPrefetchFile, RollingPrefetcher
+from repro.core.sequential import SequentialFile
+from repro.data.trk import iter_streamlines_multi
+
+from benchmarks.common import (
+    DEFAULT_BLOCK,
+    emit,
+    fresh_store,
+    fresh_tiers,
+    make_trk_dataset,
+    timed,
+)
+
+
+def _consume(stream, size) -> int:
+    n = 0
+    for sl in iter_streamlines_multi(stream, size):
+        n += sl.points.shape[0]
+    return n
+
+
+def run_sequential(ds) -> float:
+    store = fresh_store(ds)
+    f = SequentialFile(store, ds.metas(), DEFAULT_BLOCK)
+    _consume(f, f.size)
+    f.close()
+    return 0.0
+
+
+def run_rolling(ds) -> float:
+    store = fresh_store(ds)
+    f = RollingPrefetchFile(
+        RollingPrefetcher(store, ds.metas(), fresh_tiers(), DEFAULT_BLOCK,
+                          eviction_interval_s=0.05)
+    )
+    _consume(f, f.size)
+    f.close()
+    return 0.0
+
+
+def main(quick: bool = False) -> dict:
+    counts = [1, 2, 4] if quick else [1, 2, 4, 8]
+    reps = 2 if quick else 3
+    results = {}
+    for n in counts:
+        ds = make_trk_dataset(n, seed=n)
+        t_seq, _, _ = timed(lambda: run_sequential(ds), reps=reps)
+        t_pf, _, _ = timed(lambda: run_rolling(ds), reps=reps)
+        speedup = t_seq / t_pf
+        results[n] = (t_seq, t_pf, speedup)
+        emit(
+            f"fig2_filecount_n{n}",
+            t_pf * 1e6,
+            f"seq_s={t_seq:.3f};pf_s={t_pf:.3f};speedup={speedup:.3f};"
+            f"bytes={ds.total_bytes}",
+        )
+    # Claims.
+    sp = [results[n][2] for n in counts]
+    assert all(s < 2.0 for s in sp), f"Eq.3 bound violated: {sp}"
+    assert sp[-1] > sp[0] - 0.05, f"speedup should grow with size: {sp}"
+    assert all(s > 0.9 for s in sp), f"worst case should be ~sequential: {sp}"
+    emit("fig2_speedup_trend", 0.0,
+         ";".join(f"n{n}={results[n][2]:.3f}" for n in counts))
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""§II-B model validation: measured T_seq / T_pf vs Eq. 1-3 predictions.
+
+Uses a synthetic workload with exactly-controlled compute (busy-sleep of
+c bytes-per-second per block) so every model parameter (l_c, b_cr, c) is
+known, then checks measured runtimes against the closed forms and the
+measured speed-up against Eq. 3, including the S < 2 bound and the
+balanced-pipeline maximum near T_cloud ~= T_comp.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import cost_model
+from repro.core.rolling import RollingPrefetchFile, RollingPrefetcher
+from repro.core.sequential import SequentialFile
+from repro.store import LinkModel, MemTier, SimS3Store
+from repro.store.base import ObjectMeta
+
+from benchmarks.common import emit, timed
+
+LAT = 0.015
+BW = 80e6
+FILE_BYTES = 1 << 20
+N_FILES = 2
+
+
+def _store() -> SimS3Store:
+    store = SimS3Store(link=LinkModel(latency_s=LAT, bandwidth_Bps=BW))
+    payload = bytes(FILE_BYTES)
+    for i in range(N_FILES):
+        store.backing.put(f"f{i}", payload)
+    return store
+
+
+def _consume(f, blocksize: int, c: float) -> None:
+    """Read block-by-block, spending exactly c seconds/byte of compute."""
+    while True:
+        data = f.read(blocksize)
+        if not data:
+            return
+        deadline = time.perf_counter() + c * len(data)
+        while time.perf_counter() < deadline:
+            pass
+
+
+def _measure(mode: str, blocksize: int, c: float) -> float:
+    store = _store()
+    metas = [ObjectMeta(f"f{i}", FILE_BYTES) for i in range(N_FILES)]
+    if mode == "seq":
+        f = SequentialFile(store, metas, blocksize)
+    else:
+        f = RollingPrefetchFile(
+            RollingPrefetcher(store, metas, [MemTier(16 << 20)], blocksize,
+                              eviction_interval_s=0.02)
+        )
+    t0 = time.perf_counter()
+    _consume(f, blocksize, c)
+    elapsed = time.perf_counter() - t0
+    f.close()
+    return elapsed
+
+
+def main(quick: bool = False) -> dict:
+    total = N_FILES * FILE_BYTES
+    results = {}
+    cases = [
+        ("balanced", 128 << 10, (LAT + (128 << 10) / BW) / (128 << 10)),
+        ("compute_heavy", 128 << 10, 3 * (LAT + (128 << 10) / BW) / (128 << 10)),
+        ("io_heavy", 128 << 10, 0.2 * (LAT + (128 << 10) / BW) / (128 << 10)),
+    ]
+    if quick:
+        cases = cases[:2]
+    for name, bs, c in cases:
+        n_b = total // bs
+        p = cost_model.CostParams(f=total, n_b=n_b, l_c=LAT, b_cr=BW, c=c)
+        pred_seq, pred_pf = cost_model.t_seq(p), cost_model.t_pf(p)
+        pred_sp = cost_model.speedup(p)
+
+        t_seq = min(_measure("seq", bs, c) for _ in range(2))
+        t_pf = min(_measure("pf", bs, c) for _ in range(2))
+        sp = t_seq / t_pf
+        results[name] = (sp, pred_sp)
+        emit(
+            f"model_validation_{name}",
+            t_pf * 1e6,
+            f"meas_seq={t_seq:.3f};pred_seq={pred_seq:.3f};"
+            f"meas_pf={t_pf:.3f};pred_pf={pred_pf:.3f};"
+            f"meas_S={sp:.3f};pred_S={pred_sp:.3f}",
+        )
+        # Measured vs predicted within 25% (threaded-runtime noise).
+        assert abs(t_seq - pred_seq) / pred_seq < 0.25, (name, t_seq, pred_seq)
+        assert abs(t_pf - pred_pf) / pred_pf < 0.30, (name, t_pf, pred_pf)
+        assert sp < 2.0
+
+    if not quick:
+        # The balanced case should approach the bound hardest (Eq. 3).
+        assert results["balanced"][0] >= results["io_heavy"][0] - 0.1
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Roofline table: reads the dry-run artifacts (reports/dryrun/*.json) and
+prints the per-(arch x shape x mesh) roofline terms — the §Roofline data.
+Run `python -m repro.launch.dryrun --all` first to (re)generate artifacts;
+this benchmark only aggregates (no 512-device init here)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+
+def load_reports(path: str = "reports/dryrun") -> list[dict]:
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(path, "*.json"))):
+        with open(fn) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def main(quick: bool = False) -> dict:
+    recs = load_reports()
+    if not recs:
+        emit("roofline_missing", 0.0,
+             "run `python -m repro.launch.dryrun --all` first")
+        return {}
+    ok = [r for r in recs if r.get("status") == "ok"]
+    skipped = [r for r in recs if r.get("status") == "skipped"]
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        dom_t = max(r["t_compute"], r["t_memory"], r["t_collective"])
+        # roofline fraction: compute term / dominant term (1.0 = compute-bound
+        # at peak; lower = further from the compute roofline).
+        frac = r["t_compute"] / dom_t if dom_t else 0.0
+        emit(
+            f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+            dom_t * 1e6,
+            f"tc={r['t_compute']:.3e};tm={r['t_memory']:.3e};"
+            f"tcoll={r['t_collective']:.3e};dom={r['dominant']};"
+            f"useful={r['useful_flops_ratio']:.3f};frac={frac:.3f}",
+        )
+    emit("roofline_counts", 0.0,
+         f"ok={len(ok)};skipped={len(skipped)};"
+         f"errors={len(recs) - len(ok) - len(skipped)}")
+    return {"ok": len(ok), "skipped": len(skipped)}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""Shared benchmark harness.
+
+Constants are the paper's Table I values scaled down so every figure
+reproduces in seconds on CI hardware (the validated quantities are the
+RATIOS — speed-up curves, optimum locations, bounds — not absolute times):
+
+                      paper              scaled          factor
+  S3 latency          0.1 s              0.02 s          /5
+  S3 bandwidth        91 MB/s            45 MB/s         /2
+  memory bandwidth    2221 MB/s          1100 MB/s       /2
+  memory latency      1.6 us             1.6 us          1
+  file sizes          0.7-1.7 GiB        1.5-3.5 MB      /~500
+  block size          8 MiB-2 GiB        32 KiB-4 MiB    /~500
+
+Each benchmark reports `name,us_per_call,derived` CSV rows via `emit`.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.data.trk import synth_trk
+from repro.store import LinkModel, MemTier, SimS3Store
+from repro.store.base import ObjectMeta
+
+# Scaled Table I.
+S3_LATENCY = 0.02
+S3_BW = 45e6
+MEM_LATENCY = 1.6e-6
+MEM_BW = 1100e6
+DEFAULT_BLOCK = 256 << 10       # scaled analog of the paper's 64 MiB
+CACHE_BUDGET = 4 << 20          # scaled analog of the paper's 2 GiB tmpfs
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+@dataclass
+class TrkDataset:
+    objects: dict[str, bytes]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(len(v) for v in self.objects.values())
+
+    def metas(self) -> list[ObjectMeta]:
+        return [ObjectMeta(k, len(v)) for k, v in sorted(self.objects.items())]
+
+
+def make_trk_dataset(n_files: int, streamlines_per_file: int = 4000,
+                     seed: int = 0, mean_points: int = 15) -> TrkDataset:
+    """Short streamlines (~190 B) keep per-byte parse compute high enough
+    that scaled T_comp ~= scaled T_cloud — the balanced regime where the
+    paper's speed-ups are visible."""
+    rng = np.random.default_rng(seed)
+    objects = {
+        f"hydi/shard_{i:04d}.trk": synth_trk(
+            rng, streamlines_per_file, mean_points=mean_points
+        )
+        for i in range(n_files)
+    }
+    return TrkDataset(objects)
+
+
+def fresh_store(ds: TrkDataset, *, latency: float = S3_LATENCY,
+                bandwidth: float = S3_BW) -> SimS3Store:
+    """A new store + link per measurement so A/B runs never share link
+    reservation state."""
+    store = SimS3Store(link=LinkModel(latency_s=latency, bandwidth_Bps=bandwidth,
+                                      name="s3"))
+    for k, v in ds.objects.items():
+        store.backing.put(k, v)
+    return store
+
+
+def fresh_tiers(capacity: int = CACHE_BUDGET) -> list[MemTier]:
+    return [
+        MemTier(
+            capacity,
+            read_link=LinkModel(latency_s=MEM_LATENCY, bandwidth_Bps=MEM_BW,
+                                name="tmpfs.r"),
+            write_link=LinkModel(latency_s=MEM_LATENCY, bandwidth_Bps=MEM_BW,
+                                 name="tmpfs.w"),
+            name="tmpfs",
+        )
+    ]
+
+
+def timed(fn, *, reps: int = 3) -> tuple[float, float, list[float]]:
+    """Median + min of `reps` runs of fn() -> wall seconds."""
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times)), min(times), times

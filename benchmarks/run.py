@@ -1,0 +1,56 @@
+"""Benchmark suite entry point: one module per paper figure/table plus the
+beyond-paper pipelines. Prints ``name,us_per_call,derived`` CSV rows.
+
+  python -m benchmarks.run [--quick] [--only fig2_filecount,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+BENCHES = {
+    "fig2_filecount": "benchmarks.bench_filecount",
+    "fig4_blocksize": "benchmarks.bench_blocksize",
+    "fig3_parallel": "benchmarks.bench_parallel",
+    "fig5_usecases": "benchmarks.bench_usecases",
+    "model_validation": "benchmarks.bench_model_validation",
+    "training_pipeline": "benchmarks.bench_training_pipeline",
+    "ckpt_restore": "benchmarks.bench_ckpt_restore",
+    "roofline": "benchmarks.bench_roofline",
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset of: " + ",".join(BENCHES))
+    args = ap.parse_args()
+    selected = [s for s in args.only.split(",") if s] or list(BENCHES)
+
+    import importlib
+
+    print("name,us_per_call,derived")
+    failures = []
+    for name in selected:
+        mod = importlib.import_module(BENCHES[name])
+        t0 = time.time()
+        try:
+            mod.main(quick=args.quick)
+            print(f"bench_{name}_wall,{(time.time() - t0) * 1e6:.0f},status=ok")
+        except AssertionError as e:
+            failures.append((name, e))
+            print(f"bench_{name}_wall,{(time.time() - t0) * 1e6:.0f},"
+                  f"status=CLAIM_FAILED:{e}")
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, e))
+            print(f"bench_{name}_wall,{(time.time() - t0) * 1e6:.0f},"
+                  f"status=ERROR:{type(e).__name__}:{e}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

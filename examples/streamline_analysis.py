@@ -1,0 +1,96 @@
+"""Paper use-cases end-to-end: streamline-length histogram and bundle
+recognition over a prefetched multi-shard dataset, with the analysis
+compute in JAX (paper §II-D.4, Fig. 5).
+
+  PYTHONPATH=src python examples/streamline_analysis.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import RollingPrefetchFile, RollingPrefetcher, SequentialFile
+from repro.data.trk import iter_streamlines_multi, synth_trk
+from repro.store import LinkModel, MemTier, SimS3Store
+
+rng = np.random.default_rng(1)
+objects = {f"hydi/shard{i}.trk": synth_trk(rng, 3000, mean_points=15)
+           for i in range(4)}
+
+
+def open_stream(mode: str):
+    store = SimS3Store(link=LinkModel(latency_s=0.02, bandwidth_Bps=45e6))
+    for k, v in objects.items():
+        store.backing.put(k, v)
+    metas = store.backing.list_objects()
+    if mode == "sequential":
+        return SequentialFile(store, metas, 256 << 10)
+    return RollingPrefetchFile(RollingPrefetcher(
+        store, metas, [MemTier(4 << 20)], 256 << 10, eviction_interval_s=0.05,
+    ))
+
+
+# --- use-case 1: histogram of streamline lengths (lazy, data-intensive) ------
+@jax.jit
+def lengths_of(padded_points, n_points):
+    deltas = jnp.diff(padded_points, axis=0)
+    seg = jnp.linalg.norm(deltas, axis=1)
+    mask = jnp.arange(seg.shape[0]) < (n_points - 1)
+    return jnp.sum(seg * mask)
+
+
+def histogram(mode: str):
+    f = open_stream(mode)
+    t0 = time.perf_counter()
+    lengths = []
+    for sl in iter_streamlines_multi(f, f.size):
+        pts = np.zeros((64, 3), np.float32)
+        n = min(len(sl.points), 64)
+        pts[:n] = sl.points[:n]
+        lengths.append(float(lengths_of(jnp.asarray(pts), n)))
+    hist = np.histogram(lengths, bins=20)[0]
+    dt = time.perf_counter() - t0
+    f.close()
+    return hist, dt
+
+
+# --- use-case 2: bundle recognition (load-all-then-compute) --------------------
+@jax.jit
+def classify(batch_points, ref_cst, ref_arc):
+    d_cst = jnp.mean(jnp.linalg.norm(batch_points - ref_cst, axis=-1), axis=-1)
+    d_arc = jnp.mean(jnp.linalg.norm(batch_points - ref_arc, axis=-1), axis=-1)
+    best = jnp.minimum(d_cst, d_arc)
+    return jnp.where(best > 8.0, 0, jnp.where(d_cst < d_arc, 1, 2))
+
+
+def resample(points: np.ndarray, n: int = 20) -> np.ndarray:
+    t = np.linspace(0, 1, len(points))
+    ti = np.linspace(0, 1, n)
+    return np.stack([np.interp(ti, t, points[:, i]) for i in range(3)], axis=1)
+
+
+def bundle_recognition(mode: str):
+    f = open_stream(mode)
+    t0 = time.perf_counter()
+    # Paper: the pipeline loads all data first (no lazy loading)...
+    streamlines = [sl.points for sl in iter_streamlines_multi(f, f.size)]
+    f.close()
+    # ...then computes.
+    batch = jnp.asarray(np.stack([resample(p) for p in streamlines]))
+    k = jax.random.key(0)
+    ref_cst = jax.random.normal(k, (20, 3)).cumsum(axis=0)
+    ref_arc = ref_cst + 5.0
+    labels = np.asarray(classify(batch, ref_cst, ref_arc))
+    return labels, time.perf_counter() - t0
+
+
+for usecase, fn in [("histogram", histogram), ("bundle", bundle_recognition)]:
+    fn("rolling")  # warm-up: JIT compilation must not land in a timed run
+    out_seq, t_seq = fn("sequential")
+    out_pf, t_pf = fn("rolling")
+    match = np.array_equal(np.asarray(out_seq), np.asarray(out_pf))
+    print(f"{usecase:>10s}: sequential {t_seq:.2f}s | rolling {t_pf:.2f}s | "
+          f"speed-up {t_seq / t_pf:.2f}x | results identical: {match}")
+print("(paper Fig. 5: histogram ~1.5x, bundle ~1.14x; both < 2x)")

@@ -1,0 +1,21 @@
+from repro.configs.base import (
+    BlockDef,
+    ModelConfig,
+    ShapeConfig,
+    SHAPES,
+    all_configs,
+    get_config,
+    register,
+    shapes_for,
+)
+
+__all__ = [
+    "BlockDef",
+    "ModelConfig",
+    "ShapeConfig",
+    "SHAPES",
+    "all_configs",
+    "get_config",
+    "register",
+    "shapes_for",
+]

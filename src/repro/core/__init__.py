@@ -1,0 +1,29 @@
+"""Rolling Prefetch — the paper's primary contribution, as a composable
+library: block planning, the three-thread prefetch/read/evict engine over
+bounded cache tiers, the S3Fs-like sequential baseline it is benchmarked
+against, the Eq. 1-4 analytical cost model, and the online autotuner that
+closes the paper's optimal-block-size loop."""
+
+from repro.core.plan import Block, BlockPlan
+from repro.core.rolling import (
+    BlockState,
+    PrefetchStats,
+    RollingPrefetcher,
+    RollingPrefetchFile,
+)
+from repro.core.sequential import SequentialFile, SequentialStats
+from repro.core import cost_model
+from repro.core.autotune import BlockSizeTuner
+
+__all__ = [
+    "Block",
+    "BlockPlan",
+    "BlockState",
+    "PrefetchStats",
+    "RollingPrefetcher",
+    "RollingPrefetchFile",
+    "SequentialFile",
+    "SequentialStats",
+    "cost_model",
+    "BlockSizeTuner",
+]

@@ -1,0 +1,104 @@
+"""Online block-size autotuner (beyond the paper).
+
+The paper derives the optimal block count n̂_b = sqrt(c·f/l_c) (Eq. 4) but
+leaves selection to the user. At thousand-node scale nobody hand-tunes
+per-dataset block sizes, so we close the loop: fit (l_c, b_cr, c) from
+observed request timings and per-byte compute, then retune the block size
+between files/epochs. Estimates use EWMA so drifting cloud conditions
+(the paper's §III-C bandwidth variability) track automatically.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from repro.core import cost_model
+
+
+@dataclass
+class Ewma:
+    alpha: float = 0.2
+    value: float | None = None
+
+    def update(self, x: float) -> float:
+        self.value = x if self.value is None else (1 - self.alpha) * self.value + self.alpha * x
+        return self.value
+
+
+class BlockSizeTuner:
+    def __init__(
+        self,
+        min_blocksize: int = 1 << 20,
+        max_blocksize: int = 1 << 31,
+        alpha: float = 0.2,
+    ) -> None:
+        self.min_blocksize = min_blocksize
+        self.max_blocksize = max_blocksize
+        self._lat = Ewma(alpha)
+        self._bw = Ewma(alpha)
+        self._cpb = Ewma(alpha)  # compute seconds per byte
+
+    # -- observations -------------------------------------------------------
+    def observe_fetch(self, nbytes: int, seconds: float) -> None:
+        """One block fetch. With many samples at a fixed size this cannot
+        separate latency from bandwidth; callers that know better can call
+        observe_latency/observe_bandwidth directly."""
+        if nbytes <= 0 or seconds <= 0:
+            return
+        bw = self._bw.value
+        if bw:
+            lat = max(1e-9, seconds - nbytes / bw)
+            self._lat.update(lat)
+        self._bw.update(nbytes / max(seconds, 1e-9))
+
+    def observe_latency(self, seconds: float) -> None:
+        self._lat.update(max(seconds, 0.0))
+
+    def observe_bandwidth(self, bytes_per_s: float) -> None:
+        if bytes_per_s > 0:
+            self._bw.update(bytes_per_s)
+
+    def observe_compute(self, nbytes: int, seconds: float) -> None:
+        if nbytes > 0 and seconds >= 0:
+            self._cpb.update(seconds / nbytes)
+
+    # -- estimates ------------------------------------------------------------
+    @property
+    def latency_s(self) -> float | None:
+        return self._lat.value
+
+    @property
+    def bandwidth_Bps(self) -> float | None:
+        return self._bw.value
+
+    @property
+    def compute_s_per_byte(self) -> float | None:
+        return self._cpb.value
+
+    # -- planning ---------------------------------------------------------
+    def suggest_blocksize(self, total_bytes: int, cache_budget: int | None = None) -> int:
+        """Eq.-4 optimum, clamped to [min, max, cache budget]."""
+        lc = self._lat.value
+        c = self._cpb.value
+        if not lc or c is None:
+            return self._clamp(64 << 20, cache_budget)  # paper's default 64 MiB
+        nb = cost_model.optimal_num_blocks(total_bytes, c, lc)
+        if not math.isfinite(nb) or nb < 1:
+            nb = 1.0
+        return self._clamp(int(total_bytes / nb), cache_budget)
+
+    def _clamp(self, blocksize: int, cache_budget: int | None) -> int:
+        blocksize = max(self.min_blocksize, min(self.max_blocksize, blocksize))
+        if cache_budget is not None:
+            # Leave room for at least two blocks so the pipeline can roll.
+            blocksize = min(blocksize, max(1, cache_budget // 2))
+        return max(1, blocksize)
+
+    def predicted_speedup(self, total_bytes: int, blocksize: int) -> float | None:
+        lc, bw, c = self._lat.value, self._bw.value, self._cpb.value
+        if not lc or not bw or c is None:
+            return None
+        nb = max(1, math.ceil(total_bytes / blocksize))
+        p = cost_model.CostParams(f=total_bytes, n_b=nb, l_c=lc, b_cr=bw, c=c)
+        return cost_model.speedup(p)

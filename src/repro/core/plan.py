@@ -1,0 +1,90 @@
+"""Block plan: a logical byte stream over a list of objects.
+
+Rolling Prefetch treats a list of sharded files as one sequential stream
+(the paper: "only Rolling Prefetch is capable of treating a list of files
+as a single file"). The plan maps the stream to per-file, block-aligned
+ranges — the unit of prefetch, caching, and eviction.
+"""
+
+from __future__ import annotations
+
+import bisect
+from dataclasses import dataclass
+
+from repro.store.base import ObjectMeta
+
+
+@dataclass(frozen=True)
+class Block:
+    index: int          # global block index in prefetch order
+    file_index: int
+    key: str
+    start: int          # offset within the file
+    end: int            # exclusive
+    global_start: int   # offset within the logical stream
+
+    @property
+    def size(self) -> int:
+        return self.end - self.start
+
+    @property
+    def global_end(self) -> int:
+        return self.global_start + self.size
+
+    @property
+    def block_id(self) -> str:
+        return f"{self.file_index:06d}.{self.start:015d}.{self.key}"
+
+
+class BlockPlan:
+    """Block-aligned decomposition of a list of objects.
+
+    Blocks never span files (matching the paper: each file is fetched in
+    `blocksize` pieces; the last piece of each file may be short).
+    """
+
+    def __init__(self, files: list[ObjectMeta], blocksize: int) -> None:
+        if blocksize <= 0:
+            raise ValueError(f"blocksize must be positive, got {blocksize}")
+        self.files = list(files)
+        self.blocksize = blocksize
+        self.blocks: list[Block] = []
+        self._file_global_start: list[int] = []
+        offset = 0
+        for fi, meta in enumerate(self.files):
+            self._file_global_start.append(offset)
+            pos = 0
+            while pos < meta.size:
+                end = min(pos + blocksize, meta.size)
+                self.blocks.append(
+                    Block(
+                        index=len(self.blocks),
+                        file_index=fi,
+                        key=meta.key,
+                        start=pos,
+                        end=end,
+                        global_start=offset + pos,
+                    )
+                )
+                pos = end
+            offset += meta.size
+        self.total_bytes = offset
+        self._block_global_starts = [b.global_start for b in self.blocks]
+
+    def __len__(self) -> int:
+        return len(self.blocks)
+
+    def block_at(self, global_offset: int) -> Block:
+        """Block containing the logical-stream offset."""
+        if not 0 <= global_offset < self.total_bytes:
+            raise IndexError(
+                f"offset {global_offset} outside stream of {self.total_bytes} bytes"
+            )
+        i = bisect.bisect_right(self._block_global_starts, global_offset) - 1
+        return self.blocks[i]
+
+    def file_range(self, file_index: int) -> tuple[int, int]:
+        """Logical-stream [start, end) of one file."""
+        start = self._file_global_start[file_index]
+        size = self.files[file_index].size
+        return start, start + size

@@ -1,0 +1,116 @@
+"""Sequential-transfer baseline, modeling S3Fs/FSSpec on-demand block cache.
+
+This is the paper's comparison point: data transfer and compute occur in
+distinct phases. A ``read()`` that misses the single-block cache fetches
+the containing block from the object store synchronously (paying one
+request latency + bandwidth), then serves from memory. No background
+threads, no overlap.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+from repro.core.plan import BlockPlan
+from repro.store.base import ObjectMeta, ObjectStore
+
+
+@dataclass
+class SequentialStats:
+    blocks_fetched: int = 0
+    bytes_fetched: int = 0
+    bytes_read: int = 0
+    fetch_s: float = 0.0
+
+    def snapshot(self) -> dict:
+        return dict(self.__dict__)
+
+
+@dataclass
+class _CacheEntry:
+    index: int
+    data: bytes
+
+
+class SequentialFile:
+    """fsspec-style read-ahead block cache over the same logical stream the
+    Rolling Prefetch file exposes, so both sides of every A/B benchmark
+    perform byte-identical application reads."""
+
+    def __init__(
+        self,
+        store: ObjectStore,
+        files: list[ObjectMeta],
+        blocksize: int,
+        cache_blocks: int = 1,
+    ) -> None:
+        self.store = store
+        self.plan = BlockPlan(files, blocksize)
+        self.cache_blocks = max(1, cache_blocks)
+        self.stats = SequentialStats()
+        self._cache: dict[int, _CacheEntry] = {}
+        self._lru: list[int] = []
+        self._pos = 0
+        self._closed = False
+
+    @property
+    def size(self) -> int:
+        return self.plan.total_bytes
+
+    def _get_block(self, index: int) -> bytes:
+        entry = self._cache.get(index)
+        if entry is not None:
+            return entry.data
+        block = self.plan.blocks[index]
+        t0 = time.perf_counter()
+        data = self.store.get_range(block.key, block.start, block.end)
+        self.stats.fetch_s += time.perf_counter() - t0
+        self.stats.blocks_fetched += 1
+        self.stats.bytes_fetched += len(data)
+        self._cache[index] = _CacheEntry(index, data)
+        self._lru.append(index)
+        while len(self._lru) > self.cache_blocks:
+            self._cache.pop(self._lru.pop(0), None)
+        return data
+
+    def read(self, n: int = -1) -> bytes:
+        if self._closed:
+            raise ValueError("read on closed file")
+        if n < 0:
+            n = self.size - self._pos
+        end = min(self._pos + n, self.size)
+        out = bytearray()
+        while self._pos < end:
+            block = self.plan.block_at(self._pos)
+            data = self._get_block(block.index)
+            lo = self._pos - block.global_start
+            hi = min(end, block.global_end) - block.global_start
+            out.extend(data[lo:hi])
+            self._pos += hi - lo
+        self.stats.bytes_read += len(out)
+        return bytes(out)
+
+    def seek(self, offset: int, whence: int = 0) -> int:
+        if whence == 1:
+            offset += self._pos
+        elif whence == 2:
+            offset += self.size
+        if not 0 <= offset <= self.size:
+            raise ValueError(f"seek out of range: {offset}")
+        self._pos = offset
+        return self._pos
+
+    def tell(self) -> int:
+        return self._pos
+
+    def close(self) -> None:
+        self._closed = True
+        self._cache.clear()
+        self._lru.clear()
+
+    def __enter__(self) -> "SequentialFile":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -1,0 +1,9 @@
+from repro.ft.restart import RestartManager, TrainLoopResult, run_with_restarts
+from repro.ft.elastic import reshard_tree
+
+__all__ = [
+    "RestartManager",
+    "TrainLoopResult",
+    "run_with_restarts",
+    "reshard_tree",
+]

@@ -1,0 +1,26 @@
+"""Elastic scaling: re-shard a live (or restored) state onto a new mesh.
+
+Checkpoints store logical arrays (full shapes); restore targets carry the
+NEW topology's shardings, so growing 256 -> 512 chips (or shrinking after
+losing a pod) is a restore with a different rules/mesh pair — no format
+change. This module also reshards in-memory trees for mid-job elasticity.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.models.spec import param_shardings
+from repro.sharding.rules import ShardingRules
+
+
+def reshard_tree(tree, shardings):
+    """device_put every leaf onto the paired sharding (None = replicate)."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s), tree, shardings
+    )
+
+
+def reshard_params(params, spec_tree, rules: ShardingRules):
+    """Re-shard a parameter tree onto `rules.mesh` per the declarative spec."""
+    return reshard_tree(params, param_shardings(spec_tree, rules))

@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,      # (B, Hq, Sq, D)
+    k: jax.Array,      # (B, Hkv, Sk, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+) -> jax.Array:
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    group = hq // hkv
+    scale = d ** -0.5 if scale is None else scale
+    kf = jnp.repeat(k.astype(jnp.float32), group, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kf) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, vf)
+    return o.astype(q.dtype)
+
+
+def ssd_ref(
+    x: jax.Array,       # (B, S, H, P) — dt-scaled inputs
+    dt_a: jax.Array,    # (B, S, H)
+    b_proj: jax.Array,  # (B, S, G, N)
+    c_proj: jax.Array,  # (B, S, G, N)
+    initial_state: jax.Array | None = None,   # (B, H, P, N)
+) -> tuple[jax.Array, jax.Array]:
+    """Sequential (token-by-token) state-space recurrence — the definitional
+    oracle that both the chunked jnp path and the Pallas kernel must match:
+        h_t = exp(dt_a_t) h_{t-1} + B_t x_t ;  y_t = C_t . h_t
+    """
+    bsz, s, h, p = x.shape
+    g, n = b_proj.shape[2], b_proj.shape[3]
+    rep = h // g
+    bh = jnp.repeat(b_proj, rep, axis=2).astype(jnp.float32)   # (B,S,H,N)
+    ch = jnp.repeat(c_proj, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    decay = jnp.exp(dt_a.astype(jnp.float32))                  # (B,S,H)
+
+    state0 = (
+        jnp.zeros((bsz, h, p, n), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+
+    def step(state, inp):
+        x_t, d_t, b_t, c_t = inp
+        state = state * d_t[..., None, None] + jnp.einsum(
+            "bhp,bhn->bhpn", x_t, b_t
+        )
+        y_t = jnp.einsum("bhpn,bhn->bhp", state, c_t)
+        return state, y_t
+
+    final, ys = jax.lax.scan(
+        step,
+        state0,
+        (
+            xf.swapaxes(0, 1),
+            decay.swapaxes(0, 1),
+            bh.swapaxes(0, 1),
+            ch.swapaxes(0, 1),
+        ),
+    )
+    return ys.swapaxes(0, 1).astype(x.dtype), final

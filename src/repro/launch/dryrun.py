@@ -1,0 +1,241 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) cell on the
+production meshes and extract roofline terms.
+
+The two lines above MUST precede any other import (jax locks the device
+count at first init); do not set this flag globally.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only|--both-meshes]
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out reports/dryrun
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, all_configs, get_config, shapes_for
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs
+from repro.models import layers as L
+from repro.models.api import make_model
+from repro.roofline.analysis import analyze_compiled
+from repro.sharding.rules import DECODE_RULES, TRAIN_RULES, ShardingRules, use_rules
+from repro.train import AdamWConfig, StepConfig, abstract_train_state, build_train_step
+
+
+def _mesh_and_rules(shape_kind: str, multi_pod: bool):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    table = DECODE_RULES if shape_kind == "decode" else TRAIN_RULES
+    return mesh, ShardingRules(mesh, dict(table))
+
+
+def lower_cell(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    microbatches: int = 1,
+    q_chunk: int = 512,
+    moments_dtype: str = "float32",
+    quant: str | None = None,   # "int8": TP-only weight-only-quant decode
+    verbose: bool = True,
+):
+    """Lower + compile one cell; returns (report dict, compiled)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    model = make_model(cfg)
+    mesh, rules = _mesh_and_rules(shape.kind, multi_pod)
+    chips = mesh.devices.size
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+
+    t0 = time.time()
+    with mesh, use_rules(rules):
+        if shape.kind == "train":
+            step_cfg = StepConfig(microbatches=microbatches, q_chunk=q_chunk)
+            opt_cfg = AdamWConfig(moments_dtype=moments_dtype)
+            train_step = build_train_step(model, opt_cfg, step_cfg)
+            state = abstract_train_state(model, rules, opt_cfg=opt_cfg)
+            batch = input_specs(model, shape, rules)
+            lowered = jax.jit(train_step, donate_argnums=(0,)).lower(state, batch)
+            tokens = shape.global_batch * shape.seq_len
+        elif shape.kind == "prefill":
+            params = model.abstract_params(rules, param_dtype=L.COMPUTE_DTYPE)
+
+            def prefill_fn(p, batch):
+                return model.prefill(p, batch, q_chunk=q_chunk)
+
+            batch = input_specs(model, shape, rules)
+            lowered = jax.jit(prefill_fn).lower(params, batch)
+            tokens = shape.global_batch * shape.seq_len
+        else:  # decode
+            if quant == "int8":
+                from repro.models.quant import abstract_quantized_params
+                from repro.sharding.rules import DECODE_TP_RULES
+
+                params = abstract_quantized_params(
+                    model.spec(), ShardingRules(mesh, dict(DECODE_TP_RULES))
+                )
+            else:
+                params = model.abstract_params(rules, param_dtype=L.COMPUTE_DTYPE)
+            spec = input_specs(model, shape, rules)
+
+            def decode_fn(p, inputs, caches, position):
+                return model.decode_step(p, inputs, caches, position)
+
+            lowered = jax.jit(decode_fn, donate_argnums=(2,)).lower(
+                params, spec["inputs"], spec["caches"], spec["position"]
+            )
+            tokens = shape.global_batch  # one new token per sequence
+        t_lower = time.time() - t0
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    report = analyze_compiled(
+        compiled,
+        arch=arch,
+        shape=shape_name,
+        kind=shape.kind,
+        mesh_name=mesh_name,
+        chips=chips,
+        n_active_params=model.active_param_count(),
+        tokens=tokens,
+    )
+    out = report.to_dict()
+    out["lower_s"] = round(t_lower, 2)
+    out["compile_s"] = round(t_compile, 2)
+    out["microbatches"] = microbatches
+    out["param_count"] = model.param_count()
+    out["active_param_count"] = model.active_param_count()
+    if verbose:
+        print(compiled.memory_analysis())
+        print({k: v for k, v in (compiled.cost_analysis() or {}).items()
+               if k in ("flops", "bytes accessed", "transcendentals")})
+        print(report.summary_line())
+    return out, compiled
+
+
+def run_cells(cells, *, meshes=("pod16x16", "pod2x16x16"), out_dir=None,
+              microbatches=1, stop_on_error=False):
+    results = []
+    for arch, shape_name in cells:
+        cfg = get_config(arch)
+        applicable = {s.name for s in shapes_for(cfg)}
+        for mesh_name in meshes:
+            multi_pod = mesh_name == "pod2x16x16"
+            key = f"{arch}__{shape_name}__{mesh_name}"
+            if shape_name not in applicable:
+                rec = {
+                    "arch": arch, "shape": shape_name, "mesh": mesh_name,
+                    "status": "skipped",
+                    "reason": "long_500k requires sub-quadratic sequence mixing "
+                              "(full-attention arch); see DESIGN.md",
+                }
+                results.append(rec)
+                print(f"SKIP  {key}: {rec['reason']}")
+                _write(out_dir, key, rec)
+                continue
+            try:
+                t0 = time.time()
+                rec, _ = lower_cell(
+                    arch, shape_name, multi_pod=multi_pod,
+                    microbatches=microbatches, verbose=False,
+                )
+                rec["status"] = "ok"
+                rec["wall_s"] = round(time.time() - t0, 2)
+                print(
+                    f"OK    {key}: compile={rec['compile_s']}s "
+                    f"dom={rec['dominant']} tc={rec['t_compute']:.2e} "
+                    f"tm={rec['t_memory']:.2e} tcoll={rec['t_collective']:.2e}"
+                )
+            except Exception as e:  # noqa: BLE001
+                rec = {
+                    "arch": arch, "shape": shape_name, "mesh": mesh_name,
+                    "status": "error", "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-4000:],
+                }
+                print(f"FAIL  {key}: {rec['error'][:300]}")
+                if stop_on_error:
+                    raise
+            results.append(rec)
+            _write(out_dir, key, rec)
+    return results
+
+
+def _write(out_dir, key, rec) -> None:
+    if not out_dir:
+        return
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, key + ".json"), "w") as f:
+        json.dump(rec, f, indent=2, default=str)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true",
+                    help="all (arch x shape) cells")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="use the 2x16x16 multi-pod mesh (single-cell mode)")
+    ap.add_argument("--meshes", default="pod16x16,pod2x16x16",
+                    help="comma list for --all mode")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--moments-dtype", default="float32",
+                    choices=["float32", "bfloat16"],
+                    help="optimizer moment storage (train cells)")
+    ap.add_argument("--quant", choices=["int8"], default=None,
+                    help="weight-only int8 TP-only layout (decode cells)")
+    ap.add_argument("--out", default="reports/dryrun")
+    ap.add_argument("--stop-on-error", action="store_true")
+    args = ap.parse_args()
+
+    if args.all:
+        cells = [
+            (arch, shape_name)
+            for arch in sorted(all_configs())
+            for shape_name in SHAPES
+        ]
+        results = run_cells(
+            cells,
+            meshes=tuple(args.meshes.split(",")),
+            out_dir=args.out,
+            microbatches=args.microbatches,
+            stop_on_error=args.stop_on_error,
+        )
+        ok = sum(r.get("status") == "ok" for r in results)
+        skip = sum(r.get("status") == "skipped" for r in results)
+        err = sum(r.get("status") == "error" for r in results)
+        print(f"\n== dry-run complete: {ok} ok, {skip} skipped, {err} failed ==")
+        if err:
+            raise SystemExit(1)
+        return
+
+    if not args.arch or not args.shape:
+        ap.error("--arch and --shape required (or --all)")
+    rec, _ = lower_cell(
+        args.arch, args.shape,
+        multi_pod=args.multi_pod,
+        microbatches=args.microbatches,
+        moments_dtype=args.moments_dtype,
+        quant=args.quant,
+    )
+    rec["status"] = "ok"
+    if args.microbatches != 1 or args.quant or args.moments_dtype != "float32":
+        # Non-default knobs: don't clobber the baseline artifact.
+        args.out = args.out.rstrip("/") + "_variants"
+    _write(args.out, f"{args.arch}__{args.shape}__"
+           f"{'pod2x16x16' if args.multi_pod else 'pod16x16'}", rec)
+
+
+if __name__ == "__main__":
+    main()

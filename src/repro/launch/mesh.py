@@ -1,0 +1,26 @@
+"""Production mesh builders.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — smoke tests must keep seeing 1 CPU device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_debug_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
+    """Small mesh over however many devices exist (CPU tests)."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

@@ -1,0 +1,88 @@
+"""Abstract input specs (ShapeDtypeStruct) for every (arch x shape) cell.
+
+The dry-run never allocates: inputs, parameters, optimizer state, and
+decode caches are all shape/dtype/sharding stand-ins.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import layers as L
+from repro.models.api import Model
+from repro.sharding.rules import ShardingRules
+
+
+def _sds(rules: ShardingRules | None, shape, dtype, *axes):
+    sharding = rules.sharding(tuple(axes), tuple(shape)) if rules else None
+    if sharding is None:
+        return jax.ShapeDtypeStruct(tuple(shape), dtype)
+    return jax.ShapeDtypeStruct(tuple(shape), dtype, sharding=sharding)
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                      rules: ShardingRules | None) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    labels = _sds(rules, (b, s), jnp.int32, "batch", None)
+    if cfg.is_encdec:
+        return dict(
+            enc_inputs=_sds(rules, (b, s, cfg.d_model), L.COMPUTE_DTYPE,
+                            "batch", None, None),
+            dec_ids=_sds(rules, (b, s), jnp.int32, "batch", None),
+            labels=labels,
+        )
+    if cfg.embed_inputs:
+        return dict(
+            inputs=_sds(rules, (b, s, cfg.d_model), L.COMPUTE_DTYPE,
+                        "batch", None, None),
+            labels=labels,
+        )
+    return dict(inputs=_sds(rules, (b, s), jnp.int32, "batch", None),
+                labels=labels)
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                        rules: ShardingRules | None) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.is_encdec:
+        return dict(
+            enc_inputs=_sds(rules, (b, s, cfg.d_model), L.COMPUTE_DTYPE,
+                            "batch", None, None),
+            dec_prompt=_sds(rules, (b, cfg.dec_prefill_len), jnp.int32,
+                            "batch", None),
+        )
+    if cfg.embed_inputs:
+        return dict(inputs=_sds(rules, (b, s, cfg.d_model), L.COMPUTE_DTYPE,
+                                "batch", None, None))
+    return dict(inputs=_sds(rules, (b, s), jnp.int32, "batch", None))
+
+
+def decode_input_specs(model: Model, shape: ShapeConfig,
+                       rules: ShardingRules | None) -> dict:
+    """One-token decode against a seq_len cache: {inputs, caches, position}."""
+    cfg = model.cfg
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.embed_inputs and not cfg.is_encdec:
+        inputs = _sds(rules, (b, 1, cfg.d_model), L.COMPUTE_DTYPE,
+                      "batch", None, None)
+    else:
+        inputs = _sds(rules, (b, 1), jnp.int32, "batch", None)
+    caches = model.abstract_decode_caches(b, s, rules)
+    return dict(
+        inputs=inputs,
+        caches=caches,
+        position=jax.ShapeDtypeStruct((), jnp.int32),
+    )
+
+
+def input_specs(model: Model, shape: ShapeConfig,
+                rules: ShardingRules | None) -> dict:
+    if shape.kind == "train":
+        return train_input_specs(model.cfg, shape, rules)
+    if shape.kind == "prefill":
+        return prefill_input_specs(model.cfg, shape, rules)
+    if shape.kind == "decode":
+        return decode_input_specs(model, shape, rules)
+    raise ValueError(shape.kind)

@@ -1,0 +1,22 @@
+from repro.models.api import Model, make_model
+from repro.models.spec import (
+    Ax,
+    ParamSpec,
+    abstract_like,
+    abstract_params,
+    init_params,
+    param_count,
+    stacked,
+)
+
+__all__ = [
+    "Model",
+    "make_model",
+    "Ax",
+    "ParamSpec",
+    "abstract_like",
+    "abstract_params",
+    "init_params",
+    "param_count",
+    "stacked",
+]

@@ -1,0 +1,122 @@
+"""Unified model facade: one object per architecture config exposing
+spec/init/loss/prefill/decode regardless of family (decoder-only LM,
+enc-dec, SSM, hybrid, VLM)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec as ED
+from repro.models import layers as L
+from repro.models import lm as LM
+from repro.models.spec import (
+    abstract_like,
+    abstract_params,
+    init_params,
+    param_count,
+)
+from repro.sharding.rules import ShardingRules
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # -- parameters -----------------------------------------------------------
+    def spec(self) -> dict:
+        if self.cfg.is_encdec:
+            return ED.encdec_spec(self.cfg)
+        return LM.lm_spec(self.cfg)
+
+    def init(self, key, param_dtype=jnp.float32) -> dict:
+        return init_params(self.spec(), key, param_dtype)
+
+    def abstract_params(self, rules: ShardingRules | None = None,
+                        param_dtype=jnp.float32):
+        return abstract_params(self.spec(), rules, param_dtype)
+
+    def param_count(self) -> int:
+        return param_count(self.spec())
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: top_k of num_experts)."""
+        total = self.param_count()
+        cfg = self.cfg
+        if not cfg.is_moe:
+            return total
+        from repro.models.moe import moe_spec
+        from repro.models.spec import param_count as pc
+
+        moe_layers = sum(1 for b in cfg.pattern if b.ffn == "moe") * cfg.periods
+        per_layer = pc(moe_spec(cfg))
+        router = cfg.d_model * cfg.moe_num_experts
+        expert_part = per_layer - router
+        inactive = moe_layers * expert_part * (
+            1 - cfg.moe_top_k / cfg.moe_num_experts
+        )
+        return int(total - inactive)
+
+    # -- training -------------------------------------------------------------
+    def loss(self, params, batch: dict, *, q_chunk: int = 512,
+             loss_chunk: int = 512, remat: bool = True) -> jax.Array:
+        cfg = self.cfg
+        if cfg.is_encdec:
+            return ED.encdec_loss(
+                params, cfg, batch["enc_inputs"], batch["dec_ids"],
+                batch["labels"], q_chunk=q_chunk, loss_chunk=loss_chunk,
+                remat=remat,
+            )
+        return LM.lm_loss(
+            params, cfg, batch["inputs"], batch["labels"],
+            q_chunk=q_chunk, loss_chunk=loss_chunk, remat=remat,
+        )
+
+    # -- serving ---------------------------------------------------------------
+    def prefill(self, params, batch: dict, *, q_chunk: int = 512):
+        cfg = self.cfg
+        if cfg.is_encdec:
+            return ED.encdec_prefill(
+                params, cfg, batch["enc_inputs"], batch["dec_prompt"],
+                q_chunk=q_chunk,
+            )
+        return LM.lm_prefill(params, cfg, batch["inputs"], q_chunk=q_chunk)
+
+    def decode_step(self, params, inputs, caches, position):
+        cfg = self.cfg
+        if cfg.is_encdec:
+            return ED.encdec_decode_step(params, cfg, inputs, caches, position)
+        return LM.lm_decode_step(params, cfg, inputs, caches, position)
+
+    # -- decode-state construction (concrete and abstract) ----------------------
+    def make_decode_caches(self, batch: int, seq_len: int, *, filled: bool):
+        """Concrete decode caches; `filled` marks seq_len-1 positions valid
+        (the assigned decode cells: one new token against a seq_len cache)."""
+        cfg = self.cfg
+        length = seq_len - 1 if filled else 0
+        if cfg.is_encdec:
+            return ED.make_decode_caches(
+                cfg, batch, seq_len, cross_len=seq_len, length=length
+            )
+        return LM.make_stack_cache(cfg, batch, seq_len, length=length)
+
+    def abstract_decode_caches(self, batch: int, seq_len: int,
+                               rules: ShardingRules | None):
+        shapes = jax.eval_shape(
+            lambda: self.make_decode_caches(batch, seq_len, filled=True)
+        )
+        axes = LM.stack_cache_axes(self.cfg)
+        return abstract_like(shapes, axes, rules)
+
+    def decode_inputs(self, batch: int):
+        """Concrete one-token decode inputs."""
+        if self.cfg.embed_inputs and not self.cfg.is_encdec:
+            return jnp.zeros((batch, 1, self.cfg.d_model), L.COMPUTE_DTYPE)
+        return jnp.zeros((batch, 1), jnp.int32)
+
+
+def make_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

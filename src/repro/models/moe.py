@@ -1,0 +1,135 @@
+"""Mixture-of-Experts with capacity-based top-k routing.
+
+Dispatch uses sort-free scatter/gather indexing (cumulative-position
+slotting) instead of GShard dispatch einsums: the (tokens, E, capacity)
+one-hot dispatch tensor those einsums materialize is O(T·E·C) — terabytes
+at our train shapes — while the slot-index formulation is O(T·E + E·C·D).
+
+Expert-dimension sharding resolves through the logical rules: when the
+expert count divides the tensor axis (dbrx 16, jamba 16) the expert dim
+shards over "model" and token transport lowers to all-to-all-style
+collectives; otherwise (granite's 40) the "expert" rule falls back and the
+per-expert d_ff shards instead ("tp") — both from the same annotation,
+because `ShardingRules.spec` assigns axes first-come-first-served per
+tensor with divisibility fallback.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _act
+from repro.models.spec import ParamSpec
+from repro.sharding.rules import constrain
+
+
+def moe_spec(cfg: ModelConfig) -> dict:
+    e, d, f = cfg.moe_padded_experts, cfg.d_model, cfg.d_ff
+    spec = {
+        "w_router": ParamSpec((d, e), ("fsdp", None), ("fan_in", d)),
+        "w_up": ParamSpec((e, d, f), ("expert", "fsdp", "tp"), ("fan_in", d)),
+        "w_down": ParamSpec((e, f, d), ("expert", "tp", "fsdp"), ("fan_in", f)),
+    }
+    if cfg.glu:
+        spec["w_gate"] = ParamSpec((e, d, f), ("expert", "fsdp", "tp"), ("fan_in", d))
+    return spec
+
+
+def capacity(cfg: ModelConfig, tokens_per_group: int) -> int:
+    cap = int(
+        math.ceil(tokens_per_group * cfg.moe_top_k * cfg.moe_capacity_factor
+                  / cfg.moe_num_experts)
+    )
+    # MXU-align large capacities; tiny groups (decode: one token per row)
+    # keep exact capacity — the align-to-8 floor inflated decode-cell
+    # expert FLOPs 8x (dbrx decode_32k useful 0.61 -> 0.04).
+    if cap >= 8:
+        return -(-cap // 8) * 8
+    return max(1, cap)
+
+
+def moe(p: dict, cfg: ModelConfig, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Returns (output (B,S,D), aux load-balancing loss scalar).
+
+    Routing is PER BATCH ROW (GShard-style groups = batch rows): every
+    routing tensor keeps the batch dimension, so with batch sharded over
+    the data axes all cumsums / gathers / scatters stay shard-local.
+    The original global-token formulation forced GSPMD to all-gather the
+    (tokens x E) cumsum AND the gathered (E*C, D) dispatch buffer on every
+    chip — measured 2.1e12 collective bytes/chip/layer and ~70x replicated
+    expert FLOPs on granite train_4k (see EXPERIMENTS.md §Perf)."""
+    b, s, d = x.shape
+    e, k = cfg.moe_padded_experts, cfg.moe_top_k
+    e_real = cfg.moe_num_experts
+    cap = capacity(cfg, s)
+    n_slots = e * cap
+
+    # --- routing (fp32, per-row) --------------------------------------------
+    logits = jnp.einsum(
+        "bsd,de->bse", x, p["w_router"].astype(x.dtype),
+        preferred_element_type=jnp.float32,
+    )
+    if e != e_real:
+        # Dummy padding experts (sharding alignment) never win routing.
+        pad_mask = jnp.arange(e) >= e_real
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)                   # (B, S, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)           # (B, S, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # --- slot assignment (per-row cumulative positions) -----------------------
+    flat_e = expert_idx.reshape(b, s * k)                     # (B, S*k)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)       # (B, S*k, E)
+    pos_in_e = (jnp.cumsum(onehot, axis=1) * onehot).sum(-1) - 1
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, flat_e * cap + pos_in_e, n_slots)  # overflow->trash
+    tok = jnp.broadcast_to(
+        jnp.arange(s * k, dtype=jnp.int32) // k, (b, s * k)
+    )
+
+    # Row-local scatters/gathers are expressed through vmap so the batch
+    # dimension reaches HLO as a true scatter/gather batch dim — explicit
+    # row-index arrays turn dim 0 into a scattered dimension and force
+    # GSPMD to replicate + all-reduce the full (B, S, D) combine (measured
+    # 4.1e11 B/chip on granite train_4k before this change).
+    gate_flat = (gate_vals.reshape(b, s * k) * keep).astype(jnp.float32)
+    slot_tok = jax.vmap(
+        lambda sl, tk: jnp.full((n_slots + 1,), s, jnp.int32).at[sl].set(tk)
+    )(slot, tok)
+    slot_gate = jax.vmap(
+        lambda sl, gv: jnp.zeros((n_slots + 1,), jnp.float32).at[sl].set(gv)
+    )(slot, gate_flat)
+
+    # --- expert computation (all gathers/scatters row-local) -------------------
+    xp = jnp.concatenate([x, jnp.zeros((b, 1, d), x.dtype)], axis=1)
+    xe = jax.vmap(lambda xr, st: jnp.take(xr, st, axis=0))(
+        xp, slot_tok[:, :n_slots]
+    ).reshape(b, e, cap, d)
+    xe = constrain(xe, "batch", "expert", None, None)
+    h = jnp.einsum("becd,edf->becf", xe, p["w_up"].astype(x.dtype))
+    if cfg.glu:
+        gate = jnp.einsum("becd,edf->becf", xe, p["w_gate"].astype(x.dtype))
+        h = _act(cfg, gate) * h
+    else:
+        h = _act(cfg, h)
+    h = constrain(h, "batch", "expert", None, "tp")
+    ye = jnp.einsum("becf,efd->becd", h, p["w_down"].astype(x.dtype))
+
+    # --- combine (row-local scatter-add) ---------------------------------------
+    yflat = ye.reshape(b, n_slots, d) * slot_gate[:, :n_slots, None].astype(ye.dtype)
+    y = jax.vmap(
+        lambda st, yf: jnp.zeros((s + 1, d), yf.dtype).at[st].add(yf)
+    )(slot_tok[:, :n_slots], yflat)[:, :s]
+    y = constrain(y, "batch", None, "residual")
+
+    # --- aux load-balancing loss (Switch-style) -------------------------------
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(expert_idx[..., 0], e, dtype=jnp.float32), axis=(0, 1)
+    )
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+    return y, aux

@@ -1,0 +1,136 @@
+"""Weight-only int8 quantization for serving (beyond-paper).
+
+Motivation (EXPERIMENTS.md §Perf cell 3): decode on the fixed
+(data, model) mesh forces a choice between ZeRO-style per-step weight
+all-gathers (FSDP x TP, fits HBM, collective-bound) and TP-only weights
+(no collectives, but bf16 doesn't fit: 104B/16 = 13 GB + KV 4.3 GB >
+16 GB v5e). Int8 weights with per-output-channel scales make TP-only fit
+(6.5 GB + 4.3 GB) and remove every weight collective from the decode step.
+
+`QTensor` duck-types the single method model code calls on parameters
+(`.astype`), so the entire zoo serves quantized without code changes;
+embeddings, norms, and 1-D parameters stay in bf16.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.spec import ParamSpec
+from repro.sharding.rules import ShardingRules
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class QTensor:
+    q: jax.Array        # int8, original shape
+    scale: jax.Array    # fp32, shape = original with axis 0 -> 1
+
+    def astype(self, dtype) -> jax.Array:
+        """Dequantize. On the TPU target the convert fuses into the
+        consuming matmul (int8 read, register-resident dequant)."""
+        return (self.q.astype(jnp.float32) * self.scale).astype(dtype)
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+    @property
+    def ndim(self):
+        return self.q.ndim
+
+    def tree_flatten(self):
+        return (self.q, self.scale), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def _scale_axes(ndim: int) -> tuple[int, ...]:
+    """Axes collapsed into the quantization group. 2-D weights: per-output-
+    channel (collapse the input dim). >=3-D weights (stacked layer params,
+    per-expert tensors): keep axis 0 (the scan/stack or expert dim — scan
+    requires every leaf to share the leading axis) and the last (output
+    channel); collapse the middle."""
+    if ndim <= 2:
+        return (0,)
+    return tuple(range(1, ndim - 1))
+
+
+def quantize_array(w: jax.Array) -> QTensor:
+    """Symmetric int8 with per-group scales (see _scale_axes)."""
+    wf = w.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(wf), axis=_scale_axes(wf.ndim), keepdims=True)
+    scale = jnp.where(amax == 0, 1.0, amax / 127.0)
+    q = jnp.clip(jnp.round(wf / scale), -127, 127).astype(jnp.int8)
+    return QTensor(q=q, scale=scale)
+
+
+_SKIP_TOKENS = ("embed", "norm", "scale", "bias", "dt_bias", "a_log",
+                "d_skip", "router")
+
+
+def _quantizable(path: str, ndim: int) -> bool:
+    if ndim < 2:
+        return False
+    return not any(t in path for t in _SKIP_TOKENS)
+
+
+def quantize_params(params) -> tuple[dict, int]:
+    """Quantize every eligible weight leaf; returns (tree, n_quantized)."""
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out, count = [], 0
+    for path, leaf in leaves:
+        key = jax.tree_util.keystr(path)
+        if _quantizable(key, getattr(leaf, "ndim", 0)):
+            out.append(quantize_array(leaf))
+            count += 1
+        else:
+            out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out), count
+
+
+def abstract_quantized_params(spec_tree, rules: ShardingRules | None):
+    """ShapeDtypeStruct stand-ins for a quantized parameter tree (dry-run)."""
+
+    def leaf(path, ps: ParamSpec):
+        key = jax.tree_util.keystr(path)
+        shard = rules.sharding(ps.axes, ps.shape) if rules else None
+
+        def sds(shape, dtype, sharding):
+            if sharding is not None:
+                return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+            return jax.ShapeDtypeStruct(shape, dtype)
+
+        if _quantizable(key, len(ps.shape)):
+            collapsed = _scale_axes(len(ps.shape))
+            s_shape = tuple(
+                1 if i in collapsed else d for i, d in enumerate(ps.shape)
+            )
+            s_axes = tuple(
+                None if i in collapsed else a for i, a in enumerate(ps.axes)
+            )
+            s_shard = rules.sharding(s_axes, s_shape) if rules else None
+            return QTensor(
+                q=sds(ps.shape, jnp.int8, shard),
+                scale=sds(s_shape, jnp.float32, s_shard),
+            )
+        return sds(ps.shape, jnp.bfloat16, shard)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    return jax.tree_util.tree_unflatten(
+        treedef, [leaf(p, s) for p, s in flat]
+    )
+
+
+def quantized_bytes(tree) -> int:
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        total += leaf.size * leaf.dtype.itemsize if hasattr(leaf, "size") else 0
+    return total

@@ -1,0 +1,151 @@
+"""Parameter specifications: one declarative tree drives real init, abstract
+(ShapeDtypeStruct) init for the no-allocation dry-run, and NamedSharding
+assignment — guaranteeing the three can never drift apart."""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding.rules import ShardingRules
+
+
+@dataclass(frozen=True)
+class Ax:
+    """Leaf marker carrying logical sharding axes for a non-parameter tensor
+    (caches, activations) in a structure-matched axes tree. A plain tuple
+    cannot serve: tuples are pytree nodes and would dissolve into leaves."""
+
+    axes: tuple
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]       # logical axis names
+    init: tuple | str = ("normal", 0.02)
+    dtype: object = jnp.float32
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes}")
+
+
+def stacked(n: int, tree):
+    """Add a leading stacking dim (scan-over-periods) to every spec."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n, *s.shape), (None, *s.axes), s.init, s.dtype),
+        tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def _materialize(spec: ParamSpec, key, dtype) -> jax.Array:
+    kind = spec.init if isinstance(spec.init, str) else spec.init[0]
+    if kind == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if kind == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if kind == "constant":
+        return jnp.full(spec.shape, spec.init[1], dtype)
+    if kind == "normal":
+        std = spec.init[1]
+        return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dtype)
+    if kind == "fan_in":
+        fan_in = spec.init[1]
+        std = 1.0 / math.sqrt(fan_in)
+        return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dtype)
+    if kind == "uniform":
+        lo, hi = spec.init[1], spec.init[2]
+        return (jax.random.uniform(key, spec.shape, jnp.float32, lo, hi)).astype(dtype)
+    if kind == "a_log":
+        # Mamba-2 A initialization: A = -exp(a_log), a_log = log(U[1,16]).
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dtype)
+    if kind == "dt_bias":
+        # dt bias such that softplus(dt_bias) ~ U[dt_min, dt_max].
+        dt = jnp.exp(
+            jax.random.uniform(key, spec.shape, jnp.float32)
+            * (math.log(0.1) - math.log(1e-3))
+            + math.log(1e-3)
+        )
+        return jnp.log(jnp.expm1(dt)).astype(dtype)
+    raise ValueError(f"unknown init {spec.init!r}")
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(spec_tree, key, param_dtype=jnp.float32):
+    """Materialize real parameters; per-leaf keys derive from tree paths so
+    adding a parameter never reshuffles the others' randomness."""
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(
+        spec_tree, is_leaf=_is_spec
+    )[0]
+
+    def leaf_key(path) -> jax.Array:
+        k = key
+        for entry in path:
+            name = getattr(entry, "key", None) or getattr(entry, "idx", None)
+            k = jax.random.fold_in(k, hash(str(name)) % (2**31))
+        return k
+
+    out = {jax.tree_util.keystr(p): _materialize(s, leaf_key(p), s.dtype if s.dtype != jnp.float32 else param_dtype)
+           for p, s in leaves_with_paths}
+    treedef = jax.tree_util.tree_structure(spec_tree, is_leaf=_is_spec)
+    ordered = [out[jax.tree_util.keystr(p)] for p, _ in leaves_with_paths]
+    return jax.tree_util.tree_unflatten(treedef, ordered)
+
+
+def abstract_params(spec_tree, rules: ShardingRules | None = None,
+                    param_dtype=jnp.float32):
+    """ShapeDtypeStruct tree with shardings — the dry-run's no-allocation
+    stand-in for real parameters."""
+
+    def leaf(s: ParamSpec):
+        dtype = s.dtype if s.dtype != jnp.float32 else param_dtype
+        sharding = rules.sharding(s.axes, s.shape) if rules else None
+        if sharding is not None:
+            return jax.ShapeDtypeStruct(s.shape, dtype, sharding=sharding)
+        return jax.ShapeDtypeStruct(s.shape, dtype)
+
+    return jax.tree.map(leaf, spec_tree, is_leaf=_is_spec)
+
+
+def param_shardings(spec_tree, rules: ShardingRules):
+    return jax.tree.map(
+        lambda s: rules.sharding(s.axes, s.shape), spec_tree, is_leaf=_is_spec
+    )
+
+
+def abstract_like(shape_tree, axes_tree, rules: ShardingRules | None):
+    """Attach shardings (from an Ax tree) to a ShapeDtypeStruct tree."""
+
+    def leaf(sds, ax):
+        sharding = None
+        if rules is not None and isinstance(ax, Ax):
+            sharding = rules.sharding(ax.axes, sds.shape)
+        if sharding is None:
+            return jax.ShapeDtypeStruct(sds.shape, sds.dtype)
+        return jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sharding)
+
+    return jax.tree.map(
+        leaf, shape_tree, axes_tree,
+        is_leaf=lambda x: isinstance(x, Ax) or x is None,
+    )
+
+
+def param_count(spec_tree) -> int:
+    return sum(
+        math.prod(s.shape)
+        for s in jax.tree.leaves(spec_tree, is_leaf=_is_spec)
+    )
+
+
+def param_bytes(spec_tree, bytes_per_param: int = 4) -> int:
+    return param_count(spec_tree) * bytes_per_param

@@ -1,0 +1,17 @@
+from repro.roofline.analysis import (
+    HW_V5E,
+    CollectiveStats,
+    RooflineReport,
+    analyze_compiled,
+    collective_bytes,
+    model_flops,
+)
+
+__all__ = [
+    "HW_V5E",
+    "CollectiveStats",
+    "RooflineReport",
+    "analyze_compiled",
+    "collective_bytes",
+    "model_flops",
+]

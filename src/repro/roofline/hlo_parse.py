@@ -1,0 +1,398 @@
+"""Mini HLO-text parser for roofline accounting.
+
+XLA's built-in `cost_analysis()` visits `while` bodies ONCE — every layer
+stack in this framework is a `lax.scan`, so its FLOPs/bytes undercount by
+the trip count. This parser rebuilds the call graph (while / fusion / call
+/ conditional), extracts loop trip counts from the condition computations
+(scan conditions compare the induction variable against a literal), and
+multiplies per-op costs accordingly:
+
+  * FLOPs: every `dot` = 2 * prod(output dims) * prod(lhs contracting dims)
+  * memory bytes: ~2x output bytes of every materializing instruction
+    (read+write), with dynamic-update-slice charged at update size
+    (in-place on the big operand), bookkeeping ops skipped
+  * collective bytes: output bytes per collective, all-reduce x2 (ring AR
+    moves ~2x payload), reduce-scatter charged at operand size
+
+Shapes in the post-SPMD module are per-partition, so all totals are
+per-chip.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "c64": 8, "c128": 16,
+}
+
+_COMP_START = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*"
+    r"(\([^()]*\)|[\w\[\],<>]+?\[[0-9,]*\](?:\{[^}]*\})?|\w+\[\])\s+"
+    r"([\w\-]+)\((.*)$"
+)
+_SHAPE = re.compile(r"^(\w+)\[([0-9,]*)\]")
+_CONST_INT = re.compile(r"=\s*[su]\d+\[\]\s+constant\((\d+)\)")
+
+SKIP_TRAFFIC = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "reshape", "copy-start",
+    "copy-done", "add-dependency", "custom-call", "rng-get-and-update-state",
+}
+
+COLLECTIVES = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "collective-permute-start",
+}
+
+
+@dataclass
+class Instr:
+    name: str
+    dtype: str | None       # None for tuple-shaped
+    shape: tuple[int, ...] | None
+    opcode: str
+    operands: list[str]
+    attrs: str
+
+    def out_bytes(self) -> float:
+        if self.dtype is None or self.shape is None:
+            return 0.0
+        bpe = _DTYPE_BYTES.get(self.dtype)
+        if bpe is None:
+            return 0.0
+        n = 1
+        for d in self.shape:
+            n *= d
+        return float(n * bpe)
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list[Instr] = field(default_factory=list)
+    by_name: dict = field(default_factory=dict)
+
+
+def _parse_shape(txt: str):
+    m = _SHAPE.match(txt)
+    if not m:
+        return None, None
+    dims = tuple(int(d) for d in m.group(2).split(",") if d)
+    return m.group(1), dims
+
+
+def _split_operands(arg_txt: str) -> list[str]:
+    """Operand names from the call-site text (up to the closing paren at
+    depth 0); operands look like `%name` possibly typed."""
+    out, depth = [], 0
+    for tok in re.finditer(r"[(){}]|%[\w.\-]+", arg_txt):
+        t = tok.group(0)
+        if t == "(":
+            depth += 1
+        elif t == ")":
+            if depth == 0:
+                break
+            depth -= 1
+        elif t in "{}":
+            continue
+        else:
+            out.append(t[1:])
+    return out
+
+
+def parse_module(text: str) -> tuple[dict[str, Computation], str | None]:
+    comps: dict[str, Computation] = {}
+    entry: str | None = None
+    current: Computation | None = None
+    for line in text.splitlines():
+        if current is None:
+            m = _COMP_START.match(line)
+            if m:
+                current = Computation(m.group(1))
+                if line.startswith("ENTRY"):
+                    entry = m.group(1)
+            continue
+        if line.startswith("}"):
+            comps[current.name] = current
+            current = None
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, shape_txt, opcode, rest = m.groups()
+        dtype, dims = _parse_shape(shape_txt)
+        instr = Instr(
+            name=name,
+            dtype=dtype,
+            shape=dims,
+            opcode=opcode,
+            operands=_split_operands(rest),
+            attrs=rest,
+        )
+        current.instrs.append(instr)
+        current.by_name[name] = instr
+    if current is not None:
+        comps[current.name] = current
+    return comps, entry
+
+
+def _attr_ref(attrs: str, key: str) -> str | None:
+    m = re.search(key + r"=%?([\w.\-]+)", attrs)
+    return m.group(1) if m else None
+
+
+def _attr_refs(attrs: str, key: str) -> list[str]:
+    m = re.search(key + r"=\{([^}]*)\}", attrs)
+    if not m:
+        return []
+    return [s.strip().lstrip("%") for s in m.group(1).split(",") if s.strip()]
+
+
+def trip_count(comps: dict[str, Computation], cond_name: str) -> int:
+    """Scan conditions compare the induction variable to a literal bound;
+    take the largest integer constant in the condition computation."""
+    comp = comps.get(cond_name)
+    if comp is None:
+        return 1
+    best = 1
+    for m in _CONST_INT.finditer("\n".join(_raw_lines(comp))):
+        best = max(best, int(m.group(1)))
+    return best
+
+
+def _raw_lines(comp: Computation) -> list[str]:
+    # Reconstruct enough text for the constant regex.
+    out = []
+    for i in comp.instrs:
+        if i.opcode == "constant":
+            out.append(f"%{i.name} = {i.dtype}[] constant({i.attrs}")
+    return out
+
+
+def dot_flops(instr: Instr, comp: Computation) -> float:
+    if instr.shape is None:
+        return 0.0
+    out_elems = 1
+    for d in instr.shape:
+        out_elems *= d
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.attrs)
+    contract = 1
+    if m and instr.operands:
+        lhs = comp.by_name.get(instr.operands[0])
+        if lhs is not None and lhs.shape is not None:
+            for idx in (int(i) for i in m.group(1).split(",") if i):
+                if idx < len(lhs.shape):
+                    contract *= lhs.shape[idx]
+    return 2.0 * out_elems * contract
+
+
+def _conv_flops(instr: Instr, comp: Computation) -> float:
+    # convolution: 2 * out_elems * (kernel spatial * in_channels) — rough.
+    if instr.shape is None or len(instr.operands) < 2:
+        return 0.0
+    rhs = comp.by_name.get(instr.operands[1])
+    if rhs is None or rhs.shape is None:
+        return 0.0
+    out_elems = 1
+    for d in instr.shape:
+        out_elems *= d
+    kernel = 1
+    for d in rhs.shape[:-1]:
+        kernel *= d
+    return 2.0 * out_elems * kernel
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    traffic_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by_kind: dict = field(default_factory=dict)
+    collective_count: dict = field(default_factory=dict)
+    while_trip_counts: list = field(default_factory=list)
+    # Profiling: (weighted_bytes_or_flops, mult, opcode, shape, metadata_hint)
+    top_traffic: list = field(default_factory=list)
+    top_collectives: list = field(default_factory=list)
+    top_flops: list = field(default_factory=list)
+
+
+_META_RE = re.compile(r'op_name="([^"]+)"')
+
+
+def _hint(attrs: str) -> str:
+    m = _META_RE.search(attrs)
+    return m.group(1)[-120:] if m else ""
+
+
+def _comp_edges(comps: dict[str, Computation], cost: "HloCost"):
+    """Static call-graph edges: comp -> [(callee, weight)]. While bodies get
+    weight = trip count; everything else weight 1. Also returns the set of
+    fusion-called computations (their internals live in registers — no HBM
+    traffic)."""
+    edges: dict[str, list[tuple[str, float]]] = {}
+    fusion_comps: set[str] = set()
+    for cname, comp in comps.items():
+        lst: list[tuple[str, float]] = []
+        for instr in comp.instrs:
+            if instr.opcode == "while":
+                body = _attr_ref(instr.attrs, "body")
+                cond = _attr_ref(instr.attrs, "condition")
+                trips = trip_count(comps, cond) if cond else 1
+                cost.while_trip_counts.append(trips)
+                if body:
+                    lst.append((body, float(trips)))
+                if cond:
+                    lst.append((cond, float(trips + 1)))
+            elif instr.opcode == "fusion":
+                callee = _attr_ref(instr.attrs, "calls")
+                if callee:
+                    lst.append((callee, 1.0))
+                    fusion_comps.add(callee)
+            elif instr.opcode in ("call", "async-start"):
+                callee = _attr_ref(instr.attrs, "to_apply")
+                if callee:
+                    lst.append((callee, 1.0))
+            elif instr.opcode == "conditional":
+                for ref in _attr_refs(instr.attrs, "branch_computations"):
+                    lst.append((ref, 1.0))
+                for key in ("true_computation", "false_computation"):
+                    ref = _attr_ref(instr.attrs, key)
+                    if ref:
+                        lst.append((ref, 1.0))
+        edges[cname] = lst
+    return edges, fusion_comps
+
+
+def analyze_hlo(text: str) -> HloCost:
+    comps, entry = parse_module(text)
+    cost = HloCost()
+    if entry is None:
+        return cost
+    edges, fusion_comps = _comp_edges(comps, cost)
+
+    # Topological multipliers (HLO call graphs are DAGs).
+    post: list[str] = []
+    visited: set = set()
+
+    def dfs(c: str) -> None:
+        if c in visited:
+            return
+        visited.add(c)
+        for callee, _ in edges.get(c, []):
+            dfs(callee)
+        post.append(c)
+
+    dfs(entry)
+    mult: dict[str, float] = {entry: 1.0}
+    for cname in reversed(post):  # callers before callees
+        m = mult.get(cname, 0.0)
+        for callee, w in edges.get(cname, []):
+            mult[callee] = mult.get(callee, 0.0) + m * w
+
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        for instr in comp.instrs:
+            if instr.opcode == "dot":
+                f = m * dot_flops(instr, comp)
+                cost.flops += f
+                cost.top_flops.append(
+                    (f, m, "dot", instr.shape, _hint(instr.attrs))
+                )
+            elif instr.opcode == "convolution":
+                cost.flops += m * _conv_flops(instr, comp)
+            if instr.opcode in COLLECTIVES:
+                kind = instr.opcode.replace("-start", "")
+                nbytes = instr.out_bytes()
+                if kind == "reduce-scatter" and instr.operands:
+                    op = comp.by_name.get(instr.operands[0])
+                    if op is not None:
+                        nbytes = op.out_bytes()
+                if kind == "all-reduce":
+                    nbytes *= 2
+                    # XLA-CPU float normalization promotes bf16 all-reduces
+                    # to f32 ("..._promoted" reduction computations). The
+                    # TPU target runs them natively in bf16 — count the
+                    # pre-promotion payload.
+                    if "promoted" in instr.attrs:
+                        nbytes *= 0.5
+                cost.collective_bytes += m * nbytes
+                cost.collective_by_kind[kind] = (
+                    cost.collective_by_kind.get(kind, 0.0) + m * nbytes
+                )
+                cost.collective_count[kind] = (
+                    cost.collective_count.get(kind, 0) + m
+                )
+                cost.top_collectives.append(
+                    (m * nbytes, m, kind, instr.shape, _hint(instr.attrs))
+                )
+            # Reads of tensors produced outside the dataflow we cost via
+            # outputs (parameters, loop-carried tuple elements): weights and
+            # KV caches — the dominant decode-step traffic. Slicing ops read
+            # only their output (already counted); in-place update fusions
+            # alias their big operand.
+            if instr.opcode in ("dot", "convolution", "fusion"):
+                root = None
+                if instr.opcode == "fusion":
+                    callee = comps.get(_attr_ref(instr.attrs, "calls") or "")
+                    root = callee.instrs[-1] if callee and callee.instrs else None
+                if not (root is not None and root.opcode == "dynamic-update-slice"):
+                    for opname in instr.operands:
+                        producer = comp.by_name.get(opname)
+                        if producer is not None and producer.opcode in (
+                            "parameter", "get-tuple-element",
+                        ):
+                            rb = m * producer.out_bytes()
+                            if rb > 0:
+                                cost.traffic_bytes += rb
+                                cost.top_traffic.append(
+                                    (rb, m, f"read<-{producer.opcode}",
+                                     producer.shape, _hint(instr.attrs))
+                                )
+            if (
+                instr.opcode in SKIP_TRAFFIC
+                or instr.opcode in COLLECTIVES
+                or cname in fusion_comps  # fused internals stay in registers
+            ):
+                continue
+            if instr.opcode == "dynamic-update-slice" and len(instr.operands) >= 2:
+                upd = comp.by_name.get(instr.operands[1])
+                if upd is not None:
+                    b = m * 2.0 * upd.out_bytes()
+                    cost.traffic_bytes += b
+                    cost.top_traffic.append(
+                        (b, m, "dyn-update-slice", upd.shape, _hint(instr.attrs))
+                    )
+                continue
+            if instr.opcode == "fusion":
+                # In-place update fusions (root = dynamic-update-slice) write
+                # the update, not the whole aliased buffer.
+                callee = comps.get(_attr_ref(instr.attrs, "calls") or "")
+                root = callee.instrs[-1] if callee and callee.instrs else None
+                if root is not None and root.opcode == "dynamic-update-slice":
+                    upd = callee.by_name.get(root.operands[1]) if len(root.operands) > 1 else None
+                    if upd is not None:
+                        b = m * 2.0 * upd.out_bytes()
+                        cost.traffic_bytes += b
+                        cost.top_traffic.append(
+                            (b, m, "dus-fusion", upd.shape, _hint(instr.attrs))
+                        )
+                        continue
+            b = m * 2.0 * instr.out_bytes()
+            cost.traffic_bytes += b
+            cost.top_traffic.append(
+                (b, m, instr.opcode, instr.shape, _hint(instr.attrs))
+            )
+    for lst in (cost.top_traffic, cost.top_collectives, cost.top_flops):
+        lst.sort(key=lambda t: -t[0])
+        del lst[40:]
+    return cost

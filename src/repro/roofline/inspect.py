@@ -1,0 +1,53 @@
+import os
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Dry-run profiler: lower one cell and print the top contributors to each
+roofline term (the 'profile' that drives §Perf hypothesis loops).
+
+  PYTHONPATH=src python -m repro.roofline.inspect --arch granite-moe-3b-a800m \
+      --shape train_4k [--multi-pod] [--top 15]
+"""
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--top", type=int, default=12)
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import lower_cell
+    from repro.roofline.hlo_parse import analyze_hlo
+
+    rec, compiled = lower_cell(
+        args.arch, args.shape,
+        multi_pod=args.multi_pod,
+        microbatches=args.microbatches,
+        verbose=False,
+    )
+    cost = analyze_hlo(compiled.as_text())
+    print(f"== {args.arch} x {args.shape} "
+          f"({'pod2x16x16' if args.multi_pod else 'pod16x16'}) ==")
+    print(f"terms: tc={rec['t_compute']:.3e}s tm={rec['t_memory']:.3e}s "
+          f"tcoll={rec['t_collective']:.3e}s dom={rec['dominant']} "
+          f"useful={rec['useful_flops_ratio']:.3f}")
+    print(f"memory_analysis: {rec['memory_stats']}")
+
+    def show(title, rows, unit):
+        print(f"\n-- top {title} --")
+        for val, mult, op, shape, hint in rows[: args.top]:
+            print(f"  {val:12.3e} {unit}  x{mult:<6.0f} {op:<18s} "
+                  f"{str(shape):<28s} {hint}")
+
+    show("collectives (per-chip bytes)", cost.top_collectives, "B")
+    show("traffic (per-chip bytes)", cost.top_traffic, "B")
+    show("flops (per-chip)", cost.top_flops, "F")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.serve.engine import Request, RequestResult, ServeEngine, ServeStats
+
+__all__ = ["Request", "RequestResult", "ServeEngine", "ServeStats"]

@@ -1,0 +1,134 @@
+"""Logical-axis sharding rules with divisibility-aware fallback.
+
+Model code annotates tensors with *logical* axis names ("batch", "tp",
+"fsdp", ...). Rules map each name to an ordered list of candidate mesh-axis
+tuples; resolution picks the first candidate whose axes all exist in the
+mesh and whose total size divides the tensor dimension, else leaves the
+dimension unsharded. This is what lets one model implementation serve
+every assigned architecture: smollm's 9 heads or whisper's 20 heads simply
+fall back to replicated attention while d_ff / vocab / experts still shard.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import math
+import threading
+from dataclasses import dataclass, field
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# Candidate mesh-axis assignments per logical axis, in priority order.
+# ("pod", "data") composes the multi-pod and single-pod meshes: resolution
+# drops axes absent from the mesh, so the same table serves both.
+TRAIN_RULES: dict[str, tuple[tuple[str, ...], ...]] = {
+    "batch": (("pod", "data"),),        # activation batch
+    "fsdp": (("pod", "data"),),         # parameter FSDP dim
+    "tp": (("model",),),                # heads / d_ff / vocab columns
+    "expert": (("model",),),            # MoE expert dim
+    "residual": (("model",),),          # activation d_model (2D sharding)
+    # Attention q-head dim ("heads"): preferred internal sharding when the
+    # head count divides the tensor axis — zero intra-attention collectives
+    # (KV expands to q-heads via a shard-local gather). Falls back to
+    # KV-sequence sharding ("kv_seq") otherwise (9/20/24-head archs), which
+    # keeps score tensors distributed at the price of per-chunk partial-sum
+    # all-reduces. Both decisions are divisibility-resolved per arch.
+    "heads": (("model",),),
+    "kv_seq": (("model",),),
+    "seq": ((),),                       # sequence: unsharded by default
+}
+
+# Decode: batch may be tiny (long_500k has batch 1) and the KV cache is the
+# dominant tensor -> shard its sequence dim over the tensor axis
+# (flash-decoding-style partial softmax; GSPMD inserts the LSE collectives).
+DECODE_RULES: dict[str, tuple[tuple[str, ...], ...]] = {
+    **TRAIN_RULES,
+    "kv_seq": (("model",),),
+}
+
+# TP-only serving weights (int8 weight-only quantization, §Perf cell 3):
+# the FSDP dim replicates, eliminating per-step weight all-gathers; int8
+# makes the replicated-within-data layout fit HBM.
+DECODE_TP_RULES: dict[str, tuple[tuple[str, ...], ...]] = {
+    **DECODE_RULES,
+    "fsdp": ((),),
+}
+
+
+@dataclass
+class ShardingRules:
+    mesh: Mesh | None = None
+    table: dict[str, tuple[tuple[str, ...], ...]] = field(
+        default_factory=lambda: dict(TRAIN_RULES)
+    )
+
+    def _axis_size(self, name: str) -> int | None:
+        if self.mesh is None:
+            return None
+        return dict(zip(self.mesh.axis_names, self.mesh.devices.shape)).get(name)
+
+    def resolve_dim(self, logical: str | None, dim: int) -> tuple[str, ...] | None:
+        """Mesh axes for one tensor dimension, or None (replicated)."""
+        if logical is None or self.mesh is None:
+            return None
+        for candidate in self.table.get(logical, ()):
+            axes = tuple(a for a in candidate if self._axis_size(a) is not None)
+            if not axes:
+                continue
+            total = math.prod(self._axis_size(a) for a in axes)  # type: ignore
+            if total > 0 and dim % total == 0:
+                return axes
+        return None
+
+    def spec(self, logical_axes: tuple, shape: tuple) -> P:
+        if len(logical_axes) != len(shape):
+            raise ValueError(f"axes {logical_axes} vs shape {shape}")
+        parts = []
+        used: set[str] = set()
+        for logical, dim in zip(logical_axes, shape):
+            axes = self.resolve_dim(logical, dim)
+            if axes is None or any(a in used for a in axes):
+                parts.append(None)
+            else:
+                used.update(axes)
+                parts.append(axes if len(axes) > 1 else axes[0])
+        return P(*parts)
+
+    def sharding(self, logical_axes: tuple, shape: tuple) -> NamedSharding | None:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(logical_axes, shape))
+
+
+# --------------------------------------------------------------------------- #
+# Ambient rules (so layer code can constrain without threading a mesh arg)
+# --------------------------------------------------------------------------- #
+_tls = threading.local()
+
+
+def current_rules() -> ShardingRules | None:
+    return getattr(_tls, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: ShardingRules | None):
+    prev = getattr(_tls, "rules", None)
+    _tls.rules = rules
+    try:
+        yield rules
+    finally:
+        _tls.rules = prev
+
+
+def constrain(x: jax.Array, *logical_axes) -> jax.Array:
+    """Apply `with_sharding_constraint` per the ambient rules; no-op outside
+    a mesh context (CPU smoke tests) or under unknown logical names."""
+    rules = current_rules()
+    if rules is None or rules.mesh is None:
+        return x
+    spec = rules.spec(tuple(logical_axes), x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec)
+    )

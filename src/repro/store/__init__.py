@@ -1,0 +1,19 @@
+from repro.store.base import ObjectStore, ObjectMeta, StoreError, TransientStoreError
+from repro.store.link import LinkModel
+from repro.store.sim_s3 import SimS3Store
+from repro.store.local import DirStore, MemStore
+from repro.store.tiers import CacheTier, MemTier, DirTier
+
+__all__ = [
+    "ObjectStore",
+    "ObjectMeta",
+    "StoreError",
+    "TransientStoreError",
+    "LinkModel",
+    "SimS3Store",
+    "DirStore",
+    "MemStore",
+    "CacheTier",
+    "MemTier",
+    "DirTier",
+]

@@ -1,0 +1,61 @@
+"""Object-store protocol.
+
+All remote data in the framework (training shards, `.trk` streamline files,
+checkpoints) flows through this interface so that the simulated S3 store,
+the real local-directory store, and any future real S3 binding are
+interchangeable.
+"""
+
+from __future__ import annotations
+
+import abc
+from dataclasses import dataclass
+
+
+class StoreError(RuntimeError):
+    """Permanent store failure (bad key, malformed range)."""
+
+
+class TransientStoreError(StoreError):
+    """Retryable failure (simulated network fault, throttling)."""
+
+
+@dataclass(frozen=True)
+class ObjectMeta:
+    key: str
+    size: int
+
+
+class ObjectStore(abc.ABC):
+    """Byte-range addressable object store."""
+
+    @abc.abstractmethod
+    def list_objects(self, prefix: str = "") -> list[ObjectMeta]:
+        ...
+
+    @abc.abstractmethod
+    def size(self, key: str) -> int:
+        ...
+
+    @abc.abstractmethod
+    def get_range(self, key: str, start: int, end: int) -> bytes:
+        """Fetch bytes [start, end) of `key`. One call == one request
+        (pays one latency)."""
+
+    @abc.abstractmethod
+    def put(self, key: str, data: bytes) -> None:
+        ...
+
+    @abc.abstractmethod
+    def delete(self, key: str) -> None:
+        ...
+
+    def get(self, key: str) -> bytes:
+        return self.get_range(key, 0, self.size(key))
+
+    def exists(self, key: str) -> bool:
+        try:
+            self.size(key)
+            return True
+        except StoreError:
+            return False

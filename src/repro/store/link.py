@@ -1,0 +1,96 @@
+"""Link model: injects latency + shared-bandwidth cost into byte transfers.
+
+Models the paper's Table I measurements. Latency is paid per request and
+overlaps freely across threads (S3 is highly concurrent); bandwidth is a
+shared serial resource (the instance NIC / DIMM bus), modeled as a
+reservation queue: each transfer reserves the link for `bytes / bandwidth`
+seconds starting no earlier than the previous reservation ends. This
+reproduces the contention behaviour the paper discusses for parallel
+workloads (§III-C).
+"""
+
+from __future__ import annotations
+
+import random
+import threading
+import time
+from dataclasses import dataclass, field
+
+from repro.store.base import TransientStoreError
+
+
+@dataclass
+class LinkModel:
+    latency_s: float = 0.0
+    bandwidth_Bps: float = float("inf")
+    # Multiplicative jitter applied to latency (lognormal-ish, seeded).
+    jitter: float = 0.0
+    seed: int = 0
+    # Failure injection: probability per request, and an explicit
+    # fail-next counter (used by fault-tolerance tests).
+    fail_prob: float = 0.0
+    name: str = "link"
+
+    _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
+    _free_at: float = field(default=0.0, repr=False)
+    _rng: random.Random = field(default=None, repr=False)  # type: ignore
+    _fail_next: int = field(default=0, repr=False)
+    # Telemetry (read by the online autotuner and benchmarks).
+    bytes_moved: int = field(default=0, repr=False)
+    requests: int = field(default=0, repr=False)
+    busy_s: float = field(default=0.0, repr=False)
+
+    def __post_init__(self) -> None:
+        self._rng = random.Random(self.seed)
+
+    # -- failure injection ------------------------------------------------
+    def fail_next(self, n: int = 1) -> None:
+        with self._lock:
+            self._fail_next += n
+
+    def _maybe_fail(self) -> None:
+        with self._lock:
+            if self._fail_next > 0:
+                self._fail_next -= 1
+                raise TransientStoreError(f"{self.name}: injected failure")
+            if self.fail_prob > 0.0 and self._rng.random() < self.fail_prob:
+                raise TransientStoreError(f"{self.name}: injected random failure")
+
+    # -- transfer ---------------------------------------------------------
+    def transfer(self, nbytes: int) -> None:
+        """Block for the simulated duration of moving `nbytes`."""
+        self._maybe_fail()
+        lat = self.latency_s
+        if self.jitter > 0.0:
+            with self._lock:
+                lat *= max(0.0, 1.0 + self._rng.gauss(0.0, self.jitter))
+        # Latency overlaps across threads: plain sleep.
+        if lat > 0.0:
+            time.sleep(lat)
+        # Bandwidth is a shared serial resource: reserve a slot.
+        if self.bandwidth_Bps != float("inf") and nbytes > 0:
+            dur = nbytes / self.bandwidth_Bps
+            with self._lock:
+                now = time.perf_counter()
+                start = max(now, self._free_at)
+                self._free_at = start + dur
+                finish = self._free_at
+                self.busy_s += dur
+            delay = finish - time.perf_counter()
+            if delay > 0.0:
+                time.sleep(delay)
+        with self._lock:
+            self.bytes_moved += nbytes
+            self.requests += 1
+
+    # -- observed constants (for the cost-model autotuner) -----------------
+    def observed_bandwidth(self) -> float:
+        with self._lock:
+            if self.busy_s == 0.0:
+                return self.bandwidth_Bps
+            return self.bytes_moved / self.busy_s
+
+
+# Paper Table I constants (t2.xlarge, us-west-2), in SI bytes/sec.
+PAPER_S3 = dict(latency_s=0.1, bandwidth_Bps=91e6)
+PAPER_MEM = dict(latency_s=1.6e-6, bandwidth_Bps=2221e6)

@@ -1,0 +1,101 @@
+"""Concrete object stores: in-memory and real-directory backed."""
+
+from __future__ import annotations
+
+import os
+import threading
+
+from repro.store.base import ObjectMeta, ObjectStore, StoreError
+
+
+class MemStore(ObjectStore):
+    """Dict-backed store; the substrate beneath SimS3Store."""
+
+    def __init__(self) -> None:
+        self._objects: dict[str, bytes] = {}
+        self._lock = threading.Lock()
+
+    def list_objects(self, prefix: str = "") -> list[ObjectMeta]:
+        with self._lock:
+            return [
+                ObjectMeta(k, len(v))
+                for k, v in sorted(self._objects.items())
+                if k.startswith(prefix)
+            ]
+
+    def size(self, key: str) -> int:
+        with self._lock:
+            try:
+                return len(self._objects[key])
+            except KeyError:
+                raise StoreError(f"no such object: {key}") from None
+
+    def get_range(self, key: str, start: int, end: int) -> bytes:
+        with self._lock:
+            try:
+                data = self._objects[key]
+            except KeyError:
+                raise StoreError(f"no such object: {key}") from None
+        if start < 0 or end < start:
+            raise StoreError(f"bad range [{start}, {end})")
+        return data[start:end]
+
+    def put(self, key: str, data: bytes) -> None:
+        with self._lock:
+            self._objects[key] = bytes(data)
+
+    def delete(self, key: str) -> None:
+        with self._lock:
+            self._objects.pop(key, None)
+
+
+class DirStore(ObjectStore):
+    """Real-filesystem store (checkpoints, local datasets)."""
+
+    def __init__(self, root: str) -> None:
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    def _path(self, key: str) -> str:
+        path = os.path.normpath(os.path.join(self.root, key))
+        if not path.startswith(os.path.normpath(self.root)):
+            raise StoreError(f"key escapes store root: {key}")
+        return path
+
+    def list_objects(self, prefix: str = "") -> list[ObjectMeta]:
+        metas = []
+        for dirpath, _, filenames in os.walk(self.root):
+            for fn in filenames:
+                full = os.path.join(dirpath, fn)
+                key = os.path.relpath(full, self.root)
+                if key.startswith(prefix):
+                    metas.append(ObjectMeta(key, os.path.getsize(full)))
+        return sorted(metas, key=lambda m: m.key)
+
+    def size(self, key: str) -> int:
+        try:
+            return os.path.getsize(self._path(key))
+        except OSError:
+            raise StoreError(f"no such object: {key}") from None
+
+    def get_range(self, key: str, start: int, end: int) -> bytes:
+        try:
+            with open(self._path(key), "rb") as f:
+                f.seek(start)
+                return f.read(end - start)
+        except OSError:
+            raise StoreError(f"no such object: {key}") from None
+
+    def put(self, key: str, data: bytes) -> None:
+        path = self._path(key)
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(data)
+        os.replace(tmp, path)  # atomic publish
+
+    def delete(self, key: str) -> None:
+        try:
+            os.remove(self._path(key))
+        except OSError:
+            pass

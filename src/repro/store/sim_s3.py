@@ -1,0 +1,47 @@
+"""Simulated S3: a MemStore (or any backing store) behind a LinkModel.
+
+Reproduces the cost structure of the paper's measurements: every request
+pays `latency_s`, payload pays `bytes / bandwidth_Bps` on a shared link.
+Failure injection on the link drives the fault-tolerance tests.
+"""
+
+from __future__ import annotations
+
+from repro.store.base import ObjectMeta, ObjectStore
+from repro.store.link import LinkModel
+from repro.store.local import MemStore
+
+
+class SimS3Store(ObjectStore):
+    def __init__(
+        self,
+        link: LinkModel | None = None,
+        backing: ObjectStore | None = None,
+        put_link: LinkModel | None = None,
+    ) -> None:
+        self.link = link if link is not None else LinkModel(name="s3")
+        self.put_link = put_link if put_link is not None else self.link
+        self.backing = backing if backing is not None else MemStore()
+
+    # Metadata ops are modeled as one-latency requests with tiny payloads.
+    def list_objects(self, prefix: str = "") -> list[ObjectMeta]:
+        self.link.transfer(0)
+        return self.backing.list_objects(prefix)
+
+    def size(self, key: str) -> int:
+        # HEAD request: latency only.
+        self.link.transfer(0)
+        return self.backing.size(key)
+
+    def get_range(self, key: str, start: int, end: int) -> bytes:
+        data = self.backing.get_range(key, start, end)
+        self.link.transfer(len(data))
+        return data
+
+    def put(self, key: str, data: bytes) -> None:
+        self.put_link.transfer(len(data))
+        self.backing.put(key, data)
+
+    def delete(self, key: str) -> None:
+        self.link.transfer(0)
+        self.backing.delete(key)

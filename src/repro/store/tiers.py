@@ -1,0 +1,208 @@
+"""Bounded local cache tiers for Rolling Prefetch.
+
+The paper writes prefetched blocks to a priority-ordered list of local
+storage devices (tmpfs first, then disk), each with a user-set byte budget.
+`used` accounting intentionally mirrors Algorithm 1: the prefetch thread
+increments `used` optimistically, and reconciles with reality via
+`verify_used()` when it believes a tier is full (evictions may have freed
+space since the last check).
+"""
+
+from __future__ import annotations
+
+import abc
+import os
+import threading
+from dataclasses import dataclass
+
+from repro.store.base import StoreError
+from repro.store.link import LinkModel
+
+
+class CacheTier(abc.ABC):
+    """A bounded block cache with simulated (or real) transfer costs."""
+
+    def __init__(
+        self,
+        capacity: int,
+        read_link: LinkModel | None = None,
+        write_link: LinkModel | None = None,
+        name: str = "tier",
+    ) -> None:
+        self.capacity = capacity
+        self.read_link = read_link if read_link is not None else LinkModel(name=f"{name}.r")
+        self.write_link = write_link if write_link is not None else LinkModel(name=f"{name}.w")
+        self.name = name
+        self._used = 0       # optimistic accounting: committed + in-flight
+        self._inflight = 0   # reserved but not yet written
+        self._lock = threading.Lock()
+
+    # -- Algorithm-1 accounting -------------------------------------------
+    @property
+    def used(self) -> int:
+        with self._lock:
+            return self._used
+
+    def available(self) -> int:
+        with self._lock:
+            return self.capacity - self._used
+
+    def reserve(self, nbytes: int) -> bool:
+        """Optimistically claim space (prefetch thread)."""
+        with self._lock:
+            if self.capacity - self._used < nbytes:
+                return False
+            self._used += nbytes
+            self._inflight += nbytes
+            return True
+
+    def commit(self, nbytes: int) -> None:
+        """The reserved bytes are now resident (write completed)."""
+        with self._lock:
+            self._inflight = max(0, self._inflight - nbytes)
+
+    def cancel(self, nbytes: int) -> None:
+        """A reservation was abandoned (fetch failed permanently)."""
+        with self._lock:
+            self._inflight = max(0, self._inflight - nbytes)
+            self._used = max(0, self._used - nbytes)
+
+    def release(self, nbytes: int) -> None:
+        """Committed bytes were evicted."""
+        with self._lock:
+            self._used = max(0, self._used - nbytes)
+
+    def verify_used(self) -> int:
+        """Reconcile `used` with the bytes actually resident plus in-flight
+        reservations (evictions may have freed space since the last check).
+        Returns available space after reconciliation. Mirrors the paper's
+        `verify_used()` in Algorithm 1."""
+        actual = self._resident_bytes()
+        with self._lock:
+            self._used = min(self._used, max(actual, 0) + self._inflight)
+            return self.capacity - self._used
+
+    # -- storage ops (charged to the tier's links) --------------------------
+    def write(self, block_id: str, data: bytes) -> None:
+        self.write_link.transfer(len(data))
+        self._write(block_id, data)
+
+    def read(self, block_id: str, start: int = 0, end: int | None = None) -> bytes:
+        data = self._read(block_id, start, end)
+        self.read_link.transfer(len(data))
+        return data
+
+    def delete(self, block_id: str) -> int:
+        """Remove the block; returns bytes freed. Does NOT adjust `used`
+        (that is the prefetcher's job via verify_used / explicit release),
+        matching the paper's decoupled eviction."""
+        return self._delete(block_id)
+
+    def contains(self, block_id: str) -> bool:
+        return self._contains(block_id)
+
+    # -- backend hooks ------------------------------------------------------
+    @abc.abstractmethod
+    def _write(self, block_id: str, data: bytes) -> None: ...
+
+    @abc.abstractmethod
+    def _read(self, block_id: str, start: int, end: int | None) -> bytes: ...
+
+    @abc.abstractmethod
+    def _delete(self, block_id: str) -> int: ...
+
+    @abc.abstractmethod
+    def _contains(self, block_id: str) -> bool: ...
+
+    @abc.abstractmethod
+    def _resident_bytes(self) -> int: ...
+
+
+class MemTier(CacheTier):
+    """Dict-backed tier modeling tmpfs (costs from the tier's LinkModel)."""
+
+    def __init__(self, capacity: int, **kw) -> None:
+        super().__init__(capacity, **kw)
+        self._blocks: dict[str, bytes] = {}
+        self._blk_lock = threading.Lock()
+
+    def _write(self, block_id: str, data: bytes) -> None:
+        with self._blk_lock:
+            self._blocks[block_id] = bytes(data)
+
+    def _read(self, block_id: str, start: int, end: int | None) -> bytes:
+        with self._blk_lock:
+            try:
+                data = self._blocks[block_id]
+            except KeyError:
+                raise StoreError(f"{self.name}: block missing: {block_id}") from None
+        return data[start:end if end is not None else len(data)]
+
+    def _delete(self, block_id: str) -> int:
+        with self._blk_lock:
+            data = self._blocks.pop(block_id, None)
+            return len(data) if data is not None else 0
+
+    def _contains(self, block_id: str) -> bool:
+        with self._blk_lock:
+            return block_id in self._blocks
+
+    def _resident_bytes(self) -> int:
+        with self._blk_lock:
+            return sum(len(v) for v in self._blocks.values())
+
+
+class DirTier(CacheTier):
+    """Real-directory tier (an actual tmpfs mount or scratch disk)."""
+
+    def __init__(self, capacity: int, root: str, **kw) -> None:
+        super().__init__(capacity, **kw)
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    def _path(self, block_id: str) -> str:
+        return os.path.join(self.root, block_id.replace("/", "__"))
+
+    def _write(self, block_id: str, data: bytes) -> None:
+        tmp = self._path(block_id) + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(data)
+        os.replace(tmp, self._path(block_id))
+
+    def _read(self, block_id: str, start: int, end: int | None) -> bytes:
+        try:
+            with open(self._path(block_id), "rb") as f:
+                f.seek(start)
+                return f.read(None if end is None else end - start)
+        except OSError:
+            raise StoreError(f"{self.name}: block missing: {block_id}") from None
+
+    def _delete(self, block_id: str) -> int:
+        path = self._path(block_id)
+        try:
+            size = os.path.getsize(path)
+            os.remove(path)
+            return size
+        except OSError:
+            return 0
+
+    def _contains(self, block_id: str) -> bool:
+        return os.path.exists(self._path(block_id))
+
+    def _resident_bytes(self) -> int:
+        total = 0
+        try:
+            for fn in os.listdir(self.root):
+                if not fn.endswith(".tmp"):
+                    total += os.path.getsize(os.path.join(self.root, fn))
+        except OSError:
+            pass
+        return total
+
+
+@dataclass(frozen=True)
+class TierPlacement:
+    """Where a cached block lives."""
+
+    tier: CacheTier
+    block_id: str

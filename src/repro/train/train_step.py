@@ -1,0 +1,107 @@
+"""Train-step builder: loss -> grads -> AdamW, with optional microbatch
+gradient accumulation (`lax.scan`) for memory-bound cells."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import Model
+from repro.train.optimizer import AdamWConfig, AdamWState, apply_updates, init_state
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: AdamWState
+
+
+def init_train_state(model: Model, key, param_dtype=jnp.float32,
+                     opt_cfg: AdamWConfig | None = None) -> TrainState:
+    params = model.init(key, param_dtype)
+    return TrainState(params=params, opt=init_state(params, opt_cfg))
+
+
+def abstract_train_state(model: Model, rules, param_dtype=jnp.float32,
+                         opt_cfg: AdamWConfig | None = None) -> TrainState:
+    """ShapeDtypeStruct train state for the dry-run (no allocation)."""
+    from repro.train.optimizer import _moment_dtype
+
+    params = model.abstract_params(rules, param_dtype)
+    mdt = _moment_dtype(opt_cfg) if opt_cfg is not None else jnp.float32
+
+    def like(p, dtype=None):
+        dtype = dtype or p.dtype
+        return jax.ShapeDtypeStruct(p.shape, dtype, sharding=p.sharding) \
+            if p.sharding is not None else jax.ShapeDtypeStruct(p.shape, dtype)
+
+    opt = AdamWState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        m=jax.tree.map(lambda p: like(p, mdt), params),
+        v=jax.tree.map(lambda p: like(p, mdt), params),
+    )
+    return TrainState(params=params, opt=opt)
+
+
+@dataclass(frozen=True)
+class StepConfig:
+    microbatches: int = 1
+    q_chunk: int = 512
+    loss_chunk: int = 512
+    remat: bool = True
+
+
+def _split_batch(batch: dict, n: int) -> dict:
+    def split(x):
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        return x.reshape(n, b // n, *x.shape[1:])
+
+    return {k: split(v) for k, v in batch.items()}
+
+
+def build_train_step(model: Model, opt_cfg: AdamWConfig,
+                     step_cfg: StepConfig = StepConfig()):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss_fn(params, batch):
+        return model.loss(
+            params, batch,
+            q_chunk=step_cfg.q_chunk,
+            loss_chunk=step_cfg.loss_chunk,
+            remat=step_cfg.remat,
+        )
+
+    def train_step(state: TrainState, batch: dict):
+        if step_cfg.microbatches <= 1:
+            loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
+        else:
+            mb = _split_batch(batch, step_cfg.microbatches)
+
+            def body(acc, micro):
+                loss_i, g_i = jax.value_and_grad(loss_fn)(state.params, micro)
+                acc_loss, acc_g = acc
+                return (
+                    acc_loss + loss_i,
+                    jax.tree.map(
+                        lambda a, b: a + b.astype(jnp.float32), acc_g, g_i
+                    ),
+                ), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            )
+            (loss_sum, grads), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), zero_g), mb
+            )
+            inv = 1.0 / step_cfg.microbatches
+            loss = loss_sum * inv
+            grads = jax.tree.map(lambda g: g * inv, grads)
+
+        params, opt, metrics = apply_updates(opt_cfg, state.params, grads, state.opt)
+        metrics = {"loss": loss, **metrics}
+        return TrainState(params, opt), metrics
+
+    return train_step

@@ -1,0 +1,4 @@
+from repro.utils.logging import get_logger
+from repro.utils.timing import Timer, Stopwatch
+
+__all__ = ["get_logger", "Timer", "Stopwatch"]

@@ -1,0 +1,36 @@
+"""Structured logging for the framework.
+
+Every subsystem logs through here so launcher-level configuration (rank
+prefixes, verbosity) applies uniformly.
+"""
+
+from __future__ import annotations
+
+import logging
+import os
+import sys
+
+_CONFIGURED = False
+
+
+def _configure_root() -> None:
+    global _CONFIGURED
+    if _CONFIGURED:
+        return
+    level = os.environ.get("REPRO_LOG_LEVEL", "WARNING").upper()
+    handler = logging.StreamHandler(sys.stderr)
+    handler.setFormatter(
+        logging.Formatter("%(asctime)s %(levelname)s %(name)s: %(message)s")
+    )
+    root = logging.getLogger("repro")
+    root.setLevel(level)
+    root.addHandler(handler)
+    root.propagate = False
+    _CONFIGURED = True
+
+
+def get_logger(name: str) -> logging.Logger:
+    _configure_root()
+    if not name.startswith("repro"):
+        name = f"repro.{name}"
+    return logging.getLogger(name)

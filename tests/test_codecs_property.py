@@ -1,0 +1,163 @@
+"""Property-based tests for the data codecs and the store substrate."""
+
+from __future__ import annotations
+
+import io
+import threading
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.tokens import (
+    TokenShardHeader,
+    TokenStreamReader,
+    write_token_shard,
+)
+from repro.data.trk import LazyTrkReader, TrkHeader, write_trk
+from repro.store import LinkModel, MemStore, SimS3Store
+from repro.store.base import StoreError
+
+
+class TestTrkProperty:
+    @given(
+        n_streamlines=st.integers(0, 20),
+        n_props=st.integers(0, 4),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_roundtrip(self, n_streamlines, n_props, seed):
+        rng = np.random.default_rng(seed)
+        sls = [
+            (
+                rng.normal(size=(int(rng.integers(1, 30)), 3)).astype(np.float32),
+                rng.normal(size=n_props).astype(np.float32),
+            )
+            for _ in range(n_streamlines)
+        ]
+        raw = write_trk(sls, n_properties=n_props)
+        assert len(raw) >= 1000
+        reader = LazyTrkReader(io.BytesIO(raw))
+        assert reader.header.n_count == n_streamlines
+        got = list(reader.streamlines())
+        assert len(got) == n_streamlines
+        for (pts, props), sl in zip(sls, got):
+            np.testing.assert_allclose(sl.points, pts, rtol=1e-5, atol=1e-5)
+            np.testing.assert_array_equal(sl.properties, props)
+
+    @given(affine_seed=st.integers(0, 1000))
+    @settings(max_examples=10, deadline=None)
+    def test_affine_roundtrips_in_header(self, affine_seed):
+        rng = np.random.default_rng(affine_seed)
+        affine = np.eye(4, dtype=np.float32)
+        affine[:3, :] = rng.normal(size=(3, 4)).astype(np.float32)
+        hdr = TrkHeader(n_count=0, n_properties=0, affine=affine)
+        back = TrkHeader.from_bytes(hdr.to_bytes())
+        np.testing.assert_array_equal(back.affine, affine)
+
+    def test_bad_magic_rejected(self):
+        with pytest.raises(ValueError):
+            TrkHeader.from_bytes(b"XXXX" + b"\0" * 996)
+
+
+class TestTokenProperty:
+    @given(
+        shard_sizes=st.lists(st.integers(1, 500), min_size=1, max_size=5),
+        window=st.integers(1, 257),
+        dtype=st.sampled_from([np.uint16, np.uint32]),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_multi_shard_stream_preserves_token_order(self, shard_sizes,
+                                                      window, dtype):
+        rng = np.random.default_rng(42)
+        shards = [
+            rng.integers(0, np.iinfo(dtype).max, size=n).astype(dtype)
+            for n in shard_sizes
+        ]
+        blob = b"".join(write_token_shard(s) for s in shards)
+        reader = TokenStreamReader(io.BytesIO(blob), len(blob))
+        out = []
+        while True:
+            w = reader.read_window(window)
+            if w is None:
+                break
+            out.append(w)
+        all_tokens = np.concatenate([s.astype(np.uint32) for s in shards])
+        expect_windows = len(all_tokens) // window
+        assert len(out) == expect_windows
+        if out:
+            got = np.concatenate(out)
+            np.testing.assert_array_equal(
+                got, all_tokens[: expect_windows * window]
+            )
+
+    def test_header_roundtrip(self):
+        hdr = TokenShardHeader(count=12345, dtype=np.dtype(np.uint16))
+        back = TokenShardHeader.from_bytes(hdr.to_bytes())
+        assert back.count == 12345
+        assert back.dtype == np.uint16
+
+
+class TestLinkModel:
+    def test_bandwidth_serializes_across_threads(self):
+        """The shared link enforces aggregate bandwidth: N concurrent
+        transfers take ~N x the single-transfer time."""
+        link = LinkModel(latency_s=0.0, bandwidth_Bps=10e6)
+        nbytes = 200_000  # 20 ms each at 10 MB/s
+
+        def xfer():
+            link.transfer(nbytes)
+
+        t0 = time.perf_counter()
+        threads = [threading.Thread(target=xfer) for _ in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        elapsed = time.perf_counter() - t0
+        assert elapsed >= 4 * nbytes / 10e6 * 0.8
+
+    def test_latency_overlaps_across_threads(self):
+        link = LinkModel(latency_s=0.05, bandwidth_Bps=float("inf"))
+
+        t0 = time.perf_counter()
+        threads = [threading.Thread(target=lambda: link.transfer(10))
+                   for _ in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        elapsed = time.perf_counter() - t0
+        # Latencies overlap: nowhere near 8 x 50 ms.
+        assert elapsed < 0.2
+
+    def test_telemetry(self):
+        link = LinkModel(latency_s=0.0, bandwidth_Bps=100e6)
+        link.transfer(1000)
+        link.transfer(2000)
+        assert link.bytes_moved == 3000
+        assert link.requests == 2
+        assert abs(link.observed_bandwidth() - 100e6) / 100e6 < 0.5
+
+
+class TestStoreEdgeCases:
+    def test_missing_key_raises(self):
+        store = SimS3Store()
+        with pytest.raises(StoreError):
+            store.size("nope")
+        with pytest.raises(StoreError):
+            store.get_range("nope", 0, 10)
+
+    def test_range_reads(self):
+        store = MemStore()
+        store.put("k", bytes(range(100)))
+        assert store.get_range("k", 10, 20) == bytes(range(10, 20))
+        assert store.get_range("k", 90, 200) == bytes(range(90, 100))
+
+    def test_dirstore_key_escape_rejected(self, tmp_path):
+        from repro.store.local import DirStore
+
+        store = DirStore(str(tmp_path))
+        with pytest.raises(StoreError):
+            store.put("../escape", b"x")

@@ -1,0 +1,120 @@
+"""Tests of the paper's analytical model (Eq. 1-4) and the autotuner."""
+
+from __future__ import annotations
+
+import math
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cost_model as cm
+from repro.core.autotune import BlockSizeTuner
+
+# Paper Table I constants.
+L_C, B_CR = 0.1, 91e6
+
+
+def params(f=1e9, n_b=16, c=1e-9, **kw):
+    return cm.CostParams(f=f, n_b=n_b, l_c=kw.pop("l_c", L_C), b_cr=kw.pop("b_cr", B_CR), c=c, **kw)
+
+
+class TestEquations:
+    def test_eq1_components(self):
+        p = params(f=1e9, n_b=10, c=2e-9)
+        expected = 10 * L_C + 1e9 / B_CR + 2e-9 * 1e9
+        assert math.isclose(cm.t_seq(p), expected)
+
+    def test_eq2_pipeline_law(self):
+        p = params(n_b=8)
+        tc, tp = cm.t_cloud(p), cm.t_comp(p)
+        assert math.isclose(cm.t_pf(p), tc + 7 * max(tc, tp) + tp)
+
+    def test_seq_equals_pf_plus_min_term_when_local_free(self):
+        """T_seq = T_pf + (n_b-1) min(T_cloud, T_comp) with free local I/O."""
+        p = params(n_b=12, c=3e-9)
+        lhs = cm.t_seq(p)
+        rhs = cm.t_pf(p) + (p.n_b - 1) * min(cm.t_cloud(p), cm.t_comp(p))
+        assert math.isclose(lhs, rhs, rel_tol=1e-12)
+
+    @given(
+        f=st.floats(1e6, 1e12),
+        n_b=st.integers(1, 10000),
+        c=st.floats(0.0, 1e-6),
+        l_c=st.floats(1e-4, 1.0),
+        b_cr=st.floats(1e6, 1e10),
+    )
+    @settings(max_examples=200, deadline=None)
+    def test_speedup_strictly_below_two(self, f, n_b, c, l_c, b_cr):
+        """Eq. 3: S < 2 for all parameters (free local storage)."""
+        p = cm.CostParams(f=f, n_b=n_b, l_c=l_c, b_cr=b_cr, c=c)
+        assert cm.speedup(p) < 2.0
+        assert cm.speedup(p) >= 1.0 - 1e-9
+
+    def test_speedup_approaches_two_when_balanced(self):
+        """S -> 2 as T_cloud ~= T_comp and n_b grows."""
+        # Choose c so compute time per byte == transfer time per byte.
+        c = 1.0 / B_CR + L_C * 1000 / 1e9  # roughly balances with latency
+        p = params(f=1e9, n_b=1000, c=c)
+        assert cm.speedup(p) > 1.8
+
+    def test_no_compute_no_speedup(self):
+        p = params(c=0.0, n_b=64)
+        # With zero compute, prefetch cannot mask anything: S ~= 1.
+        assert cm.speedup(p) < 1.05
+
+    def test_optimal_blocks_matches_grid_search(self):
+        """Eq. 4 n̂_b = sqrt(cf/l_c) minimizes T_pf over n_b (l_l=0)."""
+        f, c = 5e9, 4e-9
+        nb_hat = cm.optimal_num_blocks(f, c, L_C)
+        t_hat = cm.t_pf(params(f=f, n_b=max(1, round(nb_hat)), c=c))
+        for nb in range(1, 2000, 7):
+            t = cm.t_pf(params(f=f, n_b=nb, c=c))
+            assert t_hat <= t * 1.01, f"n_b={nb} beats n̂_b={nb_hat:.1f}"
+
+    def test_asymptote_parallel_lines(self):
+        """As n_b -> inf, T_seq -> n_b l_c and T_pf -> n_b (l_c + l_l)."""
+        f, c, l_l = 1e9, 1e-9, 1e-3
+        for nb in (10**5, 10**6):
+            p = cm.CostParams(f=f, n_b=nb, l_c=L_C, b_cr=B_CR, c=c, l_l=l_l,
+                              b_lw=2221e6, b_lr=2221e6)
+            assert math.isclose(cm.t_seq(p), nb * L_C, rel_tol=0.05)
+            assert math.isclose(cm.t_pf(p), nb * (L_C + 2 * l_l) + nb * L_C, rel_tol=0.6)
+
+
+class TestAutotuner:
+    def test_converges_to_true_constants(self):
+        tuner = BlockSizeTuner()
+        true_bw, true_lat, true_c = 91e6, 0.1, 2e-9
+        for _ in range(100):
+            nbytes = 64 << 20
+            tuner.observe_latency(true_lat)
+            tuner.observe_bandwidth(true_bw)
+            tuner.observe_compute(nbytes, true_c * nbytes)
+        assert math.isclose(tuner.latency_s, true_lat, rel_tol=0.01)
+        assert math.isclose(tuner.bandwidth_Bps, true_bw, rel_tol=0.01)
+        assert math.isclose(tuner.compute_s_per_byte, true_c, rel_tol=0.01)
+
+    def test_suggestion_tracks_eq4(self):
+        tuner = BlockSizeTuner(min_blocksize=1, max_blocksize=1 << 40)
+        f, c, lat = 10e9, 5e-9, 0.1
+        tuner.observe_latency(lat)
+        tuner.observe_bandwidth(91e6)
+        tuner.observe_compute(1 << 20, c * (1 << 20))
+        suggested = tuner.suggest_blocksize(int(f))
+        want = cm.optimal_blocksize(f, c, lat)
+        assert 0.5 * want <= suggested <= 2.0 * want
+
+    def test_default_without_observations_is_paper_default(self):
+        tuner = BlockSizeTuner()
+        assert tuner.suggest_blocksize(1 << 30) == 64 << 20
+
+    def test_cache_budget_clamps(self):
+        tuner = BlockSizeTuner()
+        assert tuner.suggest_blocksize(1 << 30, cache_budget=16 << 20) <= 8 << 20
+
+    def test_predicted_speedup_in_bounds(self):
+        tuner = BlockSizeTuner()
+        tuner.observe_latency(0.1)
+        tuner.observe_bandwidth(91e6)
+        tuner.observe_compute(1 << 20, 1e-2)
+        s = tuner.predicted_speedup(1 << 30, 64 << 20)
+        assert s is not None and 1.0 <= s < 2.0

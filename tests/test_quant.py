@@ -1,0 +1,86 @@
+"""Weight-only int8 quantization tests (serving path)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import make_model
+from repro.models.quant import (
+    QTensor,
+    abstract_quantized_params,
+    quantize_array,
+    quantize_params,
+)
+
+
+def test_quantize_roundtrip_error_bounded():
+    w = jax.random.normal(jax.random.key(0), (64, 32), jnp.float32)
+    qt = quantize_array(w)
+    assert qt.q.dtype == jnp.int8
+    deq = qt.astype(jnp.float32)
+    # Per-channel symmetric int8: error <= scale/2 per element.
+    err = jnp.abs(deq - w)
+    bound = jnp.max(jnp.abs(w), axis=0, keepdims=True) / 127.0
+    assert jnp.all(err <= bound * 0.51 + 1e-7)
+
+
+def test_norms_and_embeddings_stay_unquantized():
+    cfg = get_config("smollm-135m").reduced()
+    model = make_model(cfg)
+    params = model.init(jax.random.key(0), jnp.bfloat16)
+    qparams, n = quantize_params(params)
+    assert n > 0
+    assert not isinstance(qparams["embed"]["table"], QTensor)
+    assert not isinstance(qparams["final_norm"]["scale"], QTensor)
+    assert isinstance(qparams["layers"]["block0"]["attn"]["wq"], QTensor)
+
+
+def test_quantized_decode_close_to_bf16():
+    """Decode logits with int8 weights track the bf16 logits: argmax
+    agreement on most positions and bounded numeric drift."""
+    cfg = get_config("olmo-1b").reduced()
+    model = make_model(cfg)
+    params = model.init(jax.random.key(0), jnp.bfloat16)
+    qparams, _ = quantize_params(params)
+    b, s = 2, 16
+    caches = model.make_decode_caches(b, s, filled=True)
+    qcaches = model.make_decode_caches(b, s, filled=True)
+    ids = jnp.ones((b, 1), jnp.int32)
+    logits, _ = model.decode_step(params, ids, caches, s - 1)
+    qlogits, _ = model.decode_step(qparams, ids, qcaches, s - 1)
+    a = np.asarray(logits[:, : cfg.vocab_size], np.float32)
+    qa = np.asarray(qlogits[:, : cfg.vocab_size], np.float32)
+    # Numeric drift bounded relative to the logit range.
+    scale = np.abs(a).max() + 1e-6
+    assert np.max(np.abs(a - qa)) / scale < 0.35
+
+
+def test_abstract_quantized_matches_concrete_structure():
+    cfg = get_config("smollm-135m").reduced()
+    model = make_model(cfg)
+    params = model.init(jax.random.key(0), jnp.bfloat16)
+    qparams, _ = quantize_params(params)
+    abstract = abstract_quantized_params(model.spec(), None)
+    concrete_leaves = jax.tree_util.tree_leaves(qparams)
+    abstract_leaves = jax.tree_util.tree_leaves(abstract)
+    assert len(concrete_leaves) == len(abstract_leaves)
+    for c, a in zip(concrete_leaves, abstract_leaves):
+        assert c.shape == a.shape, (c.shape, a.shape)
+        assert c.dtype == a.dtype, (c.dtype, a.dtype)
+
+
+def test_quantized_bytes_halve_vs_bf16():
+    """Block weights (the dominant share at full scale — reduced configs
+    are embedding-dominated) drop to ~half their bf16 footprint."""
+    cfg = get_config("olmo-1b").reduced()
+    model = make_model(cfg)
+    params = model.init(jax.random.key(0), jnp.bfloat16)
+    qparams, _ = quantize_params(params)
+
+    def nbytes(tree):
+        return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+    assert nbytes(qparams["layers"]) < 0.62 * nbytes(params["layers"])
