@@ -10,19 +10,14 @@ Claims validated:
 
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core import cost_model
-from repro.core.rolling import RollingPrefetchFile, RollingPrefetcher
-from repro.core.sequential import SequentialFile
 from repro.data.trk import iter_streamlines_multi
 
 from benchmarks.common import (
-    S3_LATENCY,
     emit,
     fresh_store,
     fresh_tiers,
     make_trk_dataset,
+    open_reader,
     timed,
 )
 
@@ -30,12 +25,10 @@ from benchmarks.common import (
 def _run(ds, blocksize: int, mode: str) -> None:
     store = fresh_store(ds)
     if mode == "seq":
-        f = SequentialFile(store, ds.metas(), blocksize)
+        f = open_reader(store, ds.metas(), "sequential", blocksize=blocksize)
     else:
-        f = RollingPrefetchFile(
-            RollingPrefetcher(store, ds.metas(), fresh_tiers(), blocksize,
-                              eviction_interval_s=0.05)
-        )
+        f = open_reader(store, ds.metas(), "rolling", blocksize=blocksize,
+                        tiers=fresh_tiers())
     for _ in iter_streamlines_multi(f, f.size):
         pass
     f.close()

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.ckpt import restore_checkpoint, save_checkpoint
+from repro.io import IOPolicy
 from repro.store import LinkModel, MemTier, SimS3Store
 
 from benchmarks.common import emit, timed
@@ -40,9 +41,10 @@ def main(quick: bool = False) -> dict:
             lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state
         )
         restored, _ = restore_checkpoint(
-            store, "ckpt", template, mode=mode,
-            tiers=[MemTier(8 << 20)], blocksize=64 << 10,
-            prefetch_depth=depth,
+            store, "ckpt", template,
+            policy=IOPolicy(engine=mode, blocksize=64 << 10, depth=depth,
+                            eviction_interval_s=0.2),
+            tiers=[MemTier(8 << 20)],
         )
         jax.block_until_ready(restored)
 

@@ -10,16 +10,14 @@ Claims validated:
 
 from __future__ import annotations
 
-from repro.core.rolling import RollingPrefetchFile, RollingPrefetcher
-from repro.core.sequential import SequentialFile
 from repro.data.trk import iter_streamlines_multi
 
 from benchmarks.common import (
-    DEFAULT_BLOCK,
     emit,
     fresh_store,
     fresh_tiers,
     make_trk_dataset,
+    open_reader,
     timed,
 )
 
@@ -33,7 +31,7 @@ def _consume(stream, size) -> int:
 
 def run_sequential(ds) -> float:
     store = fresh_store(ds)
-    f = SequentialFile(store, ds.metas(), DEFAULT_BLOCK)
+    f = open_reader(store, ds.metas(), "sequential")
     _consume(f, f.size)
     f.close()
     return 0.0
@@ -41,10 +39,7 @@ def run_sequential(ds) -> float:
 
 def run_rolling(ds) -> float:
     store = fresh_store(ds)
-    f = RollingPrefetchFile(
-        RollingPrefetcher(store, ds.metas(), fresh_tiers(), DEFAULT_BLOCK,
-                          eviction_interval_s=0.05)
-    )
+    f = open_reader(store, ds.metas(), "rolling", tiers=fresh_tiers())
     _consume(f, f.size)
     f.close()
     return 0.0

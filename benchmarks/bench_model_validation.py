@@ -11,15 +11,11 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
 from repro.core import cost_model
-from repro.core.rolling import RollingPrefetchFile, RollingPrefetcher
-from repro.core.sequential import SequentialFile
 from repro.store import LinkModel, MemTier, SimS3Store
 from repro.store.base import ObjectMeta
 
-from benchmarks.common import emit, timed
+from benchmarks.common import emit, open_reader
 
 LAT = 0.015
 BW = 80e6
@@ -50,12 +46,10 @@ def _measure(mode: str, blocksize: int, c: float) -> float:
     store = _store()
     metas = [ObjectMeta(f"f{i}", FILE_BYTES) for i in range(N_FILES)]
     if mode == "seq":
-        f = SequentialFile(store, metas, blocksize)
+        f = open_reader(store, metas, "sequential", blocksize=blocksize)
     else:
-        f = RollingPrefetchFile(
-            RollingPrefetcher(store, metas, [MemTier(16 << 20)], blocksize,
-                              eviction_interval_s=0.02)
-        )
+        f = open_reader(store, metas, "rolling", blocksize=blocksize,
+                        tiers=[MemTier(16 << 20)], eviction_interval_s=0.02)
     t0 = time.perf_counter()
     _consume(f, blocksize, c)
     elapsed = time.perf_counter() - t0

@@ -20,18 +20,15 @@ from __future__ import annotations
 
 import threading
 
-from repro.core.rolling import RollingPrefetchFile, RollingPrefetcher
-from repro.core.sequential import SequentialFile
 from repro.data.trk import iter_streamlines_multi
-from repro.store.base import ObjectMeta
 
 from benchmarks.common import (
     CACHE_BUDGET,
-    DEFAULT_BLOCK,
     emit,
     fresh_store,
     fresh_tiers,
     make_trk_dataset,
+    open_reader,
     timed,
 )
 
@@ -47,14 +44,10 @@ def _run_parallel(ds, mode: str, files_per_worker: int) -> None:
         try:
             mine = metas[widx::WORKERS][:files_per_worker]
             if mode == "seq":
-                f = SequentialFile(store, mine, DEFAULT_BLOCK)
+                f = open_reader(store, mine, "sequential")
             else:
-                f = RollingPrefetchFile(
-                    RollingPrefetcher(
-                        store, mine, fresh_tiers(CACHE_BUDGET // 2),
-                        DEFAULT_BLOCK, eviction_interval_s=0.05,
-                    )
-                )
+                f = open_reader(store, mine, "rolling",
+                                tiers=fresh_tiers(CACHE_BUDGET // 2))
             for _ in iter_streamlines_multi(f, f.size):
                 pass
             f.close()

@@ -19,6 +19,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.data import LoaderConfig, PrefetchingDataLoader, synth_token_shard
+from repro.io import IOPolicy
 from repro.models import make_model
 from repro.train import AdamWConfig, StepConfig, build_train_step, init_train_state
 from repro.store import LinkModel, MemTier, SimS3Store
@@ -59,8 +60,10 @@ def main(quick: bool = False) -> dict:
         loader = PrefetchingDataLoader(
             store, store.backing.list_objects(),
             [MemTier(2 << 20)],
-            LoaderConfig(seq_len=seq_len, batch_size=batch, mode=mode,
-                         blocksize=128 << 10, prefetch_depth=depth),
+            LoaderConfig(seq_len=seq_len, batch_size=batch,
+                         policy=IOPolicy(engine=mode, blocksize=128 << 10,
+                                         depth=depth,
+                                         eviction_interval_s=0.2)),
         )
         s = state
         # Warm the jit cache outside the timed region.

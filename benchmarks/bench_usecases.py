@@ -15,8 +15,6 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.rolling import RollingPrefetchFile, RollingPrefetcher
-from repro.core.sequential import SequentialFile
 from repro.data.trk import iter_streamlines_multi
 
 from benchmarks.common import (
@@ -25,6 +23,7 @@ from benchmarks.common import (
     fresh_store,
     fresh_tiers,
     make_trk_dataset,
+    open_reader,
     timed,
 )
 
@@ -32,11 +31,9 @@ from benchmarks.common import (
 def _open(ds, mode: str, blocksize=DEFAULT_BLOCK):
     store = fresh_store(ds)
     if mode == "seq":
-        return SequentialFile(store, ds.metas(), blocksize)
-    return RollingPrefetchFile(
-        RollingPrefetcher(store, ds.metas(), fresh_tiers(), blocksize,
-                          eviction_interval_s=0.05)
-    )
+        return open_reader(store, ds.metas(), "sequential", blocksize=blocksize)
+    return open_reader(store, ds.metas(), "rolling", blocksize=blocksize,
+                       tiers=fresh_tiers())
 
 
 def histogram_usecase(ds, mode: str) -> np.ndarray:

@@ -23,6 +23,7 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.data.trk import synth_trk
+from repro.io import IOPolicy, PrefetchFS
 from repro.store import LinkModel, MemTier, SimS3Store
 from repro.store.base import ObjectMeta
 
@@ -88,6 +89,16 @@ def fresh_tiers(capacity: int = CACHE_BUDGET) -> list[MemTier]:
             name="tmpfs",
         )
     ]
+
+
+def open_reader(store, metas, engine: str, *, blocksize: int = DEFAULT_BLOCK,
+                tiers=None, **policy_overrides):
+    """Every A/B benchmark constructs its readers through the PrefetchFS
+    facade: same open call on both sides, only `IOPolicy(engine=...)`
+    differs."""
+    policy_overrides.setdefault("eviction_interval_s", 0.05)
+    policy = IOPolicy(engine=engine, blocksize=blocksize, **policy_overrides)
+    return PrefetchFS(store, policy=policy, tiers=tiers).open_many(metas)
 
 
 def timed(fn, *, reps: int = 3) -> tuple[float, float, list[float]]:

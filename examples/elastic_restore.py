@@ -17,6 +17,8 @@ import numpy as np
 
 from repro.ckpt import restore_checkpoint, save_checkpoint
 from repro.configs import get_config
+from repro.io import IOPolicy
+from repro.launch.mesh import make_mesh_compat
 from repro.models import make_model
 from repro.models.spec import param_shardings
 from repro.sharding.rules import ShardingRules, TRAIN_RULES
@@ -24,8 +26,7 @@ from repro.store import LinkModel, SimS3Store
 
 
 def mesh_of(data: int, model: int) -> jax.sharding.Mesh:
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh_compat((data, model), ("data", "model"))
 
 
 def main() -> None:
@@ -57,8 +58,11 @@ def main() -> None:
         params, shardings_b,
     )
     with mesh_b:
-        restored, _ = restore_checkpoint(store, "elastic", template,
-                                         mode="rolling")
+        restored, _ = restore_checkpoint(
+            store, "elastic", template,
+            policy=IOPolicy(engine="rolling", depth=2,
+                            eviction_interval_s=0.2),
+        )
 
     # --- verify bit-identical logical arrays, new physical layout --------------
     for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):

@@ -1,9 +1,10 @@
-"""Quickstart: Rolling Prefetch in ~60 lines.
+"""Quickstart: Rolling Prefetch through the PrefetchFS facade in ~60 lines.
 
 Creates a simulated S3 bucket of tractography shards, reads them through
-the S3Fs-style sequential baseline and through Rolling Prefetch, and
-compares the measured speed-up against the paper's analytical model
-(Eq. 1-4).
+the S3Fs-style sequential baseline and through Rolling Prefetch — both via
+the same ``PrefetchFS.open_many`` call, differing only in
+``IOPolicy(engine=...)`` — and compares the measured speed-up against the
+paper's analytical model (Eq. 1-4).
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -12,9 +13,9 @@ import time
 
 import numpy as np
 
-from repro.core import RollingPrefetchFile, RollingPrefetcher, SequentialFile
 from repro.core import cost_model
 from repro.data.trk import iter_streamlines_multi, synth_trk
+from repro.io import IOPolicy, PrefetchFS
 from repro.store import LinkModel, MemTier, SimS3Store
 
 # --- 1. a bucket of .trk shards behind a simulated S3 link ------------------
@@ -43,22 +44,26 @@ def consume(f):
 
 # --- 2. sequential (S3Fs-style) baseline -------------------------------------
 store = fresh_store()
+fs = PrefetchFS(store, policy=IOPolicy(engine="sequential", blocksize=BLOCK))
 t0 = time.perf_counter()
-n = consume(SequentialFile(store, store.backing.list_objects(), BLOCK))
+n = consume(fs.open_many(store.backing.list_objects()))
 t_seq = time.perf_counter() - t0
 print(f"sequential: {t_seq:.2f}s ({n} streamlines)")
 
-# --- 3. Rolling Prefetch ------------------------------------------------------
+# --- 3. Rolling Prefetch: same open, different policy -------------------------
 store = fresh_store()
 tier = MemTier(capacity=4 << 20)  # bounded cache: dataset streams through
+fs = PrefetchFS(
+    store,
+    policy=IOPolicy(engine="rolling", blocksize=BLOCK, eviction_interval_s=0.05),
+    tiers=[tier],
+)
 t0 = time.perf_counter()
-n = consume(RollingPrefetchFile(RollingPrefetcher(
-    store, store.backing.list_objects(), [tier], BLOCK,
-    eviction_interval_s=0.05,
-)))
+n = consume(fs.open_many(store.backing.list_objects()))
 t_pf = time.perf_counter() - t0
 print(f"rolling prefetch: {t_pf:.2f}s ({n} streamlines)")
 print(f"measured speed-up: {t_seq / t_pf:.2f}x  (paper bound: < 2x)")
+print("fs stats:", fs.stats().snapshot()["totals"])
 
 # --- 4. compare with the paper's model (Eq. 1-3) -----------------------------
 total = sum(len(v) for v in objects.values())

@@ -12,6 +12,7 @@ import numpy as np
 
 from repro.ckpt import restore_checkpoint, save_checkpoint
 from repro.configs import get_config
+from repro.io import IOPolicy
 from repro.models import make_model
 from repro.models.quant import quantize_params
 from repro.serve import Request, ServeEngine
@@ -25,8 +26,8 @@ store = SimS3Store(link=LinkModel(latency_s=0.01, bandwidth_Bps=80e6))
 save_checkpoint(store, "weights", 0, model.init(jax.random.key(0)))
 t0 = time.perf_counter()
 params, _ = restore_checkpoint(
-    store, "weights", model.init(jax.random.key(0)), mode="rolling",
-    prefetch_depth=4,
+    store, "weights", model.init(jax.random.key(0)),
+    policy=IOPolicy(engine="rolling", depth=4, eviction_interval_s=0.2),
 )
 print(f"cold-start restore (rolling prefetch, depth 4): "
       f"{time.perf_counter() - t0:.2f}s")

@@ -11,8 +11,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import RollingPrefetchFile, RollingPrefetcher, SequentialFile
 from repro.data.trk import iter_streamlines_multi, synth_trk
+from repro.io import IOPolicy, PrefetchFS
 from repro.store import LinkModel, MemTier, SimS3Store
 
 rng = np.random.default_rng(1)
@@ -20,16 +20,17 @@ objects = {f"hydi/shard{i}.trk": synth_trk(rng, 3000, mean_points=15)
            for i in range(4)}
 
 
-def open_stream(mode: str):
+def open_stream(engine: str):
     store = SimS3Store(link=LinkModel(latency_s=0.02, bandwidth_Bps=45e6))
     for k, v in objects.items():
         store.backing.put(k, v)
-    metas = store.backing.list_objects()
-    if mode == "sequential":
-        return SequentialFile(store, metas, 256 << 10)
-    return RollingPrefetchFile(RollingPrefetcher(
-        store, metas, [MemTier(4 << 20)], 256 << 10, eviction_interval_s=0.05,
-    ))
+    fs = PrefetchFS(
+        store,
+        policy=IOPolicy(engine=engine, blocksize=256 << 10,
+                        eviction_interval_s=0.05),
+        tiers=[MemTier(4 << 20)],
+    )
+    return fs.open_many(store.backing.list_objects())
 
 
 # --- use-case 1: histogram of streamline lengths (lazy, data-intensive) ------

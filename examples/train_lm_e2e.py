@@ -16,6 +16,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.data import LoaderConfig, PrefetchingDataLoader, synth_token_shard
 from repro.ft import RestartManager, run_with_restarts
+from repro.io import IOPolicy
 from repro.models import make_model
 from repro.store import LinkModel, MemTier, SimS3Store
 from repro.train import AdamWConfig, StepConfig, build_train_step, init_train_state
@@ -59,7 +60,9 @@ def main() -> None:
             data_store, data_store.backing.list_objects(),
             [MemTier(8 << 20)],
             LoaderConfig(seq_len=args.seq_len, batch_size=args.batch,
-                         mode="rolling", blocksize=256 << 10),
+                         policy=IOPolicy(engine="rolling",
+                                         blocksize=256 << 10,
+                                         eviction_interval_s=0.2)),
             cursor=cursor,
         )
 

@@ -6,11 +6,13 @@ commit point — a crash mid-save leaves no visible checkpoint (restart
 resumes from the previous manifest).
 
 Restore: the leaf objects form exactly the sequential multi-file stream
-Rolling Prefetch was built for. `restore="rolling"` streams them through
-the three-thread engine, so fetching leaf k+1..k+d from the store overlaps
+Rolling Prefetch was built for; they stream through the `PrefetchFS`
+facade. `policy=IOPolicy(engine="rolling")` (the default) runs the
+three-thread engine, so fetching leaf k+1..k+d from the store overlaps
 with deserializing + `device_put`-ing leaf k — the paper's
-max(T_cloud, T_comp) pipeline applied to checkpoint load. `"sequential"`
-is the S3Fs-style baseline the benchmarks A/B against.
+max(T_cloud, T_comp) pipeline applied to checkpoint load.
+`engine="sequential"` is the S3Fs-style baseline the benchmarks A/B
+against. The legacy `mode=` string kwarg still works and warns.
 
 Elastic: the restore template's shardings may come from a different mesh
 than save time; `device_put` reshards each leaf onto the new topology.
@@ -18,20 +20,19 @@ than save time; `device_put` reshards each leaf onto the new topology.
 
 from __future__ import annotations
 
-import io
 import json
 import re
 import threading
 import time
+import warnings
 from dataclasses import dataclass
 
 import jax
 import numpy as np
 
-from repro.core.rolling import RollingPrefetchFile, RollingPrefetcher
-from repro.core.sequential import SequentialFile
+from repro.io import IOPolicy, PrefetchFS
 from repro.store.base import ObjectMeta, ObjectStore
-from repro.store.tiers import CacheTier, MemTier
+from repro.store.tiers import CacheTier
 from repro.utils import get_logger
 
 log = get_logger("ckpt")
@@ -130,14 +131,35 @@ def restore_checkpoint(
     template,
     *,
     step: int | None = None,
-    mode: str = "rolling",
+    policy: IOPolicy | None = None,
+    mode: str | None = None,
     tiers: list[CacheTier] | None = None,
     blocksize: int = 8 << 20,
     prefetch_depth: int = 2,
 ):
     """Restore into the structure (and shardings, if any) of `template`.
     Returns (state, manifest). `template` leaves may be arrays or
-    ShapeDtypeStructs (with or without shardings)."""
+    ShapeDtypeStructs (with or without shardings).
+
+    Leaf bytes stream through `PrefetchFS`; pass ``policy`` to select the
+    reader engine and its knobs. ``mode``/``blocksize``/``prefetch_depth``
+    are the deprecated pre-facade spelling and are folded into a policy
+    when no explicit ``policy`` is given.
+    """
+    if mode is not None:
+        warnings.warn(
+            "restore_checkpoint(mode=...) is deprecated; pass "
+            "policy=IOPolicy(engine=...) instead",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+    if policy is None:
+        policy = IOPolicy(
+            engine=mode or "rolling",
+            blocksize=blocksize,
+            depth=prefetch_depth,
+            eviction_interval_s=0.2,
+        )
     if step is None:
         step = latest_step(store, prefix)
         if step is None:
@@ -154,22 +176,9 @@ def restore_checkpoint(
         ObjectMeta(e["key"], _with_retries(lambda k=e["key"]: store.size(k)))
         for e in entries
     ]
-    if mode == "rolling":
-        tiers = tiers or [MemTier(capacity=max(4 * blocksize, 64 << 20))]
-        stream = RollingPrefetchFile(
-            RollingPrefetcher(
-                store, files, tiers, blocksize,
-                depth=prefetch_depth,
-                eviction_interval_s=0.2,
-            )
-        )
-    elif mode == "sequential":
-        stream = SequentialFile(store, files, blocksize)
-    else:
-        raise ValueError(mode)
-
     out = []
-    try:
+    with PrefetchFS(store, policy=policy, tiers=tiers) as fs:
+        stream = fs.open_many(files)
         for meta, entry, tmpl in zip(files, entries, t_leaves):
             raw = stream.read(meta.size)
             arr = np.frombuffer(
@@ -178,8 +187,6 @@ def restore_checkpoint(
             sharding = getattr(tmpl, "sharding", None)
             # device_put overlaps with the prefetch of subsequent leaves.
             out.append(jax.device_put(arr, sharding))
-    finally:
-        stream.close()
     return jax.tree_util.tree_unflatten(treedef, out), manifest
 
 

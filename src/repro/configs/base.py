@@ -10,7 +10,7 @@ depth — critical for 40-cell × 2-mesh dry-run compile times).
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 
 
 # --------------------------------------------------------------------------- #

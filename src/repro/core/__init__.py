@@ -2,7 +2,12 @@
 library: block planning, the three-thread prefetch/read/evict engine over
 bounded cache tiers, the S3Fs-like sequential baseline it is benchmarked
 against, the Eq. 1-4 analytical cost model, and the online autotuner that
-closes the paper's optimal-block-size loop."""
+closes the paper's optimal-block-size loop.
+
+Applications should not construct these engines directly: open readers
+through the `repro.io.PrefetchFS` facade (`IOPolicy(engine="rolling")`
+et al.), which owns tier lifecycle and engine dispatch. The classes here
+are the engine layer that facade drives."""
 
 from repro.core.plan import Block, BlockPlan
 from repro.core.rolling import (

@@ -28,6 +28,7 @@ from __future__ import annotations
 import enum
 import threading
 import time
+import warnings
 from dataclasses import dataclass, field
 
 from repro.core.plan import Block, BlockPlan
@@ -56,6 +57,11 @@ class _BlockInfo:
 
 @dataclass
 class PrefetchStats:
+    """Counters mutated from the reader, prefetch (possibly several when
+    depth > 1), and eviction threads; all mutation goes through
+    :meth:`bump`, which serializes on an internal lock, and
+    :meth:`snapshot` reads under the same lock for a consistent view."""
+
     blocks_fetched: int = 0
     blocks_evicted: int = 0
     bytes_fetched: int = 0
@@ -65,9 +71,18 @@ class PrefetchStats:
     retries: int = 0
     hedges: int = 0
     direct_reads: int = 0       # cache-miss fallbacks (backward seeks)
+    _lock: threading.Lock = field(default_factory=threading.Lock,
+                                  repr=False, compare=False)
+
+    def bump(self, **deltas: int | float) -> None:
+        with self._lock:
+            for name, delta in deltas.items():
+                setattr(self, name, getattr(self, name) + delta)
 
     def snapshot(self) -> dict:
-        return dict(self.__dict__)
+        with self._lock:
+            return {k: v for k, v in self.__dict__.items()
+                    if not k.startswith("_")}
 
 
 class RollingPrefetcher:
@@ -203,13 +218,15 @@ class RollingPrefetcher:
         data = self._fetch_with_retries(block)
         tier.write(block.block_id, data)
         tier.commit(block.size)
-        self.stats.fetch_s += time.perf_counter() - t0
+        self.stats.bump(
+            fetch_s=time.perf_counter() - t0,
+            blocks_fetched=1,
+            bytes_fetched=block.size,
+        )
         with self._cond:
             info = self._info[block.index]
             info.state = BlockState.CACHED
             info.tier = tier
-            self.stats.blocks_fetched += 1
-            self.stats.bytes_fetched += block.size
             self._cond.notify_all()
 
     def _fetch_with_retries(self, block: Block) -> bytes:
@@ -219,7 +236,7 @@ class RollingPrefetcher:
                 return self._fetch_maybe_hedged(block)
             except TransientStoreError as e:
                 last = e
-                self.stats.retries += 1
+                self.stats.bump(retries=1)
                 time.sleep(self.retry_backoff_s * (2**attempt))
         raise StoreError(
             f"block {block.block_id}: exhausted {self.max_retries} retries"
@@ -229,30 +246,41 @@ class RollingPrefetcher:
         if self.hedge_timeout_s is None:
             return self.store.get_range(block.key, block.start, block.end)
         # Straggler hedging: race a duplicate request after the deadline.
-        result: list[bytes] = []
-        error: list[Exception] = []
-        done = threading.Event()
+        cond = threading.Condition()
+        results: list[bytes] = []
+        errors: list[Exception] = []
 
         def attempt() -> None:
             try:
                 data = self.store.get_range(block.key, block.start, block.end)
-                result.append(data)
             except Exception as e:  # noqa: BLE001 - propagated below
-                error.append(e)
-            finally:
-                done.set()
+                with cond:
+                    errors.append(e)
+                    cond.notify_all()
+            else:
+                with cond:
+                    results.append(data)
+                    cond.notify_all()
 
-        primary = threading.Thread(target=attempt, daemon=True)
-        primary.start()
-        if not done.wait(self.hedge_timeout_s):
-            self.stats.hedges += 1
-            secondary = threading.Thread(target=attempt, daemon=True)
-            secondary.start()
-            done.wait()
-        if result:
-            return result[0]
-        # Both attempts failed (or the only attempt failed).
-        raise error[0]
+        threading.Thread(target=attempt, daemon=True).start()
+        launched = 1
+        with cond:
+            cond.wait_for(lambda: results or errors,
+                          timeout=self.hedge_timeout_s)
+            hedge = not results and not errors
+        if hedge:
+            self.stats.bump(hedges=1)
+            threading.Thread(target=attempt, daemon=True).start()
+            launched = 2
+        with cond:
+            # A success wins immediately; a failure only propagates once
+            # every launched attempt has reported, so a still-in-flight
+            # duplicate can rescue the fetch and no attempt thread outlives
+            # the raise.
+            cond.wait_for(lambda: results or len(errors) >= launched)
+        if results:
+            return results[0]
+        raise errors[0]
 
     # ------------------------------------------------------------------ #
     # reading path (called from the application thread)
@@ -277,7 +305,7 @@ class RollingPrefetcher:
                 if self._buf_index == block.index:
                     self._buf_index, self._buf_data = None, b""
                 self._mark_consumed(block)
-        self.stats.bytes_read += len(out)
+        self.stats.bump(bytes_read=len(out))
         return bytes(out)
 
     def _read_from_block(self, block: Block, gstart: int, gend: int) -> bytes:
@@ -287,7 +315,7 @@ class RollingPrefetcher:
             while info.state in (BlockState.UNFETCHED, BlockState.FETCHING):
                 self._cond.wait(timeout=0.5)
             state, tier, err = info.state, info.tier, info.error
-        self.stats.reader_wait_s += time.perf_counter() - t0
+        self.stats.bump(reader_wait_s=time.perf_counter() - t0)
         lo = gstart - block.global_start
         hi = gend - block.global_start
         if state == BlockState.CACHED and tier is not None:
@@ -299,7 +327,7 @@ class RollingPrefetcher:
         if state == BlockState.FAILED:
             raise StoreError(f"block {block.block_id} failed to prefetch") from err
         # CONSUMED/EVICTED (backward seek after eviction): direct fetch.
-        self.stats.direct_reads += 1
+        self.stats.bump(direct_reads=1)
         return self.store.get_range(block.key, block.start + lo, block.start + hi)
 
     def _mark_consumed(self, block: Block) -> None:
@@ -335,8 +363,8 @@ class RollingPrefetcher:
             with self._cond:
                 info.state = BlockState.EVICTED
                 info.tier = None
-                self.stats.blocks_evicted += 1
                 self._cond.notify_all()
+            self.stats.bump(blocks_evicted=1)
 
     def _evict_loop(self) -> None:
         while True:
@@ -376,7 +404,7 @@ class RollingPrefetchFile:
         self._closed = False
         prefetcher.start()
 
-    # constructor used by most call sites
+    # Deprecated constructor: forwards to the PrefetchFS reader registry.
     @classmethod
     def open(
         cls,
@@ -386,7 +414,17 @@ class RollingPrefetchFile:
         blocksize: int,
         **kw,
     ) -> "RollingPrefetchFile":
-        return cls(RollingPrefetcher(store, files, tiers, blocksize, **kw))
+        warnings.warn(
+            "RollingPrefetchFile.open(...) is deprecated; use "
+            "repro.io.PrefetchFS(store, policy=IOPolicy(engine='rolling', "
+            "...)).open_many(files) instead",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        from repro.io import IOPolicy, PrefetchFS
+
+        policy = IOPolicy(engine="rolling", blocksize=blocksize, **kw)
+        return PrefetchFS(store, policy=policy, tiers=tiers).open_many(files)
 
     @property
     def size(self) -> int:
@@ -395,6 +433,10 @@ class RollingPrefetchFile:
     @property
     def stats(self) -> PrefetchStats:
         return self._pf.stats
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
 
     def read(self, n: int = -1) -> bytes:
         if self._closed:

@@ -10,7 +10,7 @@ threads, no overlap.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from repro.core.plan import BlockPlan
 from repro.store.base import ObjectMeta, ObjectStore
@@ -57,6 +57,10 @@ class SequentialFile:
     @property
     def size(self) -> int:
         return self.plan.total_bytes
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
 
     def _get_block(self, index: int) -> bytes:
         entry = self._cache.get(index)

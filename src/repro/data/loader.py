@@ -3,9 +3,10 @@
 Two overlap levels, both instances of the paper's max(T_cloud, T_comp)
 pipeline law:
 
-  1. object store -> local cache tiers: Rolling Prefetch masks S3-like
-     latency/bandwidth inside step compute ("rolling" mode) versus the
-     S3Fs-style sequential baseline ("sequential" mode);
+  1. object store -> local cache tiers: readers come from the `PrefetchFS`
+     facade, so `IOPolicy(engine="rolling")` masks S3-like latency/bandwidth
+     inside step compute versus the S3Fs-style `engine="sequential"`
+     baseline (any registered engine works);
   2. host RAM -> device HBM: a background thread keeps `depth` batches
      in flight via `jax.device_put` double-buffering.
 
@@ -20,15 +21,15 @@ from __future__ import annotations
 import queue
 import threading
 import time
-from dataclasses import dataclass, field
+import warnings
+from dataclasses import dataclass
 
 import jax
 import numpy as np
 
 from repro.core.autotune import BlockSizeTuner
-from repro.core.rolling import RollingPrefetchFile, RollingPrefetcher
-from repro.core.sequential import SequentialFile
 from repro.data.tokens import TokenStreamReader
+from repro.io import IOPolicy, PrefetchFS
 from repro.store.base import ObjectMeta, ObjectStore
 from repro.store.tiers import CacheTier
 from repro.utils import get_logger
@@ -40,7 +41,7 @@ log = get_logger("data.loader")
 class LoaderConfig:
     seq_len: int
     batch_size: int              # per-host batch
-    mode: str = "rolling"        # "rolling" | "sequential"
+    mode: str | None = None      # DEPRECATED: use policy=IOPolicy(engine=...)
     blocksize: int = 8 << 20
     depth: int = 2               # device-feed pipeline depth
     host_id: int = 0
@@ -49,6 +50,30 @@ class LoaderConfig:
     prefetch_depth: int = 1      # concurrent fetch streams (beyond paper)
     eviction_interval_s: float = 0.2
     autotune: bool = False
+    policy: IOPolicy | None = None   # reader policy (preferred over mode/...)
+
+    def reader_policy(self) -> IOPolicy:
+        """Effective `IOPolicy`: `policy` wins; otherwise one is assembled
+        from the legacy per-field knobs (with a deprecation warning when the
+        legacy `mode` string was passed)."""
+        if self.mode is not None:
+            # stacklevel 3: reader_policy <- loader __init__ <- user code.
+            warnings.warn(
+                "LoaderConfig(mode=...) is deprecated; pass "
+                "policy=IOPolicy(engine=...) instead",
+                DeprecationWarning,
+                stacklevel=3,
+            )
+        if self.policy is not None:
+            return self.policy
+        return IOPolicy(
+            engine=self.mode or "rolling",
+            blocksize=self.blocksize,
+            depth=self.prefetch_depth,
+            eviction_interval_s=self.eviction_interval_s,
+            hedge_timeout_s=self.hedge_timeout_s,
+            autotune=self.autotune,
+        )
 
 
 @dataclass
@@ -83,31 +108,23 @@ class PrefetchingDataLoader:
         if not self.my_files:
             raise ValueError(f"host {cfg.host_id}: no files assigned")
         self.cursor = cursor or DataCursor()
-        self.tuner = BlockSizeTuner() if cfg.autotune else None
+        self.policy = cfg.reader_policy()
+        self.fs = PrefetchFS(store, policy=self.policy, tiers=tiers)
+        self.tuner = (
+            BlockSizeTuner() if (cfg.autotune or self.policy.autotune) else None
+        )
         self._file = None
         self._reader = None
 
     # -- stream management ------------------------------------------------
     def _open_stream(self):
-        blocksize = self.cfg.blocksize
+        overrides = {}
         if self.tuner is not None:
             total = sum(m.size for m in self.my_files)
-            blocksize = self.tuner.suggest_blocksize(
+            overrides["blocksize"] = self.tuner.suggest_blocksize(
                 total, cache_budget=sum(t.capacity for t in self.tiers)
             )
-        if self.cfg.mode == "rolling":
-            f = RollingPrefetchFile(
-                RollingPrefetcher(
-                    self.store, self.my_files, self.tiers, blocksize,
-                    depth=self.cfg.prefetch_depth,
-                    eviction_interval_s=self.cfg.eviction_interval_s,
-                    hedge_timeout_s=self.cfg.hedge_timeout_s,
-                )
-            )
-        elif self.cfg.mode == "sequential":
-            f = SequentialFile(self.store, self.my_files, blocksize)
-        else:
-            raise ValueError(self.cfg.mode)
+        f = self.fs.open_many(self.my_files, **overrides)
         self._file = f
         self._reader = TokenStreamReader(f, f.size)
 
@@ -153,10 +170,17 @@ class PrefetchingDataLoader:
 
     def close(self) -> None:
         self._close_stream()
+        self.fs.close()
 
     @property
     def stats(self):
+        """Stats of the currently-open stream (engine-specific object)."""
         return getattr(self._file, "stats", None)
+
+    def fs_stats(self):
+        """Aggregated `FSStats` across every stream this loader opened
+        (one per epoch)."""
+        return self.fs.stats()
 
 
 class DeviceFeeder:

@@ -4,7 +4,8 @@ Files carry a fixed 1000-byte header and a body of variable-length
 streamline records: int32 point count, then npoints x 3 float32
 coordinates, then n_properties float32 per-streamline properties
 (paper §II-C). The reader is nibabel-like: a lazy generator over any
-file-like object (RollingPrefetchFile, SequentialFile, BytesIO), issuing
+file-like object (any `repro.io.Reader` from `PrefetchFS.open`, or a
+plain BytesIO), issuing
 one small read per record section — reproducing the paper's observation
 that "Nibabel reads may incur significant overhead: three read calls for
 each streamline" — and always applying the header affine to coordinates

@@ -19,6 +19,7 @@ from repro.ckpt.manager import (
     restore_checkpoint,
 )
 from repro.data.loader import DataCursor
+from repro.io import IOPolicy
 from repro.store.base import ObjectStore
 from repro.utils import get_logger
 
@@ -35,13 +36,17 @@ class RestartManager:
     def resume_point(self) -> int | None:
         return latest_step(self.store, self.prefix)
 
-    def restore(self, template, *, mode: str = "rolling"):
-        """Returns (state, step, cursor) or None if no checkpoint exists."""
+    def restore(self, template, *, policy: IOPolicy | None = None,
+                mode: str | None = None):
+        """Returns (state, step, cursor) or None if no checkpoint exists.
+        ``policy`` selects the restore reader engine (default rolling);
+        ``mode`` is the deprecated string spelling."""
         step = self.resume_point()
         if step is None:
             return None
         state, manifest = restore_checkpoint(
-            self.store, self.prefix, template, step=step, mode=mode
+            self.store, self.prefix, template, step=step,
+            policy=policy, mode=mode,
         )
         cursor = DataCursor.from_dict(
             manifest["extra"].get("cursor", DataCursor().to_dict())

@@ -1,0 +1,32 @@
+"""Unified I/O subsystem: the `PrefetchFS` facade, `IOPolicy` config, the
+`Reader` protocol, and the pluggable reader-engine registry.
+
+This is the one construction path for prefetched reads — the S3Fs-shaped
+API the paper argues for, extended with policy objects and a backend
+registry so new engines (real S3, async, sharded) plug in without touching
+call sites::
+
+    from repro.io import IOPolicy, PrefetchFS
+
+    fs = PrefetchFS(store, policy=IOPolicy(engine="rolling", blocksize=1 << 20))
+    with fs.open_many(files) as f:      # one logical stream over many objects
+        data = f.read()
+    print(fs.stats().snapshot())
+"""
+
+from repro.io.fs import FSStats, PrefetchFS
+from repro.io.policy import IOPolicy
+from repro.io.reader import DirectReader, DirectStats, Reader
+from repro.io.registry import available_engines, engine_spec, register_reader
+
+__all__ = [
+    "FSStats",
+    "PrefetchFS",
+    "IOPolicy",
+    "Reader",
+    "DirectReader",
+    "DirectStats",
+    "available_engines",
+    "engine_spec",
+    "register_reader",
+]

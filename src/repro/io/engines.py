@@ -1,0 +1,49 @@
+"""Built-in reader engines.
+
+  * ``rolling``    — the paper's Rolling Prefetch (three-thread engine over
+    bounded cache tiers); requires tiers, which `PrefetchFS` supplies;
+  * ``sequential`` — the S3Fs/fsspec-style on-demand block cache baseline;
+  * ``direct``     — uncached pass-through range reads.
+
+Each factory receives ``(store, files, tiers, policy)`` and returns a
+`Reader`. New engines (real S3, async, sharded multi-host) register the
+same way and become reachable from every `PrefetchFS` call site.
+"""
+
+from __future__ import annotations
+
+from repro.core.rolling import RollingPrefetcher, RollingPrefetchFile
+from repro.core.sequential import SequentialFile
+from repro.io.policy import IOPolicy
+from repro.io.reader import DirectReader
+from repro.io.registry import register_reader
+from repro.store.base import ObjectMeta, ObjectStore
+from repro.store.tiers import CacheTier
+
+
+@register_reader("rolling", needs_tiers=True)
+def open_rolling(store: ObjectStore, files: list[ObjectMeta],
+                 tiers: list[CacheTier], policy: IOPolicy) -> RollingPrefetchFile:
+    return RollingPrefetchFile(
+        RollingPrefetcher(
+            store, files, tiers, policy.blocksize,
+            depth=policy.depth,
+            eviction_interval_s=policy.eviction_interval_s,
+            max_retries=policy.max_retries,
+            retry_backoff_s=policy.retry_backoff_s,
+            hedge_timeout_s=policy.hedge_timeout_s,
+        )
+    )
+
+
+@register_reader("sequential")
+def open_sequential(store: ObjectStore, files: list[ObjectMeta],
+                    tiers: list[CacheTier], policy: IOPolicy) -> SequentialFile:
+    return SequentialFile(store, files, policy.blocksize,
+                          cache_blocks=policy.cache_blocks)
+
+
+@register_reader("direct")
+def open_direct(store: ObjectStore, files: list[ObjectMeta],
+                tiers: list[CacheTier], policy: IOPolicy) -> DirectReader:
+    return DirectReader(store, files)

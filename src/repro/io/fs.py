@@ -1,0 +1,212 @@
+"""PrefetchFS: one filesystem-style facade for every reader engine.
+
+Following the S3Fs idiom the paper extends, applications hold a filesystem
+object and open file-like readers from it::
+
+    fs = PrefetchFS(store, policy=IOPolicy(engine="rolling", blocksize=8 << 20))
+    with fs:
+        f = fs.open("bucket/key")              # one object
+        g = fs.open_many(metas, depth=4)       # multi-object logical stream,
+                                               # per-open policy override
+        ...
+        print(fs.stats().snapshot())           # aggregated across all opens
+
+The facade owns cache-tier lifecycle (builds a bounded MemTier on demand
+when an engine needs one and none was supplied), dispatches
+``IOPolicy.engine`` through the reader registry, and aggregates per-reader
+statistics into one `FSStats` view. Training data loading, checkpoint
+restore, serving cold-start, and every A/B benchmark construct readers
+exclusively through this API.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Iterable, Sequence
+
+from repro.io.policy import IOPolicy
+from repro.io.registry import available_engines, engine_spec
+from repro.store.base import ObjectMeta, ObjectStore
+from repro.store.tiers import CacheTier, MemTier
+
+# Importing the engines module populates the registry with the built-ins.
+import repro.io.engines  # noqa: F401  (side-effect import)
+
+
+@dataclass
+class FSStats:
+    """Aggregated I/O statistics across every reader a PrefetchFS opened.
+
+    ``totals`` sums every numeric counter that any engine reports
+    (bytes_read, bytes_fetched, retries, hedges, direct_reads, ...);
+    ``per_engine`` keeps the same sums split by engine name.
+    """
+
+    opens: int = 0
+    totals: dict = field(default_factory=dict)
+    per_engine: dict = field(default_factory=dict)
+
+    def snapshot(self) -> dict:
+        return {
+            "opens": self.opens,
+            "totals": dict(self.totals),
+            "per_engine": {k: dict(v) for k, v in self.per_engine.items()},
+        }
+
+
+class PrefetchFS:
+    """Filesystem facade over an `ObjectStore` with pluggable prefetching."""
+
+    def __init__(
+        self,
+        store: ObjectStore,
+        policy: IOPolicy | None = None,
+        tiers: Sequence[CacheTier] | None = None,
+    ) -> None:
+        self.store = store
+        self.policy = policy if policy is not None else IOPolicy()
+        self._tiers: list[CacheTier] | None = (
+            list(tiers) if tiers is not None else None
+        )
+        self._lock = threading.RLock()
+        self._readers: list[tuple[str, object]] = []
+        # Stats of already-closed readers, folded per engine so a loader
+        # that reopens a stream every epoch doesn't accumulate dead reader
+        # objects (see _prune_closed).
+        self._folded: dict[str, dict] = {}
+        self._closed = False
+
+    # ------------------------------------------------------------------ #
+    # opening readers
+    # ------------------------------------------------------------------ #
+    def open(self, key, *, policy: IOPolicy | None = None,
+             tiers: Sequence[CacheTier] | None = None, **overrides):
+        """Open one object (or a list of them) as a `Reader`.
+
+        ``key`` is an object key string, an `ObjectMeta`, or a list of
+        either (lists delegate to :meth:`open_many`). Keyword overrides
+        (``engine=``, ``blocksize=``, ``depth=``, ...) apply on top of the
+        filesystem policy for this open only.
+        """
+        if isinstance(key, (list, tuple)):
+            return self.open_many(key, policy=policy, tiers=tiers, **overrides)
+        return self.open_many([key], policy=policy, tiers=tiers, **overrides)
+
+    def open_many(self, keys: Iterable, *, policy: IOPolicy | None = None,
+                  tiers: Sequence[CacheTier] | None = None, **overrides):
+        """Open a list of objects as ONE logical sequential stream — the
+        paper's multi-file case ("treating a list of files as a single
+        file"). Returns a `Reader`."""
+        if self._closed:   # early check: skip store metadata round-trips
+            raise ValueError("open on closed PrefetchFS")
+        pol = policy if policy is not None else self.policy
+        if overrides:
+            pol = pol.replace(**overrides)
+        spec = engine_spec(pol.engine)
+        files = [self._resolve(k) for k in keys]
+        # The closed check, factory call, and registration happen under one
+        # lock so an open racing with close() either lands in close()'s
+        # sweep or observes the closed flag — never an orphaned reader.
+        with self._lock:
+            if self._closed:
+                raise ValueError("open on closed PrefetchFS")
+            if tiers is not None:
+                use_tiers = list(tiers)
+            elif spec.needs_tiers:
+                use_tiers = self._ensure_tiers(pol)
+            else:
+                use_tiers = []
+            reader = spec.factory(self.store, files, use_tiers, pol)
+            self._prune_closed()
+            self._readers.append((pol.engine, reader))
+        return reader
+
+    def _resolve(self, key) -> ObjectMeta:
+        if isinstance(key, ObjectMeta):
+            return key
+        key = str(key)
+        return ObjectMeta(key, self.store.size(key))
+
+    def _ensure_tiers(self, policy: IOPolicy) -> list[CacheTier]:
+        with self._lock:
+            if self._tiers is None:
+                self._tiers = [
+                    MemTier(policy.default_tier_capacity(), name="prefetchfs.mem")
+                ]
+            return self._tiers
+
+    # ------------------------------------------------------------------ #
+    # introspection
+    # ------------------------------------------------------------------ #
+    def ls(self, prefix: str = "") -> list[ObjectMeta]:
+        """List objects under a prefix (one store metadata request)."""
+        return self.store.list_objects(prefix)
+
+    def engines(self) -> tuple[str, ...]:
+        return available_engines()
+
+    @property
+    def tiers(self) -> list[CacheTier]:
+        """The cache tiers this filesystem manages (empty until an engine
+        that needs them is opened, unless tiers were supplied)."""
+        with self._lock:
+            return list(self._tiers or [])
+
+    @staticmethod
+    def _fold_snapshot(bucket: dict, reader) -> None:
+        bucket["opens"] = bucket.get("opens", 0) + 1
+        stats_obj = getattr(reader, "stats", None)
+        snap = stats_obj.snapshot() if stats_obj is not None else {}
+        for k, v in snap.items():
+            if isinstance(v, (int, float)):
+                bucket[k] = bucket.get(k, 0) + v
+
+    def _prune_closed(self) -> None:
+        """Fold the stats of closed readers into `_folded` and drop the
+        reader objects, so per-epoch reopen loops stay O(1) memory.
+        Caller holds `_lock`."""
+        live = []
+        for engine, reader in self._readers:
+            if getattr(reader, "closed", False):
+                self._fold_snapshot(self._folded.setdefault(engine, {}), reader)
+            else:
+                live.append((engine, reader))
+        self._readers = live
+
+    def stats(self) -> FSStats:
+        """Aggregate statistics across every reader opened so far (open or
+        closed); closed readers' stats persist in the folded totals."""
+        with self._lock:
+            per_engine = {k: dict(v) for k, v in self._folded.items()}
+            readers = list(self._readers)
+        for engine, reader in readers:
+            self._fold_snapshot(per_engine.setdefault(engine, {}), reader)
+        out = FSStats(per_engine=per_engine)
+        for bucket in per_engine.values():
+            out.opens += bucket.get("opens", 0)
+            for k, v in bucket.items():
+                if k != "opens":
+                    out.totals[k] = out.totals.get(k, 0) + v
+        return out
+
+    # ------------------------------------------------------------------ #
+    # lifecycle
+    # ------------------------------------------------------------------ #
+    def close(self) -> None:
+        """Close every reader this filesystem opened (engines run their
+        final eviction sweep, so owned tiers end empty)."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            readers = list(self._readers)
+        # Closing outside the lock: rolling close joins worker threads.
+        for _, reader in readers:
+            reader.close()
+
+    def __enter__(self) -> "PrefetchFS":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -1,0 +1,76 @@
+"""IOPolicy: the single configuration object for every reader engine.
+
+The paper's extension of S3Fs keeps prefetch configuration out of the
+application: callers open files and the filesystem carries the policy
+(block size, cache tiers, concurrency). `IOPolicy` plays that role here —
+one frozen value object covering every knob any engine understands, built
+from keyword arguments, another config object (`from_config`), or an
+existing policy plus per-open overrides (`replace`). Engines read only the
+fields they care about; unknown-engine validation happens in the registry.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Mapping
+
+
+@dataclass(frozen=True)
+class IOPolicy:
+    """Reader configuration shared by all engines.
+
+    Fields consumed per engine:
+      * ``rolling``    — blocksize, depth, eviction_interval_s, max_retries,
+        retry_backoff_s, hedge_timeout_s, tier_capacity;
+      * ``sequential`` — blocksize, cache_blocks;
+      * ``direct``     — none (pass-through range reads).
+    """
+
+    engine: str = "rolling"
+    blocksize: int = 8 << 20
+    depth: int = 1                      # concurrent prefetch streams
+    eviction_interval_s: float = 5.0
+    max_retries: int = 3
+    retry_backoff_s: float = 0.05
+    hedge_timeout_s: float | None = None
+    cache_blocks: int = 1               # sequential engine read-ahead cache
+    autotune: bool = False              # consumers may retune blocksize per open
+    tier_capacity: int | None = None    # default cache budget when the FS owns tiers
+
+    def __post_init__(self) -> None:
+        if self.blocksize <= 0:
+            raise ValueError(f"blocksize must be positive, got {self.blocksize}")
+        if self.depth < 1:
+            raise ValueError(f"depth must be >= 1, got {self.depth}")
+        if self.max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {self.max_retries}")
+
+    def replace(self, **overrides: Any) -> "IOPolicy":
+        """A copy with the given fields overridden (per-open tweaks)."""
+        return dataclasses.replace(self, **overrides)
+
+    @classmethod
+    def from_config(cls, src: Mapping[str, Any] | Any = None,
+                    **overrides: Any) -> "IOPolicy":
+        """Build a policy from a mapping or any object whose attribute
+        names match `IOPolicy` field names exactly; unknown keys are
+        ignored, explicit keyword overrides win. Configs with their own
+        reader-knob spellings need an explicit mapping instead (e.g.
+        `LoaderConfig.reader_policy()` maps `prefetch_depth` -> `depth`)."""
+        names = {f.name for f in dataclasses.fields(cls)}
+        kw: dict[str, Any] = {}
+        if src is not None:
+            if isinstance(src, Mapping):
+                kw.update((k, v) for k, v in src.items() if k in names)
+            else:
+                kw.update((n, getattr(src, n)) for n in names if hasattr(src, n))
+        kw.update(overrides)
+        return cls(**kw)
+
+    def default_tier_capacity(self) -> int:
+        """Cache budget used when the filesystem builds its own tier: at
+        least four in-flight blocks so the pipeline can roll."""
+        if self.tier_capacity is not None:
+            return self.tier_capacity
+        return max(4 * self.blocksize, 64 << 20)

@@ -19,12 +19,14 @@ interpret mode against ref.py on every shape/dtype in the test sweep.
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+# jax < 0.5 spells CompilerParams TPUCompilerParams.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
 NEG_INF = -1e30
 
@@ -136,7 +138,7 @@ def flash_attention(
             pltpu.VMEM((block_q, 1), jnp.float32),   # running normalizer
             pltpu.VMEM((block_q, d), jnp.float32),   # output accumulator
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -19,7 +19,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import SHAPES, all_configs, get_config, shapes_for
 from repro.launch.mesh import make_production_mesh

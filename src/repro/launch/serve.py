@@ -18,6 +18,7 @@ import numpy as np
 
 from repro.ckpt.manager import restore_checkpoint, save_checkpoint
 from repro.configs import get_config
+from repro.io import IOPolicy
 from repro.models import make_model
 from repro.store import LinkModel, SimS3Store
 from repro.utils import get_logger
@@ -50,8 +51,11 @@ def main() -> None:
     params = model.init(jax.random.key(0))
     save_checkpoint(store, "weights", 0, params)
     t0 = time.time()
-    params, _ = restore_checkpoint(store, "weights", params,
-                                   mode=args.restore_mode)
+    params, _ = restore_checkpoint(
+        store, "weights", params,
+        policy=IOPolicy(engine=args.restore_mode, depth=2,
+                        eviction_interval_s=0.2),
+    )
     print(f"weight restore ({args.restore_mode}): {time.time() - t0:.2f}s")
     if args.quant == "int8":
         from repro.models.quant import quantize_params

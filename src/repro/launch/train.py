@@ -22,12 +22,12 @@ from repro.ckpt.manager import CheckpointManager, latest_step, restore_checkpoin
 from repro.configs import get_config
 from repro.data import DataCursor, LoaderConfig, PrefetchingDataLoader, synth_token_shard
 from repro.data.loader import DeviceFeeder
+from repro.io import IOPolicy
 from repro.models import make_model
 from repro.store import LinkModel, MemTier, SimS3Store
 from repro.train import (
     AdamWConfig,
     StepConfig,
-    TrainState,
     build_train_step,
     init_train_state,
 )
@@ -114,10 +114,13 @@ def main() -> None:
         LoaderConfig(
             seq_len=args.seq_len,
             batch_size=args.batch,
-            mode=args.mode,
-            blocksize=args.blocksize,
-            prefetch_depth=args.prefetch_depth,
-            autotune=True,
+            policy=IOPolicy(
+                engine=args.mode,
+                blocksize=args.blocksize,
+                depth=args.prefetch_depth,
+                eviction_interval_s=0.2,
+                autotune=True,
+            ),
         ),
         cursor=cursor,
     )
@@ -146,9 +149,7 @@ def main() -> None:
                     extra={"cursor": loader.cursor.to_dict()})
     ckpt.wait()
     loader.close()
-    stats = loader.stats
-    if stats is not None:
-        print("loader stats:", stats.snapshot())
+    print("loader fs stats:", loader.fs_stats().snapshot())
     print(f"done: {args.steps} steps, {tokens} tokens, "
           f"{time.time() - t0:.1f}s wall")
 

@@ -10,7 +10,6 @@ stream.
 
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +18,7 @@ from repro.configs.base import BlockDef, ModelConfig
 from repro.models import layers as L
 from repro.models import moe as M
 from repro.models import ssd as S
-from repro.models.spec import ParamSpec, stacked
+from repro.models.spec import stacked
 from repro.sharding.rules import constrain
 
 NEG_INF = -1e30

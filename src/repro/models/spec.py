@@ -9,7 +9,6 @@ from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.sharding.rules import ShardingRules
 

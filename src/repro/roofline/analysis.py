@@ -17,7 +17,6 @@ and we count output bytes per op with an all-reduce x2 multiplier
 from __future__ import annotations
 
 import re
-from collections import Counter
 from dataclasses import dataclass, field
 
 # TPU v5e per-chip hardware constants (per assignment).

@@ -16,7 +16,7 @@ sequential-object-stream case.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -68,6 +68,21 @@ class ServeEngine:
         self._decode = jax.jit(
             lambda p, ids, caches, pos: model.decode_step(p, ids, caches, pos)
         )
+
+    @classmethod
+    def from_store(cls, model: Model, store, prefix: str, template, *,
+                   policy=None, step: int | None = None, max_batch: int = 8,
+                   pad_id: int = 0) -> "ServeEngine":
+        """Cold-start an engine from checkpointed weights in an object
+        store, streamed through the `PrefetchFS` facade: pass
+        ``policy=IOPolicy(engine="rolling", depth=...)`` to overlap leaf
+        fetches with `device_put` (serving cold-start is the paper's
+        sequential multi-object stream)."""
+        from repro.ckpt.manager import restore_checkpoint
+
+        params, _ = restore_checkpoint(store, prefix, template, step=step,
+                                       policy=policy)
+        return cls(model, params, max_batch=max_batch, pad_id=pad_id)
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)

@@ -220,7 +220,6 @@ def test_full_configs_match_assignment():
 
 def test_param_counts_match_billing():
     """Full-config parameter counts land near the names on the tin."""
-    import math
 
     expect_b = {
         "command-r-plus-104b": (95, 115),

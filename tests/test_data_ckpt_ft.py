@@ -21,7 +21,6 @@ from repro.data import (
     LazyTrkReader,
     LoaderConfig,
     PrefetchingDataLoader,
-    TokenStreamReader,
     iter_streamlines_multi,
     synth_token_shard,
     synth_trk,
@@ -30,7 +29,6 @@ from repro.data import (
 from repro.core.rolling import RollingPrefetchFile, RollingPrefetcher
 from repro.ft import RestartManager, run_with_restarts
 from repro.store import LinkModel, MemTier, SimS3Store
-from repro.store.base import ObjectMeta
 
 
 def make_store(objects: dict[str, bytes], **kw) -> SimS3Store:
@@ -317,8 +315,9 @@ class TestElastic:
         store = make_store({})
         state = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
         save_checkpoint(store, "ckpt", 1, state)
-        mesh = jax.make_mesh((1,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh_compat
+
+        mesh = make_mesh_compat((1,), ("data",))
         template = {
             "w": jax.ShapeDtypeStruct(
                 (8, 8), jnp.float32,

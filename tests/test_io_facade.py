@@ -1,0 +1,393 @@
+"""PrefetchFS facade tests: registry dispatch, policy overrides, stats
+aggregation, deprecation shims (byte-identical vs. the old constructors),
+and the thread-safety fixes in the rolling engine."""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import pytest
+
+from repro.core.rolling import PrefetchStats, RollingPrefetchFile, RollingPrefetcher
+from repro.core.sequential import SequentialFile
+from repro.data.loader import LoaderConfig, PrefetchingDataLoader
+from repro.io import (
+    DirectReader,
+    IOPolicy,
+    PrefetchFS,
+    Reader,
+    available_engines,
+    register_reader,
+)
+from repro.io import registry as io_registry
+from repro.store import LinkModel, MemTier, SimS3Store
+from repro.store.base import ObjectMeta, ObjectStore, StoreError, TransientStoreError
+
+
+def payload(n: int, seed: int = 0) -> bytes:
+    return bytes((i * 31 + seed * 7) % 256 for i in range(n))
+
+
+def make_store(objects: dict[str, bytes], **kw) -> SimS3Store:
+    store = SimS3Store(link=LinkModel(**kw))
+    for k, v in objects.items():
+        store.backing.put(k, v)
+    return store
+
+
+def metas(store) -> list[ObjectMeta]:
+    return store.backing.list_objects()
+
+
+OBJECTS = {f"f{i}": payload(1500 + 37 * i, seed=i) for i in range(3)}
+WANT = b"".join(OBJECTS[m.key] for m in
+                sorted((ObjectMeta(k, len(v)) for k, v in OBJECTS.items()),
+                       key=lambda m: m.key))
+
+
+# --------------------------------------------------------------------------- #
+# registry dispatch
+# --------------------------------------------------------------------------- #
+class TestRegistry:
+    def test_builtin_engines_registered(self):
+        assert {"rolling", "sequential", "direct"} <= set(available_engines())
+
+    def test_dispatch_returns_engine_types(self):
+        store = make_store(OBJECTS)
+        fs = PrefetchFS(store, policy=IOPolicy(blocksize=512,
+                                               eviction_interval_s=0.01))
+        rolling = fs.open_many(metas(store))
+        sequential = fs.open_many(metas(store), engine="sequential")
+        direct = fs.open_many(metas(store), engine="direct")
+        try:
+            assert isinstance(rolling, RollingPrefetchFile)
+            assert isinstance(sequential, SequentialFile)
+            assert isinstance(direct, DirectReader)
+            for reader in (rolling, sequential, direct):
+                assert isinstance(reader, Reader)
+        finally:
+            fs.close()
+
+    def test_unknown_engine_raises(self):
+        store = make_store(OBJECTS)
+        fs = PrefetchFS(store)
+        with pytest.raises(ValueError, match="unknown reader engine"):
+            fs.open_many(metas(store), engine="bogus")
+
+    def test_new_engine_plugs_in_without_touching_call_sites(self):
+        @register_reader("test-direct-alias")
+        def _factory(store, files, tiers, policy):
+            return DirectReader(store, files)
+
+        try:
+            store = make_store(OBJECTS)
+            fs = PrefetchFS(store, policy=IOPolicy(engine="test-direct-alias"))
+            with fs:
+                f = fs.open_many(metas(store))
+                assert f.read() == WANT
+        finally:
+            io_registry._REGISTRY.pop("test-direct-alias")
+
+    def test_duplicate_registration_rejected(self):
+        with pytest.raises(ValueError, match="already registered"):
+            register_reader("rolling")(lambda *a: None)
+
+
+# --------------------------------------------------------------------------- #
+# IOPolicy
+# --------------------------------------------------------------------------- #
+class TestIOPolicy:
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            IOPolicy(blocksize=0)
+        with pytest.raises(ValueError):
+            IOPolicy(depth=0)
+
+    def test_from_config_mapping_ignores_unknown_keys(self):
+        p = IOPolicy.from_config(
+            {"engine": "sequential", "blocksize": 123, "bogus_key": 1},
+            depth=3,
+        )
+        assert p.engine == "sequential"
+        assert p.blocksize == 123
+        assert p.depth == 3
+
+    def test_from_config_object_attributes(self):
+        class Cfg:
+            engine = "direct"
+            blocksize = 777
+            unrelated = "x"
+
+        p = IOPolicy.from_config(Cfg())
+        assert (p.engine, p.blocksize) == ("direct", 777)
+
+    def test_per_open_override_does_not_mutate_fs_policy(self):
+        store = make_store(OBJECTS)
+        fs = PrefetchFS(store, policy=IOPolicy(engine="rolling", blocksize=512,
+                                               eviction_interval_s=0.01))
+        with fs:
+            f = fs.open_many(metas(store), engine="sequential", blocksize=64)
+            assert isinstance(f, SequentialFile)
+            assert f.plan.blocksize == 64
+            assert fs.policy.engine == "rolling"
+            assert fs.policy.blocksize == 512
+
+
+# --------------------------------------------------------------------------- #
+# reads through the facade
+# --------------------------------------------------------------------------- #
+class TestFacadeReads:
+    @pytest.mark.parametrize("engine", ["rolling", "sequential", "direct"])
+    def test_engines_byte_identical(self, engine):
+        store = make_store(OBJECTS)
+        fs = PrefetchFS(store, policy=IOPolicy(engine=engine, blocksize=256,
+                                               eviction_interval_s=0.01))
+        with fs:
+            assert fs.open_many(metas(store)).read() == WANT
+
+    def test_open_single_key_resolves_size(self):
+        store = make_store(OBJECTS)
+        fs = PrefetchFS(store, policy=IOPolicy(engine="direct"))
+        with fs:
+            f = fs.open("f1")
+            assert f.size == len(OBJECTS["f1"])
+            assert f.read() == OBJECTS["f1"]
+
+    def test_open_with_list_delegates_to_open_many(self):
+        store = make_store(OBJECTS)
+        fs = PrefetchFS(store, policy=IOPolicy(engine="sequential", blocksize=256))
+        with fs:
+            assert fs.open(metas(store)).read() == WANT
+
+    def test_default_tiers_built_on_demand_and_swept_on_close(self):
+        store = make_store(OBJECTS)
+        fs = PrefetchFS(store, policy=IOPolicy(engine="rolling", blocksize=256,
+                                               eviction_interval_s=0.01,
+                                               tier_capacity=8192))
+        assert fs.tiers == []          # no tier until a rolling open needs one
+        f = fs.open_many(metas(store))
+        assert len(fs.tiers) == 1
+        assert fs.tiers[0].capacity == 8192
+        f.read()
+        fs.close()
+        assert fs.tiers[0].used == 0   # final sweep cleaned everything
+
+    def test_backward_seek_direct_fallback_through_fs(self):
+        store = make_store({"a": payload(1024)})
+        fs = PrefetchFS(store, policy=IOPolicy(engine="rolling", blocksize=128,
+                                               eviction_interval_s=0.001))
+        with fs:
+            f = fs.open("a")
+            first = f.read(512)
+            time.sleep(0.1)   # let eviction claim consumed blocks
+            f.seek(0)
+            assert f.read(512) == first
+            assert f.stats.direct_reads >= 1
+
+    def test_stats_aggregate_across_engines(self):
+        store = make_store(OBJECTS)
+        fs = PrefetchFS(store, policy=IOPolicy(blocksize=256,
+                                               eviction_interval_s=0.01))
+        with fs:
+            fs.open_many(metas(store)).read()
+            fs.open_many(metas(store), engine="sequential").read()
+        snap = fs.stats().snapshot()
+        assert snap["opens"] == 2
+        assert set(snap["per_engine"]) == {"rolling", "sequential"}
+        assert snap["totals"]["bytes_read"] == 2 * len(WANT)
+        assert snap["per_engine"]["rolling"]["bytes_read"] == len(WANT)
+
+    def test_closed_readers_fold_into_stats_without_accumulating(self):
+        """Per-epoch reopen loops must not retain dead reader objects:
+        closed readers are pruned on the next open, but their stats stay
+        in the aggregate."""
+        store = make_store(OBJECTS)
+        fs = PrefetchFS(store, policy=IOPolicy(engine="sequential",
+                                               blocksize=256))
+        with fs:
+            for _ in range(5):
+                f = fs.open_many(metas(store))
+                f.read()
+                f.close()
+            assert len(fs._readers) <= 1   # dead epochs pruned
+            snap = fs.stats().snapshot()
+        assert snap["opens"] == 5
+        assert snap["totals"]["bytes_read"] == 5 * len(WANT)
+
+    def test_closed_fs_rejects_open(self):
+        store = make_store(OBJECTS)
+        fs = PrefetchFS(store)
+        fs.close()
+        with pytest.raises(ValueError, match="closed PrefetchFS"):
+            fs.open("f0")
+
+
+# --------------------------------------------------------------------------- #
+# deprecation shims: warn AND stay byte-identical
+# --------------------------------------------------------------------------- #
+class TestDeprecationShims:
+    def test_rolling_open_classmethod(self):
+        store = make_store(OBJECTS)
+        with pytest.warns(DeprecationWarning, match="RollingPrefetchFile.open"):
+            f = RollingPrefetchFile.open(
+                store, metas(store), [MemTier(8192)], 256,
+                eviction_interval_s=0.01,
+            )
+        assert isinstance(f, RollingPrefetchFile)
+        with f:
+            old = f.read()
+
+        store = make_store(OBJECTS)
+        fs = PrefetchFS(store, policy=IOPolicy(engine="rolling", blocksize=256,
+                                               eviction_interval_s=0.01),
+                        tiers=[MemTier(8192)])
+        with fs:
+            new = fs.open_many(metas(store)).read()
+        assert old == new == WANT
+
+    def test_loader_mode_kwarg(self):
+        store = make_store(OBJECTS)
+        cfg = LoaderConfig(seq_len=8, batch_size=2, mode="sequential",
+                           blocksize=256)
+        with pytest.warns(DeprecationWarning, match="LoaderConfig"):
+            loader = PrefetchingDataLoader(store, metas(store),
+                                           [MemTier(1 << 20)], cfg)
+        loader.close()
+
+    def test_loader_mode_and_policy_paths_identical(self):
+        import numpy as np
+
+        from repro.data import synth_token_shard
+
+        rng = np.random.default_rng(3)
+        objects = {f"tok{i}.bin": synth_token_shard(rng, 4000)
+                   for i in range(2)}
+        out = {}
+        for name, kw in [
+            ("legacy", dict(mode="rolling", blocksize=4096)),
+            ("policy", dict(policy=IOPolicy(engine="rolling", blocksize=4096,
+                                            eviction_interval_s=0.2))),
+        ]:
+            store = make_store(objects)
+            cfg = LoaderConfig(seq_len=64, batch_size=2, **kw)
+            loader = PrefetchingDataLoader(store, metas(store),
+                                           [MemTier(1 << 20)], cfg)
+            out[name] = [b for b in loader.batches(max_batches=3)]
+            loader.close()
+        for (i1, l1), (i2, l2) in zip(out["legacy"], out["policy"]):
+            np.testing.assert_array_equal(i1, i2)
+            np.testing.assert_array_equal(l1, l2)
+
+    def test_restore_mode_kwarg(self):
+        import jax
+        import numpy as np
+
+        from repro.ckpt import restore_checkpoint, save_checkpoint
+
+        state = {"w": np.arange(64, dtype=np.float32).reshape(8, 8),
+                 "step": np.int32(7)}
+        store = make_store({})
+        save_checkpoint(store, "ckpt", 1, state)
+        with pytest.warns(DeprecationWarning, match="restore_checkpoint"):
+            legacy, _ = restore_checkpoint(store, "ckpt", state,
+                                           mode="sequential")
+        modern, _ = restore_checkpoint(
+            store, "ckpt", state, policy=IOPolicy(engine="sequential"))
+        for a, b in zip(jax.tree.leaves(legacy), jax.tree.leaves(modern)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------------------------------- #
+# rolling-engine thread-safety fixes
+# --------------------------------------------------------------------------- #
+class _SlowFailThenSlowSuccessStore(ObjectStore):
+    """First request sleeps then fails; later requests sleep longer and
+    succeed — the exact interleaving of the hedged-fetch race (primary
+    errors while the launched secondary is still in flight)."""
+
+    def __init__(self, data: bytes) -> None:
+        self.data = data
+        self.calls = 0
+        self._lock = threading.Lock()
+
+    def list_objects(self, prefix: str = ""):
+        return [ObjectMeta("a", len(self.data))]
+
+    def size(self, key: str) -> int:
+        return len(self.data)
+
+    def get_range(self, key: str, start: int, end: int) -> bytes:
+        with self._lock:
+            self.calls += 1
+            call = self.calls
+        if call == 1:
+            time.sleep(0.03)
+            raise TransientStoreError("primary straggler fails late")
+        time.sleep(0.05)
+        return self.data[start:end]
+
+    def put(self, key: str, data: bytes) -> None:
+        raise NotImplementedError
+
+    def delete(self, key: str) -> None:
+        raise NotImplementedError
+
+
+class TestRollingThreadSafety:
+    def test_hedge_waits_for_inflight_secondary(self):
+        """The failed primary must not raise while the hedged secondary is
+        still in flight: with retries disabled, only the secondary's success
+        can produce the bytes."""
+        data = payload(512)
+        store = _SlowFailThenSlowSuccessStore(data)
+        pf = RollingPrefetcher(
+            store, [ObjectMeta("a", len(data))], [MemTier(4096)],
+            blocksize=512, hedge_timeout_s=0.005, max_retries=0,
+            eviction_interval_s=0.01,
+        )
+        with pf:
+            assert pf.read_range(0, len(data)) == data
+        assert pf.stats.hedges >= 1
+
+    def test_hedge_both_attempts_fail_raises(self):
+        data = payload(256)
+        store = make_store({"a": data}, latency_s=0.02)
+        store.link.fail_next(100)
+        fs = PrefetchFS(store, policy=IOPolicy(
+            engine="rolling", blocksize=256, hedge_timeout_s=0.005,
+            max_retries=1, retry_backoff_s=0.001, eviction_interval_s=0.01,
+        ))
+        with fs:
+            f = fs.open_many(metas(store))
+            with pytest.raises(StoreError):
+                f.read()
+
+    def test_stats_bump_is_thread_safe(self):
+        stats = PrefetchStats()
+        n_threads, n_iters = 8, 2000
+
+        def worker():
+            for _ in range(n_iters):
+                stats.bump(retries=1, fetch_s=0.5)
+
+        threads = [threading.Thread(target=worker) for _ in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert stats.retries == n_threads * n_iters
+        assert stats.fetch_s == pytest.approx(0.5 * n_threads * n_iters)
+
+    def test_snapshot_is_consistent_under_concurrent_fetches(self):
+        objects = {f"f{i}": payload(2048, seed=i) for i in range(4)}
+        store = make_store(objects, latency_s=0.001)
+        fs = PrefetchFS(store, policy=IOPolicy(engine="rolling", blocksize=256,
+                                               depth=4,
+                                               eviction_interval_s=0.01))
+        with fs:
+            f = fs.open_many(metas(store))
+            assert f.read() == b"".join(objects[m.key] for m in metas(store))
+            snap = f.stats.snapshot()
+        assert snap["bytes_fetched"] == sum(len(v) for v in objects.values())
+        assert "_lock" not in snap

@@ -4,7 +4,6 @@ single-request decoding."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
