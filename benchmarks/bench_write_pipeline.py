@@ -1,0 +1,203 @@
+"""Write-path A/B: synchronous ``store.put`` vs the PrefetchFS write-behind
+pipeline, on the scaled-Table-I simulated S3 store.
+
+Two scenarios, mirroring the read-side benchmarks:
+
+  * ``stream`` — a producer emits fixed-size chunks with per-chunk compute
+    (the paper's pipeline run in reverse): the sync arm serializes
+    everything then issues one blocking ``put``; the write-behind arm
+    writes chunks as they are produced, so part uploads overlap compute
+    and the wall clock approaches max(T_comp, T_cloud).
+  * ``ckpt`` — a many-leaf checkpoint: the sync arm replays the legacy
+    per-leaf blocking ``put`` loop; the write-behind arm is
+    ``save_checkpoint(policy=IOPolicy(write_depth=...))``. Both arms'
+    stored leaf bytes are asserted identical.
+
+Emits ``name,us_per_call,derived`` CSV rows (like every other benchmark)
+and writes the full A/B record to ``BENCH_write.json`` so CI tracks the
+write-path speedup over time.
+
+  PYTHONPATH=src python -m benchmarks.bench_write_pipeline [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import S3_BW, S3_LATENCY, emit, store_uri
+from repro.ckpt.manager import save_checkpoint
+from repro.io import IOPolicy, PrefetchFS, open_store
+
+
+def _median(times: list[float]) -> float:
+    return float(np.median(times))
+
+
+def _chunk(i: int, nbytes: int) -> bytes:
+    return bytes(((i * 131) + j * 31) % 256 for j in range(nbytes))
+
+
+# --------------------------------------------------------------------------- #
+# scenario 1: chunked producer stream
+# --------------------------------------------------------------------------- #
+def bench_stream(n_chunks: int, chunk_bytes: int, t_comp_s: float,
+                 write_depth: int, reps: int) -> dict:
+    uri = store_uri(bucket="bench-write")
+    chunks = [_chunk(i, chunk_bytes) for i in range(n_chunks)]
+    want = b"".join(chunks)
+
+    def produce():
+        for c in chunks:
+            time.sleep(t_comp_s)   # simulated per-chunk compute
+            yield c
+
+    def run_sync() -> float:
+        store = open_store(uri, fresh=True)
+        t0 = time.perf_counter()
+        buf = bytearray()
+        for c in produce():
+            buf += c
+        store.put("stream/out", bytes(buf))
+        dt = time.perf_counter() - t0
+        assert store.backing.get("stream/out") == want
+        return dt
+
+    last_stats: dict = {}
+
+    def run_write_behind() -> float:
+        store = open_store(uri, fresh=True)
+        fs = PrefetchFS(store, policy=IOPolicy(blocksize=chunk_bytes,
+                                               write_depth=write_depth))
+        t0 = time.perf_counter()
+        w = fs.open_write("stream/out")
+        for c in produce():
+            w.write(c)
+        w.close()
+        dt = time.perf_counter() - t0
+        last_stats.update(w.stats.snapshot())
+        fs.close()
+        assert store.backing.get("stream/out") == want
+        return dt
+
+    t_sync = _median([run_sync() for _ in range(reps)])
+    t_wb = _median([run_write_behind() for _ in range(reps)])
+    speedup = t_sync / t_wb
+    emit("write_stream_sync", t_sync * 1e6, f"bytes={len(want)}")
+    emit("write_stream_write_behind", t_wb * 1e6,
+         f"depth={write_depth};speedup={speedup:.2f}x")
+    return dict(
+        sync_s=t_sync,
+        write_behind_s=t_wb,
+        speedup=speedup,
+        writer_stats=last_stats,
+        params=dict(n_chunks=n_chunks, chunk_bytes=chunk_bytes,
+                    t_comp_s=t_comp_s, write_depth=write_depth, reps=reps),
+    )
+
+
+# --------------------------------------------------------------------------- #
+# scenario 2: many-leaf checkpoint save
+# --------------------------------------------------------------------------- #
+def bench_ckpt(n_leaves: int, leaf_bytes: int, part_bytes: int,
+               write_depth: int, reps: int) -> dict:
+    uri = store_uri(bucket="bench-ckpt")
+    rng = np.random.default_rng(0)
+    state = {
+        f"w{i:03d}": rng.integers(0, 255, leaf_bytes, dtype=np.uint8)
+        for i in range(n_leaves)
+    }
+
+    def legacy_sync_save(store) -> None:
+        # The pre-facade save path: blocking per-leaf put, manifest last.
+        entries = []
+        for idx, (_, arr) in enumerate(sorted(state.items())):
+            key = f"ckpt/step_{1:08d}/{idx:06d}.raw"
+            store.put(key, arr.tobytes())
+            entries.append(dict(key=key, shape=list(arr.shape),
+                                dtype=str(arr.dtype)))
+        store.put(f"ckpt/step_{1:08d}/MANIFEST.json",
+                  json.dumps(dict(step=1, leaves=entries)).encode())
+
+    def run_sync():
+        store = open_store(uri, fresh=True)
+        t0 = time.perf_counter()
+        legacy_sync_save(store)
+        return time.perf_counter() - t0, store
+
+    def run_write_behind():
+        store = open_store(uri, fresh=True)
+        policy = IOPolicy(blocksize=part_bytes, write_depth=write_depth)
+        t0 = time.perf_counter()
+        save_checkpoint(store, "ckpt", 1, state, policy=policy)
+        return time.perf_counter() - t0, store
+
+    sync_times, wb_times = [], []
+    sync_store = wb_store = None
+    for _ in range(reps):
+        dt, sync_store = run_sync()
+        sync_times.append(dt)
+        dt, wb_store = run_write_behind()
+        wb_times.append(dt)
+
+    # Acceptance: write-behind leaves are byte-identical to the sync path.
+    for idx in range(n_leaves):
+        key = f"ckpt/step_{1:08d}/{idx:06d}.raw"
+        assert sync_store.backing.get(key) == wb_store.backing.get(key), key
+
+    t_sync, t_wb = _median(sync_times), _median(wb_times)
+    speedup = t_sync / t_wb
+    emit("write_ckpt_sync", t_sync * 1e6, f"leaves={n_leaves}")
+    emit("write_ckpt_write_behind", t_wb * 1e6,
+         f"depth={write_depth};speedup={speedup:.2f}x")
+    return dict(
+        sync_s=t_sync,
+        write_behind_s=t_wb,
+        speedup=speedup,
+        byte_identical=True,
+        params=dict(n_leaves=n_leaves, leaf_bytes=leaf_bytes,
+                    part_bytes=part_bytes, write_depth=write_depth,
+                    reps=reps),
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI (seconds, not minutes)")
+    ap.add_argument("--out", default="BENCH_write.json")
+    ap.add_argument("--write-depth", type=int, default=4)
+    args = ap.parse_args()
+
+    if args.smoke:
+        stream = bench_stream(n_chunks=16, chunk_bytes=512 << 10,
+                              t_comp_s=0.01, write_depth=args.write_depth,
+                              reps=2)
+        ckpt = bench_ckpt(n_leaves=8, leaf_bytes=96 << 10,
+                          part_bytes=256 << 10, write_depth=args.write_depth,
+                          reps=2)
+    else:
+        stream = bench_stream(n_chunks=24, chunk_bytes=512 << 10,
+                              t_comp_s=0.01, write_depth=args.write_depth,
+                              reps=3)
+        ckpt = bench_ckpt(n_leaves=16, leaf_bytes=192 << 10,
+                          part_bytes=256 << 10, write_depth=args.write_depth,
+                          reps=3)
+
+    record = dict(
+        stream=stream,
+        ckpt=ckpt,
+        link=dict(latency_s=S3_LATENCY, bandwidth_Bps=S3_BW),
+        smoke=bool(args.smoke),
+    )
+    with open(args.out, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"wrote {args.out}: stream {stream['speedup']:.2f}x, "
+          f"ckpt {ckpt['speedup']:.2f}x (write-behind vs sync put)")
+
+
+if __name__ == "__main__":
+    main()

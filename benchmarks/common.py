@@ -23,7 +23,7 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.data.trk import synth_trk
-from repro.io import IOPolicy, PrefetchFS
+from repro.io import IOPolicy, PrefetchFS, open_store
 from repro.store import LinkModel, MemTier, SimS3Store
 from repro.store.base import ObjectMeta
 
@@ -67,12 +67,19 @@ def make_trk_dataset(n_files: int, streamlines_per_file: int = 4000,
     return TrkDataset(objects)
 
 
+def store_uri(*, latency: float = S3_LATENCY, bandwidth: float = S3_BW,
+              bucket: str = "s3") -> str:
+    """The registry URI for a scaled-Table-I simulated S3 bucket."""
+    return (f"sims3://{bucket}?latency_ms={latency * 1e3:g}"
+            f"&bw_mbps={bandwidth / 1e6:g}")
+
+
 def fresh_store(ds: TrkDataset, *, latency: float = S3_LATENCY,
                 bandwidth: float = S3_BW) -> SimS3Store:
-    """A new store + link per measurement so A/B runs never share link
-    reservation state."""
-    store = SimS3Store(link=LinkModel(latency_s=latency, bandwidth_Bps=bandwidth,
-                                      name="s3"))
+    """A new store + link per measurement (``open_store(..., fresh=True)``)
+    so A/B runs never share link reservation state."""
+    store = open_store(store_uri(latency=latency, bandwidth=bandwidth),
+                       fresh=True)
     for k, v in ds.objects.items():
         store.backing.put(k, v)
     return store

@@ -15,14 +15,14 @@ if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", "")
 import jax
 import numpy as np
 
-from repro.ckpt import restore_checkpoint, save_checkpoint
+from repro.ckpt import latest_step, restore_checkpoint, save_checkpoint
 from repro.configs import get_config
-from repro.io import IOPolicy
+from repro.ft import snapshot_resharded
+from repro.io import IOPolicy, open_store
 from repro.launch.mesh import make_mesh_compat
 from repro.models import make_model
 from repro.models.spec import param_shardings
 from repro.sharding.rules import ShardingRules, TRAIN_RULES
-from repro.store import LinkModel, SimS3Store
 
 
 def mesh_of(data: int, model: int) -> jax.sharding.Mesh:
@@ -44,8 +44,9 @@ def main() -> None:
             lambda x, s: jax.device_put(x, s) if s else x, params, shardings_a
         )
 
-    store = SimS3Store(link=LinkModel(latency_s=0.002, bandwidth_Bps=200e6))
-    save_checkpoint(store, "elastic", 0, params)
+    store = open_store("sims3://elastic?latency_ms=2&bw_mbps=200")
+    save_checkpoint(store, "elastic", 0, params,
+                    policy=IOPolicy(write_depth=4))
     print(f"saved on mesh {dict(zip(mesh_a.axis_names, mesh_a.devices.shape))}")
 
     # --- restore onto a DIFFERENT topology: 2 x 4 ------------------------------
@@ -73,7 +74,12 @@ def main() -> None:
     )
     print(f"restored onto mesh {dict(zip(mesh_b.axis_names, mesh_b.devices.shape))}: "
           f"values identical, {n_resharded} sharded leaves re-laid-out")
-    print("OK: elastic restore verified")
+
+    # --- snapshot the resized job so the reshard is immediately crash-safe -----
+    snapshot_resharded(store, "elastic", 1, restored, shardings_b,
+                       policy=IOPolicy(write_depth=4))
+    assert latest_step(store, "elastic") == 1
+    print("OK: elastic restore verified; post-reshard snapshot committed")
 
 
 if __name__ == "__main__":

@@ -15,12 +15,13 @@ import numpy as np
 
 from repro.core import cost_model
 from repro.data.trk import iter_streamlines_multi, synth_trk
-from repro.io import IOPolicy, PrefetchFS
-from repro.store import LinkModel, MemTier, SimS3Store
+from repro.io import IOPolicy, PrefetchFS, open_store
+from repro.store import MemTier
 
 # --- 1. a bucket of .trk shards behind a simulated S3 link ------------------
 LATENCY, BANDWIDTH = 0.02, 45e6           # scaled Table I constants
 BLOCK = 256 << 10
+BUCKET = f"sims3://hydi?latency_ms={LATENCY * 1e3:g}&bw_mbps={BANDWIDTH / 1e6:g}"
 
 rng = np.random.default_rng(0)
 objects = {f"hydi/shard{i}.trk": synth_trk(rng, 4000, mean_points=15)
@@ -28,9 +29,11 @@ objects = {f"hydi/shard{i}.trk": synth_trk(rng, 4000, mean_points=15)
 
 
 def fresh_store():
-    store = SimS3Store(link=LinkModel(latency_s=LATENCY, bandwidth_Bps=BANDWIDTH))
+    # fresh=True: each A/B arm gets its own link so neither inherits the
+    # other's bandwidth-reservation state.
+    store = open_store(BUCKET, fresh=True)
     for k, v in objects.items():
-        store.backing.put(k, v)
+        store.backing.put(k, v)   # seed the substrate (no simulated cost)
     return store
 
 

@@ -12,18 +12,18 @@ import numpy as np
 
 from repro.ckpt import restore_checkpoint, save_checkpoint
 from repro.configs import get_config
-from repro.io import IOPolicy
+from repro.io import IOPolicy, open_store
 from repro.models import make_model
 from repro.models.quant import quantize_params
 from repro.serve import Request, ServeEngine
-from repro.store import LinkModel, SimS3Store
 
 cfg = get_config("smollm-135m").reduced()
 model = make_model(cfg)
 
 # --- cold start: weights stream from the object store ------------------------
-store = SimS3Store(link=LinkModel(latency_s=0.01, bandwidth_Bps=80e6))
-save_checkpoint(store, "weights", 0, model.init(jax.random.key(0)))
+store = open_store("sims3://weights?latency_ms=10&bw_mbps=80")
+save_checkpoint(store, "weights", 0, model.init(jax.random.key(0)),
+                policy=IOPolicy(write_depth=4))
 t0 = time.perf_counter()
 params, _ = restore_checkpoint(
     store, "weights", model.init(jax.random.key(0)),

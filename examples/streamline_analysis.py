@@ -12,8 +12,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data.trk import iter_streamlines_multi, synth_trk
-from repro.io import IOPolicy, PrefetchFS
-from repro.store import LinkModel, MemTier, SimS3Store
+from repro.io import IOPolicy, PrefetchFS, open_store
+from repro.store import MemTier
 
 rng = np.random.default_rng(1)
 objects = {f"hydi/shard{i}.trk": synth_trk(rng, 3000, mean_points=15)
@@ -21,7 +21,7 @@ objects = {f"hydi/shard{i}.trk": synth_trk(rng, 3000, mean_points=15)
 
 
 def open_stream(engine: str):
-    store = SimS3Store(link=LinkModel(latency_s=0.02, bandwidth_Bps=45e6))
+    store = open_store("sims3://hydi?latency_ms=20&bw_mbps=45", fresh=True)
     for k, v in objects.items():
         store.backing.put(k, v)
     fs = PrefetchFS(

@@ -16,9 +16,9 @@ import numpy as np
 from repro.configs import get_config
 from repro.data import LoaderConfig, PrefetchingDataLoader, synth_token_shard
 from repro.ft import RestartManager, run_with_restarts
-from repro.io import IOPolicy
+from repro.io import IOPolicy, open_store
 from repro.models import make_model
-from repro.store import LinkModel, MemTier, SimS3Store
+from repro.store import MemTier
 from repro.train import AdamWConfig, StepConfig, build_train_step, init_train_state
 
 
@@ -36,12 +36,12 @@ def main() -> None:
           f"{args.steps} steps, crash injected at step {args.steps // 2}")
 
     rng = np.random.default_rng(0)
-    data_store = SimS3Store(link=LinkModel(latency_s=0.005, bandwidth_Bps=60e6))
+    data_store = open_store("sims3://data?latency_ms=5&bw_mbps=60", fresh=True)
     for i in range(6):
         data_store.backing.put(
             f"tok{i}.bin", synth_token_shard(rng, 400_000, cfg.vocab_size)
         )
-    ckpt_store = SimS3Store(link=LinkModel(latency_s=0.005, bandwidth_Bps=60e6))
+    ckpt_store = open_store("sims3://ckpt?latency_ms=5&bw_mbps=60", fresh=True)
 
     opt = AdamWConfig(lr=1e-3, total_steps=args.steps,
                       warmup_steps=args.steps // 10)
@@ -66,7 +66,9 @@ def main() -> None:
             cursor=cursor,
         )
 
-    mgr = RestartManager(ckpt_store, "e2e", ckpt_interval=20)
+    mgr = RestartManager(ckpt_store, "e2e", ckpt_interval=20,
+                         write_policy=IOPolicy(write_depth=4,
+                                               blocksize=256 << 10))
     result = run_with_restarts(
         total_steps=args.steps,
         make_initial_state=lambda: init_train_state(model, jax.random.key(0)),

@@ -121,6 +121,7 @@ class RollingPrefetcher:
         self._fetch = True            # the paper's shared `fetch` flag
         self._threads: list[threading.Thread] = []
         self._started = False
+        self._closed = False
         # Reader-side buffer of the current block: the application issues
         # many small reads (3 per streamline in the paper's Nibabel trace);
         # local storage is read once per block, small reads are served from
@@ -132,6 +133,14 @@ class RollingPrefetcher:
     # lifecycle
     # ------------------------------------------------------------------ #
     def start(self) -> None:
+        if self._closed:
+            # close() cleared the fetch flag and block/tier state; worker
+            # threads spawned now would exit immediately and the old ones
+            # would be double-joined — refuse loudly instead.
+            raise RuntimeError(
+                "RollingPrefetcher cannot restart after close(); "
+                "open a new reader instead"
+            )
         if self._started:
             return
         self._started = True
@@ -147,12 +156,15 @@ class RollingPrefetcher:
 
     def close(self) -> None:
         with self._cond:
+            if self._closed:
+                return
+            self._closed = True
             self._fetch = False
             self._cond.notify_all()
         for t in self._threads:
             t.join(timeout=30.0)
+        self._threads = []
         self._final_sweep()
-        self._started = False
 
     def __enter__(self) -> "RollingPrefetcher":
         self.start()

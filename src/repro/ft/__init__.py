@@ -1,9 +1,10 @@
 from repro.ft.restart import RestartManager, TrainLoopResult, run_with_restarts
-from repro.ft.elastic import reshard_tree
+from repro.ft.elastic import reshard_tree, snapshot_resharded
 
 __all__ = [
     "RestartManager",
     "TrainLoopResult",
     "run_with_restarts",
     "reshard_tree",
+    "snapshot_resharded",
 ]

@@ -3,13 +3,16 @@
 Checkpoints store logical arrays (full shapes); restore targets carry the
 NEW topology's shardings, so growing 256 -> 512 chips (or shrinking after
 losing a pod) is a restore with a different rules/mesh pair — no format
-change. This module also reshards in-memory trees for mid-job elasticity.
+change. This module also reshards in-memory trees for mid-job elasticity
+and persists post-reshard snapshots through the write-behind checkpoint
+path so the (expensive) resize is immediately crash-safe.
 """
 
 from __future__ import annotations
 
 import jax
 
+from repro.io import IOPolicy
 from repro.models.spec import param_shardings
 from repro.sharding.rules import ShardingRules
 
@@ -24,3 +27,28 @@ def reshard_tree(tree, shardings):
 def reshard_params(params, spec_tree, rules: ShardingRules):
     """Re-shard a parameter tree onto `rules.mesh` per the declarative spec."""
     return reshard_tree(params, param_shardings(spec_tree, rules))
+
+
+def snapshot_resharded(
+    store,
+    prefix: str,
+    step: int,
+    tree,
+    shardings,
+    *,
+    extra: dict | None = None,
+    policy: IOPolicy | None = None,
+) -> dict:
+    """Reshard `tree` onto `shardings` and persist it as a checkpoint.
+
+    After an elastic resize the first post-reshard snapshot is the new
+    recovery point — losing it replays the whole resize. Uploads go
+    through the pipelined `save_checkpoint` (write-behind; manifest-last
+    commit), so the snapshot costs max(T_reshard, T_upload) instead of
+    their sum. `store` may be an `ObjectStore`, `PrefetchFS`, or URI.
+    """
+    from repro.ckpt.manager import save_checkpoint
+
+    resharded = reshard_tree(tree, shardings)
+    return save_checkpoint(store, prefix, step, resharded,
+                           extra=extra, policy=policy)

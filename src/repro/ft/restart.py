@@ -19,7 +19,7 @@ from repro.ckpt.manager import (
     restore_checkpoint,
 )
 from repro.data.loader import DataCursor
-from repro.io import IOPolicy
+from repro.io import IOPolicy, open_store
 from repro.store.base import ObjectStore
 from repro.utils import get_logger
 
@@ -28,10 +28,18 @@ log = get_logger("ft.restart")
 
 @dataclass
 class RestartManager:
-    store: ObjectStore
+    """`store` may be an `ObjectStore` or a registry URI
+    (``"sims3://ckpt?latency_ms=10"``); `write_policy` carries the
+    write-behind knobs for periodic snapshot saves."""
+
+    store: ObjectStore | str
     prefix: str
     ckpt_interval: int = 50
     keep_last: int = 3
+    write_policy: IOPolicy | None = None
+
+    def __post_init__(self) -> None:
+        self.store = open_store(self.store)
 
     def resume_point(self) -> int | None:
         return latest_step(self.store, self.prefix)
@@ -58,6 +66,7 @@ class RestartManager:
         return CheckpointManager(
             self.store, self.prefix,
             interval_steps=self.ckpt_interval, keep_last=self.keep_last,
+            policy=self.write_policy,
         )
 
 

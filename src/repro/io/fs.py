@@ -1,22 +1,27 @@
-"""PrefetchFS: one filesystem-style facade for every reader engine.
+"""PrefetchFS: one filesystem-style facade for reads AND writes.
 
 Following the S3Fs idiom the paper extends, applications hold a filesystem
-object and open file-like readers from it::
+object and open file-like readers and writers from it::
 
-    fs = PrefetchFS(store, policy=IOPolicy(engine="rolling", blocksize=8 << 20))
+    fs = PrefetchFS("sims3://bucket?latency_ms=40",       # URI or ObjectStore
+                    policy=IOPolicy(engine="rolling", blocksize=8 << 20))
     with fs:
         f = fs.open("bucket/key")              # one object
         g = fs.open_many(metas, depth=4)       # multi-object logical stream,
                                                # per-open policy override
-        ...
+        w = fs.open_write("out/key")           # write-behind upload pipeline
+        w.write(data); w.close()               # close() = durable publish
         print(fs.stats().snapshot())           # aggregated across all opens
 
 The facade owns cache-tier lifecycle (builds a bounded MemTier on demand
-when an engine needs one and none was supplied), dispatches
-``IOPolicy.engine`` through the reader registry, and aggregates per-reader
-statistics into one `FSStats` view. Training data loading, checkpoint
-restore, serving cold-start, and every A/B benchmark construct readers
-exclusively through this API.
+when an engine needs one and none was supplied), resolves store URIs
+through the store registry (``repro.io.open_store``), dispatches
+``IOPolicy.engine`` through the reader registry, runs one shared
+`UploadPool` for every write-behind `Writer`, and aggregates per-handle
+statistics into one `FSStats` view (writers fold in under the
+``"write-behind"`` engine name). Training data loading, checkpoint
+save/restore, serving cold-start, and every A/B benchmark construct their
+I/O exclusively through this API.
 """
 
 from __future__ import annotations
@@ -27,20 +32,26 @@ from typing import Iterable, Sequence
 
 from repro.io.policy import IOPolicy
 from repro.io.registry import available_engines, engine_spec
+from repro.io.stores import open_store
+from repro.io.write import UploadPool, Writer
 from repro.store.base import ObjectMeta, ObjectStore
 from repro.store.tiers import CacheTier, MemTier
 
 # Importing the engines module populates the registry with the built-ins.
 import repro.io.engines  # noqa: F401  (side-effect import)
 
+WRITE_ENGINE = "write-behind"   # per_engine stats bucket for writers
+
 
 @dataclass
 class FSStats:
-    """Aggregated I/O statistics across every reader a PrefetchFS opened.
+    """Aggregated I/O statistics across every reader and writer a
+    PrefetchFS opened.
 
     ``totals`` sums every numeric counter that any engine reports
-    (bytes_read, bytes_fetched, retries, hedges, direct_reads, ...);
-    ``per_engine`` keeps the same sums split by engine name.
+    (bytes_read, bytes_fetched, bytes_uploaded, retries, hedges, ...);
+    ``per_engine`` keeps the same sums split by engine name, with writers
+    under ``"write-behind"``.
     """
 
     opens: int = 0
@@ -60,21 +71,25 @@ class PrefetchFS:
 
     def __init__(
         self,
-        store: ObjectStore,
+        store: ObjectStore | str,
         policy: IOPolicy | None = None,
         tiers: Sequence[CacheTier] | None = None,
     ) -> None:
-        self.store = store
+        # `store` may be a URI ("mem://", "local:///path", "sims3://bucket")
+        # resolved through the store registry; same URI -> same instance.
+        self.store = open_store(store)
         self.policy = policy if policy is not None else IOPolicy()
         self._tiers: list[CacheTier] | None = (
             list(tiers) if tiers is not None else None
         )
         self._lock = threading.RLock()
-        self._readers: list[tuple[str, object]] = []
-        # Stats of already-closed readers, folded per engine so a loader
+        # Open readers AND writers, as (engine-name, handle) pairs.
+        self._handles: list[tuple[str, object]] = []
+        # Stats of already-closed handles, folded per engine so a loader
         # that reopens a stream every epoch doesn't accumulate dead reader
         # objects (see _prune_closed).
         self._folded: dict[str, dict] = {}
+        self._pool: UploadPool | None = None
         self._closed = False
 
     # ------------------------------------------------------------------ #
@@ -98,16 +113,22 @@ class PrefetchFS:
         """Open a list of objects as ONE logical sequential stream — the
         paper's multi-file case ("treating a list of files as a single
         file"). Returns a `Reader`."""
-        if self._closed:   # early check: skip store metadata round-trips
-            raise ValueError("open on closed PrefetchFS")
         pol = policy if policy is not None else self.policy
         if overrides:
             pol = pol.replace(**overrides)
         spec = engine_spec(pol.engine)
+        # Flag check BEFORE any store metadata round-trip, so an open on a
+        # closed (or closing) filesystem short-circuits without issuing
+        # store requests. Resolution itself stays outside the lock —
+        # holding it across store.size() would serialize every open and
+        # block stats()/close() behind simulated network latency.
+        with self._lock:
+            if self._closed:
+                raise ValueError("open on closed PrefetchFS")
         files = [self._resolve(k) for k in keys]
-        # The closed check, factory call, and registration happen under one
-        # lock so an open racing with close() either lands in close()'s
-        # sweep or observes the closed flag — never an orphaned reader.
+        # Re-check + factory call + registration under one lock: an open
+        # racing with close() either lands in close()'s sweep or observes
+        # the closed flag — never an orphaned reader.
         with self._lock:
             if self._closed:
                 raise ValueError("open on closed PrefetchFS")
@@ -119,8 +140,36 @@ class PrefetchFS:
                 use_tiers = []
             reader = spec.factory(self.store, files, use_tiers, pol)
             self._prune_closed()
-            self._readers.append((pol.engine, reader))
+            self._handles.append((pol.engine, reader))
         return reader
+
+    def open_write(self, key, *, policy: IOPolicy | None = None,
+                   tiers: Sequence[CacheTier] | None = None,
+                   **overrides) -> Writer:
+        """Open `key` for writing through the write-behind pipeline.
+
+        Returns a `Writer`: ``write()`` buffers into part-sized chunks
+        staged in the cache tiers, a shared pool of ``write_depth``
+        threads uploads parts in the background, ``flush()`` is a
+        durability barrier, and ``close()`` atomically publishes the
+        object. Keyword overrides (``blocksize=``, ``write_depth=``,
+        ``hedge_timeout_s=``, ...) apply to this writer only.
+        """
+        pol = policy if policy is not None else self.policy
+        if overrides:
+            pol = pol.replace(**overrides)
+        with self._lock:
+            if self._closed:
+                raise ValueError("open_write on closed PrefetchFS")
+            use_tiers = list(tiers) if tiers is not None \
+                else self._ensure_tiers(pol)
+            if self._pool is None:
+                self._pool = UploadPool()
+            self._pool.ensure(pol.write_depth)
+            writer = Writer(self.store, str(key), pol, use_tiers, self._pool)
+            self._prune_closed()
+            self._handles.append((WRITE_ENGINE, writer))
+        return writer
 
     def _resolve(self, key) -> ObjectMeta:
         if isinstance(key, ObjectMeta):
@@ -163,25 +212,26 @@ class PrefetchFS:
                 bucket[k] = bucket.get(k, 0) + v
 
     def _prune_closed(self) -> None:
-        """Fold the stats of closed readers into `_folded` and drop the
-        reader objects, so per-epoch reopen loops stay O(1) memory.
+        """Fold the stats of closed readers/writers into `_folded` and drop
+        the handle objects, so per-epoch reopen loops stay O(1) memory.
         Caller holds `_lock`."""
         live = []
-        for engine, reader in self._readers:
-            if getattr(reader, "closed", False):
-                self._fold_snapshot(self._folded.setdefault(engine, {}), reader)
+        for engine, handle in self._handles:
+            if getattr(handle, "closed", False):
+                self._fold_snapshot(self._folded.setdefault(engine, {}), handle)
             else:
-                live.append((engine, reader))
-        self._readers = live
+                live.append((engine, handle))
+        self._handles = live
 
     def stats(self) -> FSStats:
-        """Aggregate statistics across every reader opened so far (open or
-        closed); closed readers' stats persist in the folded totals."""
+        """Aggregate statistics across every reader and writer opened so
+        far (open or closed); closed handles' stats persist in the folded
+        totals (writers appear under the ``"write-behind"`` engine)."""
         with self._lock:
             per_engine = {k: dict(v) for k, v in self._folded.items()}
-            readers = list(self._readers)
-        for engine, reader in readers:
-            self._fold_snapshot(per_engine.setdefault(engine, {}), reader)
+            handles = list(self._handles)
+        for engine, handle in handles:
+            self._fold_snapshot(per_engine.setdefault(engine, {}), handle)
         out = FSStats(per_engine=per_engine)
         for bucket in per_engine.values():
             out.opens += bucket.get("opens", 0)
@@ -194,16 +244,29 @@ class PrefetchFS:
     # lifecycle
     # ------------------------------------------------------------------ #
     def close(self) -> None:
-        """Close every reader this filesystem opened (engines run their
-        final eviction sweep, so owned tiers end empty)."""
+        """Close every reader and writer this filesystem opened (engines
+        run their final eviction sweep so owned tiers end empty; writers
+        flush and publish), then shut down the upload pool. The first
+        writer-close failure is re-raised after everything is closed."""
         with self._lock:
             if self._closed:
                 return
             self._closed = True
-            readers = list(self._readers)
-        # Closing outside the lock: rolling close joins worker threads.
-        for _, reader in readers:
-            reader.close()
+            handles = list(self._handles)
+            pool = self._pool
+        # Closing outside the lock: rolling close joins worker threads and
+        # writer close blocks on its upload barrier.
+        first_err: Exception | None = None
+        for _, handle in handles:
+            try:
+                handle.close()
+            except Exception as e:   # noqa: BLE001 - re-raised below
+                if first_err is None:
+                    first_err = e
+        if pool is not None:
+            pool.close()
+        if first_err is not None:
+            raise first_err
 
     def __enter__(self) -> "PrefetchFS":
         return self

@@ -18,18 +18,22 @@ from typing import Any, Mapping
 
 @dataclass(frozen=True)
 class IOPolicy:
-    """Reader configuration shared by all engines.
+    """Reader *and* writer configuration shared by all engines.
 
     Fields consumed per engine:
       * ``rolling``    — blocksize, depth, eviction_interval_s, max_retries,
         retry_backoff_s, hedge_timeout_s, tier_capacity;
       * ``sequential`` — blocksize, cache_blocks;
-      * ``direct``     — none (pass-through range reads).
+      * ``direct``     — none (pass-through range reads);
+      * write-behind `Writer` (``PrefetchFS.open_write``) — blocksize (the
+        part size), write_depth, max_retries, retry_backoff_s,
+        hedge_timeout_s, tier_capacity (staging budget).
     """
 
     engine: str = "rolling"
     blocksize: int = 8 << 20
     depth: int = 1                      # concurrent prefetch streams
+    write_depth: int = 2                # concurrent write-behind part uploads
     eviction_interval_s: float = 5.0
     max_retries: int = 3
     retry_backoff_s: float = 0.05
@@ -43,6 +47,10 @@ class IOPolicy:
             raise ValueError(f"blocksize must be positive, got {self.blocksize}")
         if self.depth < 1:
             raise ValueError(f"depth must be >= 1, got {self.depth}")
+        if self.write_depth < 1:
+            raise ValueError(
+                f"write_depth must be >= 1, got {self.write_depth}"
+            )
         if self.max_retries < 0:
             raise ValueError(f"max_retries must be >= 0, got {self.max_retries}")
 

@@ -1,0 +1,486 @@
+"""Write-behind upload pipeline: the producer-side mirror of Rolling Prefetch.
+
+A `Writer` (returned by ``PrefetchFS.open_write``) buffers application
+writes into part-sized chunks (``IOPolicy.blocksize``), stages each sealed
+part in a local cache tier (the bounded staging budget doubles as
+backpressure), and hands it to a shared `UploadPool` whose
+``IOPolicy.write_depth`` background threads upload parts concurrently with
+ongoing application writes — ``max(T_compute, T_upload)`` instead of
+``T_compute + T_upload``, the paper's read-side pipeline run in reverse
+(cf. the successor user-space hierarchical-storage work, arXiv:2404.11556,
+and the checkpoint-stall analysis of arXiv:2108.06322).
+
+Durability contract:
+
+  * ``write()`` may return before bytes reach the store;
+  * ``flush()`` seals the current buffer as a part and blocks until every
+    sealed part is durably uploaded, raising the first upload error;
+  * ``close()`` flushes, then atomically publishes the object (multipart
+    ``complete()`` — or one background ``put`` when everything fit in a
+    single part, matching the legacy sync path request-for-request), so a
+    crashed writer never leaves a partially visible object;
+  * ``close_async()`` + ``join()`` split close into enqueue-publish and
+    barrier, so producers closing many writers (checkpoint save) overlap
+    the final round-trips instead of paying one per writer serially;
+  * ``abort()`` drops pending work and never publishes.
+
+Transient store faults retry with exponential backoff; an optional hedge
+(``IOPolicy.hedge_timeout_s``) duplicates a straggling part upload — puts
+to the same part index are idempotent, so taking the first copy that lands
+is safe. Both knobs reuse the rolling engine's straggler recipe.
+"""
+
+from __future__ import annotations
+
+import itertools
+import queue
+import threading
+import time
+from contextlib import suppress
+from dataclasses import dataclass, field
+from typing import Callable, Sequence
+
+from repro.io.policy import IOPolicy
+from repro.store.base import ObjectStore, StoreError, TransientStoreError
+from repro.store.tiers import CacheTier
+from repro.utils import get_logger
+
+log = get_logger("io.write")
+
+_WRITER_IDS = itertools.count()
+
+
+@dataclass
+class WriteStats:
+    """Counters mutated from the application thread and the upload pool;
+    same bump()/locked-snapshot discipline as the reader `PrefetchStats`."""
+
+    bytes_written: int = 0      # accepted from the application
+    bytes_uploaded: int = 0     # durably handed to the store
+    parts_uploaded: int = 0
+    put_requests: int = 0
+    retries: int = 0
+    hedges: int = 0
+    upload_s: float = 0.0       # cumulative time inside store calls
+    stage_wait_s: float = 0.0   # application blocked on staging backpressure
+    barrier_wait_s: float = 0.0  # flush()/close() waiting on in-flight parts
+    unstaged_parts: int = 0     # parts too big for any tier (carried in RAM)
+    _lock: threading.Lock = field(default_factory=threading.Lock,
+                                  repr=False, compare=False)
+
+    def bump(self, **deltas: int | float) -> None:
+        with self._lock:
+            for name, delta in deltas.items():
+                setattr(self, name, getattr(self, name) + delta)
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {k: v for k, v in self.__dict__.items()
+                    if not k.startswith("_")}
+
+
+class UploadPool:
+    """Shared pool of daemon threads draining part-upload jobs from every
+    writer of one `PrefetchFS`; grows on demand to the largest
+    ``write_depth`` any writer asked for."""
+
+    def __init__(self) -> None:
+        self._q: queue.Queue = queue.Queue()
+        self._threads: list[threading.Thread] = []
+        self._lock = threading.Lock()
+        self._closed = False
+
+    @property
+    def depth(self) -> int:
+        with self._lock:
+            return len(self._threads)
+
+    def ensure(self, depth: int) -> None:
+        with self._lock:
+            if self._closed:
+                raise ValueError("UploadPool is closed")
+            while len(self._threads) < depth:
+                t = threading.Thread(
+                    target=self._worker,
+                    name=f"fs-upload-{len(self._threads)}",
+                    daemon=True,
+                )
+                t.start()
+                self._threads.append(t)
+
+    def submit(self, job: Callable[[], None]) -> None:
+        with self._lock:
+            if self._closed:
+                raise ValueError("submit on closed UploadPool")
+        self._q.put(job)
+
+    def _worker(self) -> None:
+        while True:
+            job = self._q.get()
+            if job is None:
+                return
+            try:
+                job()
+            except BaseException:   # jobs capture their own errors; belt only
+                log.exception("upload job leaked an exception")
+
+    def close(self) -> None:
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            threads = list(self._threads)
+        for _ in threads:
+            self._q.put(None)
+        for t in threads:
+            t.join(timeout=30.0)
+
+
+class _Part:
+    """One sealed part awaiting upload: either staged in a tier (data is
+    read back at upload time) or carried inline when no tier can hold it."""
+
+    __slots__ = ("index", "size", "tier", "block_id", "data")
+
+    def __init__(self, index: int, size: int, tier: CacheTier | None,
+                 block_id: str | None, data: bytes | None) -> None:
+        self.index = index
+        self.size = size
+        self.tier = tier
+        self.block_id = block_id
+        self.data = data
+
+
+class Writer:
+    """Write-behind file-like object; construct via ``PrefetchFS.open_write``."""
+
+    def __init__(
+        self,
+        store: ObjectStore,
+        key: str,
+        policy: IOPolicy,
+        tiers: Sequence[CacheTier],
+        pool: UploadPool,
+    ) -> None:
+        self.store = store
+        self.key = key
+        self.policy = policy
+        self.tiers = list(tiers)
+        self.stats = WriteStats()
+        self._pool = pool
+        self._cond = threading.Condition()
+        self._buf = bytearray()
+        self._next_index = 0
+        self._sealed = 0            # jobs handed to the pool
+        self._done = 0              # jobs finished (success, skip, or error)
+        self._mp = None             # multipart handle, created at first seal
+        self._error: Exception | None = None
+        self._closing = False       # close_async() called; no more writes
+        self._closed = False
+        self._aborted = False
+        self._pos = 0
+        self._uid = next(_WRITER_IDS)
+
+    # ------------------------------------------------------------------ #
+    # file-object surface
+    # ------------------------------------------------------------------ #
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def tell(self) -> int:
+        return self._pos
+
+    def write(self, data) -> int:
+        """Accept bytes; returns immediately once the bytes are staged
+        (upload happens behind the write barrier)."""
+        if self._closed or self._closing:
+            raise ValueError("write on closed Writer")
+        self._raise_pending()
+        data = bytes(data)
+        self._buf += data
+        self._pos += len(data)
+        self.stats.bump(bytes_written=len(data))
+        bs = self.policy.blocksize
+        while len(self._buf) >= bs:
+            part = bytes(self._buf[:bs])
+            del self._buf[:bs]
+            self._seal(part)
+        return len(data)
+
+    def flush(self) -> None:
+        """Barrier: seal the current buffer (forcing multipart mode) and
+        block until every sealed part is durably uploaded."""
+        if self._closed or self._closing:
+            raise ValueError("flush on closed Writer")
+        if self._buf:
+            part = bytes(self._buf)
+            self._buf.clear()
+            self._seal(part)
+        self._barrier()
+
+    def close_async(self) -> None:
+        """Seal the remainder and enqueue the final publish on the upload
+        pool; pair with :meth:`join`. Lets a producer closing many writers
+        (checkpoint save) overlap their publishes instead of paying one
+        store round-trip per writer serially."""
+        if self._closed:
+            raise ValueError("close_async on closed Writer")
+        if self._closing:
+            return
+        self._closing = True
+        if self._mp is None:
+            # Everything fits one part: a single background put — the
+            # same request shape as the legacy sync path.
+            data = bytes(self._buf)
+            self._buf.clear()
+            with self._cond:
+                self._sealed += 1
+            self._pool.submit(lambda: self._upload_whole(data))
+        else:
+            if self._buf:
+                part = bytes(self._buf)
+                self._buf.clear()
+                self._seal(part)
+            # The finisher job runs multipart complete() once every part
+            # job (all enqueued before it — FIFO) has finished, so it
+            # never waits on work queued behind itself: no pool deadlock.
+            with self._cond:
+                self._sealed += 1
+            self._pool.submit(self._finish_multipart)
+
+    def join(self) -> None:
+        """Block until the object published by :meth:`close_async` is
+        durable; raises `StoreError` (and aborts) on permanent failure."""
+        if not self._closing:
+            raise ValueError("join() before close_async()")
+        if self._closed:
+            return
+        try:
+            self._barrier()
+        except BaseException:
+            self.abort()
+            raise
+        self._closed = True
+
+    def close(self) -> None:
+        """Flush and atomically publish the object. Raises `StoreError` if
+        any part upload failed permanently (the object is then aborted and
+        never becomes visible)."""
+        if self._closed:
+            return
+        self.close_async()
+        self.join()
+
+    def abort(self) -> None:
+        """Drop buffered and in-flight work; the object is never published
+        (queued parts drain as no-ops and release their staging budget)."""
+        with self._cond:
+            self._aborted = True
+            self._closed = True
+            self._cond.notify_all()
+        self._buf.clear()
+        if self._mp is not None:
+            with suppress(Exception):
+                self._mp.abort()
+
+    def __enter__(self) -> "Writer":
+        return self
+
+    def __exit__(self, exc_type, *exc) -> None:
+        if exc_type is not None:
+            self.abort()
+        else:
+            self.close()
+
+    # ------------------------------------------------------------------ #
+    # sealing + staging (application thread)
+    # ------------------------------------------------------------------ #
+    def _seal(self, data: bytes) -> None:
+        with self._cond:
+            if self._mp is None:
+                self._mp = self.store.start_multipart(self.key)
+            index = self._next_index
+            self._next_index += 1
+            self._sealed += 1
+        part = self._stage(index, data)
+        self._pool.submit(lambda: self._upload(part))
+
+    def _stage(self, index: int, data: bytes) -> _Part:
+        """Park the sealed part in the first tier with budget; block (the
+        paper's bounded-cache backpressure, pointed at the producer) until
+        an upload frees space. Parts no tier could ever hold are carried
+        in memory so the pipeline cannot deadlock."""
+        block_id = f"wb/{self._uid:04d}/{self.key}/{index:06d}"
+        t0 = time.perf_counter()
+        try:
+            if not self.tiers or all(len(data) > t.capacity for t in self.tiers):
+                self.stats.bump(unstaged_parts=1)
+                return _Part(index, len(data), None, None, data)
+            while True:
+                for cand in self.tiers:
+                    if len(data) > cand.capacity:
+                        continue
+                    if cand.available() < len(data):
+                        cand.verify_used()
+                    if cand.reserve(len(data)):
+                        cand.write(block_id, data)
+                        cand.commit(len(data))
+                        return _Part(index, len(data), cand, block_id, None)
+                with self._cond:
+                    if self._error is not None or self._aborted:
+                        # Pipeline is failing anyway; skip backpressure so
+                        # the caller reaches the error at the next barrier.
+                        self.stats.bump(unstaged_parts=1)
+                        return _Part(index, len(data), None, None, data)
+                    self._cond.wait(timeout=0.01)
+        finally:
+            self.stats.bump(stage_wait_s=time.perf_counter() - t0)
+
+    # ------------------------------------------------------------------ #
+    # upload jobs (UploadPool threads)
+    # ------------------------------------------------------------------ #
+    def _upload(self, part: _Part) -> None:
+        try:
+            with self._cond:
+                skip = self._aborted or self._error is not None
+            data = part.data
+            if part.tier is not None:
+                try:
+                    if not skip:   # skipped jobs only free their staging
+                        data = part.tier.read(part.block_id, 0, part.size)
+                finally:
+                    part.tier.delete(part.block_id)
+                    part.tier.release(part.size)
+            if not skip:
+                t0 = time.perf_counter()
+                self._execute_put(lambda: self._mp.put_part(part.index, data))
+                self.stats.bump(
+                    upload_s=time.perf_counter() - t0,
+                    parts_uploaded=1,
+                    bytes_uploaded=part.size,
+                )
+        except Exception as e:   # noqa: BLE001 — surfaced at the barrier
+            self._record_error(e)
+        finally:
+            with self._cond:
+                self._done += 1
+                self._cond.notify_all()
+
+    def _finish_multipart(self) -> None:
+        """Pool job: wait for every part job (all queued ahead of this
+        one), then publish via multipart complete()."""
+        try:
+            with self._cond:
+                self._cond.wait_for(lambda: self._done >= self._sealed - 1)
+                skip = self._aborted or self._error is not None
+            if not skip:
+                t0 = time.perf_counter()
+                self._execute_put(self._mp.complete)
+                self.stats.bump(upload_s=time.perf_counter() - t0)
+        except Exception as e:   # noqa: BLE001 — surfaced at the barrier
+            self._record_error(e)
+        finally:
+            with self._cond:
+                self._done += 1
+                self._cond.notify_all()
+
+    def _upload_whole(self, data: bytes) -> None:
+        try:
+            with self._cond:
+                skip = self._aborted
+            if not skip:
+                t0 = time.perf_counter()
+                self._execute_put(lambda: self.store.put(self.key, data))
+                self.stats.bump(
+                    upload_s=time.perf_counter() - t0,
+                    parts_uploaded=1,
+                    bytes_uploaded=len(data),
+                )
+        except Exception as e:   # noqa: BLE001 — surfaced at the barrier
+            self._record_error(e)
+        finally:
+            with self._cond:
+                self._done += 1
+                self._cond.notify_all()
+
+    def _execute_put(self, fn: Callable[[], None]) -> None:
+        """Retries + optional hedging around one store request (the rolling
+        engine's fetch recipe, applied to puts)."""
+        last: Exception | None = None
+        for attempt in range(self.policy.max_retries + 1):
+            try:
+                return self._put_maybe_hedged(fn)
+            except TransientStoreError as e:
+                last = e
+                if attempt < self.policy.max_retries:
+                    self.stats.bump(retries=1)
+                    time.sleep(self.policy.retry_backoff_s * (2 ** attempt))
+        raise StoreError(
+            f"{self.key}: exhausted {self.policy.max_retries + 1} "
+            f"upload attempts"
+        ) from last
+
+    def _put_maybe_hedged(self, fn: Callable[[], None]) -> None:
+        if self.policy.hedge_timeout_s is None:
+            self.stats.bump(put_requests=1)
+            return fn()
+        cond = threading.Condition()
+        ok: list[bool] = []
+        errors: list[Exception] = []
+
+        def attempt() -> None:
+            try:
+                fn()
+            except Exception as e:   # noqa: BLE001 - propagated below
+                with cond:
+                    errors.append(e)
+                    cond.notify_all()
+            else:
+                with cond:
+                    ok.append(True)
+                    cond.notify_all()
+
+        self.stats.bump(put_requests=1)
+        threading.Thread(target=attempt, daemon=True).start()
+        launched = 1
+        with cond:
+            cond.wait_for(lambda: ok or errors,
+                          timeout=self.policy.hedge_timeout_s)
+            hedge = not ok and not errors
+        if hedge:
+            # Puts to the same key/part are idempotent: race a duplicate
+            # and take the first copy that lands.
+            self.stats.bump(hedges=1, put_requests=1)
+            threading.Thread(target=attempt, daemon=True).start()
+            launched = 2
+        with cond:
+            cond.wait_for(lambda: ok or len(errors) >= launched)
+        if ok:
+            return
+        raise errors[0]
+
+    # ------------------------------------------------------------------ #
+    # error + barrier plumbing
+    # ------------------------------------------------------------------ #
+    def _record_error(self, e: Exception) -> None:
+        with self._cond:
+            if self._error is None:
+                self._error = e
+            self._cond.notify_all()
+        log.error("writer %s: upload failed: %s", self.key, e)
+
+    def _raise_pending(self) -> None:
+        with self._cond:
+            err = self._error
+        if err is not None:
+            raise StoreError(
+                f"write-behind upload failed for {self.key!r}"
+            ) from err
+
+    def _barrier(self) -> None:
+        t0 = time.perf_counter()
+        with self._cond:
+            self._cond.wait_for(lambda: self._done >= self._sealed)
+        self.stats.bump(barrier_wait_s=time.perf_counter() - t0)
+        self._raise_pending()

@@ -18,9 +18,8 @@ import numpy as np
 
 from repro.ckpt.manager import restore_checkpoint, save_checkpoint
 from repro.configs import get_config
-from repro.io import IOPolicy
+from repro.io import IOPolicy, open_store
 from repro.models import make_model
-from repro.store import LinkModel, SimS3Store
 from repro.utils import get_logger
 
 log = get_logger("launch.serve")
@@ -36,6 +35,8 @@ def main() -> None:
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--restore-mode", default="rolling",
                     choices=["rolling", "sequential"])
+    ap.add_argument("--store", default="sims3://weights?latency_ms=10&bw_mbps=80",
+                    help="weight store URI (any registered scheme)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--quant", choices=["int8"], default=None,
                     help="weight-only int8 serving (TP-only layout)")
@@ -47,9 +48,10 @@ def main() -> None:
     model = make_model(cfg)
 
     # --- publish + cold-start restore through the object store ----------------
-    store = SimS3Store(link=LinkModel(latency_s=0.01, bandwidth_Bps=80e6))
+    store = open_store(args.store)
     params = model.init(jax.random.key(0))
-    save_checkpoint(store, "weights", 0, params)
+    save_checkpoint(store, "weights", 0, params,
+                    policy=IOPolicy(write_depth=4))
     t0 = time.time()
     params, _ = restore_checkpoint(
         store, "weights", params,

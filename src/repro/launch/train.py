@@ -22,7 +22,7 @@ from repro.ckpt.manager import CheckpointManager, latest_step, restore_checkpoin
 from repro.configs import get_config
 from repro.data import DataCursor, LoaderConfig, PrefetchingDataLoader, synth_token_shard
 from repro.data.loader import DeviceFeeder
-from repro.io import IOPolicy
+from repro.io import IOPolicy, open_store
 from repro.models import make_model
 from repro.store import LinkModel, MemTier, SimS3Store
 from repro.train import (
@@ -62,6 +62,12 @@ def main() -> None:
     ap.add_argument("--prefetch-depth", type=int, default=2)
     ap.add_argument("--blocksize", type=int, default=256 << 10)
     ap.add_argument("--ckpt-interval", type=int, default=20)
+    ap.add_argument("--ckpt-store", default=None,
+                    help="checkpoint store URI (mem://, local:///path, "
+                         "sims3://bucket?latency_ms=...); default builds a "
+                         "sims3:// URI from --s3-latency/--s3-bandwidth")
+    ap.add_argument("--write-depth", type=int, default=2,
+                    help="concurrent write-behind part uploads for saves")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--s3-latency", type=float, default=0.01)
@@ -84,8 +90,15 @@ def main() -> None:
         latency_s=args.s3_latency,
         bandwidth_Bps=args.s3_bandwidth,
     )
-    ckpt_store = SimS3Store(link=LinkModel(latency_s=args.s3_latency,
-                                           bandwidth_Bps=args.s3_bandwidth))
+    # Checkpoints address their store by URI through the registry; any
+    # registered backend works without touching this driver.
+    ckpt_uri = args.ckpt_store or (
+        f"sims3://ckpt?latency_ms={args.s3_latency * 1e3:g}"
+        f"&bw_mbps={args.s3_bandwidth / 1e6:g}"
+    )
+    ckpt_store = open_store(ckpt_uri)
+    write_policy = IOPolicy(write_depth=args.write_depth,
+                            blocksize=args.blocksize)
 
     # --- resume or init ------------------------------------------------------
     opt_cfg = AdamWConfig(lr=args.lr, total_steps=args.steps,
@@ -124,7 +137,9 @@ def main() -> None:
         ),
         cursor=cursor,
     )
-    ckpt = CheckpointManager(ckpt_store, "ckpt", interval_steps=args.ckpt_interval)
+    ckpt = CheckpointManager(ckpt_store, "ckpt",
+                             interval_steps=args.ckpt_interval,
+                             policy=write_policy)
 
     # --- loop ----------------------------------------------------------------
     feeder = DeviceFeeder(loader.batches(), depth=2)

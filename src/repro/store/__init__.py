@@ -1,10 +1,17 @@
-from repro.store.base import ObjectStore, ObjectMeta, StoreError, TransientStoreError
+from repro.store.base import (
+    MultipartUpload,
+    ObjectMeta,
+    ObjectStore,
+    StoreError,
+    TransientStoreError,
+)
 from repro.store.link import LinkModel
 from repro.store.sim_s3 import SimS3Store
 from repro.store.local import DirStore, MemStore
 from repro.store.tiers import CacheTier, MemTier, DirTier
 
 __all__ = [
+    "MultipartUpload",
     "ObjectStore",
     "ObjectMeta",
     "StoreError",

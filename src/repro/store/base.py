@@ -4,11 +4,17 @@ All remote data in the framework (training shards, `.trk` streamline files,
 checkpoints) flows through this interface so that the simulated S3 store,
 the real local-directory store, and any future real S3 binding are
 interchangeable.
+
+Writes come in two shapes: whole-object ``put`` and a multipart upload
+(``start_multipart``) used by the write-behind pipeline in ``repro.io`` —
+parts upload concurrently while the producer keeps writing, and
+``complete()`` is the atomic publish point.
 """
 
 from __future__ import annotations
 
 import abc
+import threading
 from dataclasses import dataclass
 
 
@@ -24,6 +30,65 @@ class TransientStoreError(StoreError):
 class ObjectMeta:
     key: str
     size: int
+
+
+class MultipartUpload:
+    """Portable client-buffered multipart upload.
+
+    Parts accumulate in memory (``put_part`` is thread-safe and accepts
+    parts in any order) and publish atomically with a single ``put()`` at
+    ``complete()`` — correct for any store, no overlap benefit. Stores
+    with a cheaper native path (the simulated S3's server-side assembly,
+    the directory store's part files) override the ``_charge_part`` /
+    ``_publish`` hooks or the methods themselves via
+    :meth:`ObjectStore.start_multipart`.
+    """
+
+    def __init__(self, store: "ObjectStore", key: str) -> None:
+        self.store = store
+        self.key = key
+        self._parts: dict[int, bytes] = {}
+        self._lock = threading.Lock()
+        self._aborted = False
+
+    def put_part(self, index: int, data: bytes) -> None:
+        """Upload part `index` (0-based). Re-putting the same index is
+        idempotent (last write wins), which makes hedged uploads safe."""
+        if index < 0:
+            raise StoreError(f"multipart {self.key!r}: bad part index {index}")
+        self._charge_part(data)
+        with self._lock:
+            if self._aborted:
+                raise StoreError(f"multipart {self.key!r}: upload aborted")
+            self._parts[index] = bytes(data)
+
+    def complete(self) -> None:
+        """Assemble parts 0..n-1 and publish the object atomically. Safe
+        to retry after a transient publish failure."""
+        with self._lock:
+            if self._aborted:
+                raise StoreError(f"multipart {self.key!r}: upload aborted")
+            parts = dict(self._parts)
+        indexes = sorted(parts)
+        if indexes != list(range(len(indexes))):
+            raise StoreError(
+                f"multipart {self.key!r}: non-contiguous parts {indexes}"
+            )
+        self._publish(b"".join(parts[i] for i in indexes))
+
+    def abort(self) -> None:
+        """Drop staged parts; the object is never published."""
+        with self._lock:
+            self._aborted = True
+            self._parts.clear()
+
+    # -- backend hooks -----------------------------------------------------
+    def _charge_part(self, data: bytes) -> None:
+        """Pay the transfer cost of one part at upload time (default: the
+        cost is deferred to the final put in `_publish`)."""
+
+    def _publish(self, data: bytes) -> None:
+        self.store.put(self.key, data)
 
 
 class ObjectStore(abc.ABC):
@@ -53,9 +118,17 @@ class ObjectStore(abc.ABC):
     def get(self, key: str) -> bytes:
         return self.get_range(key, 0, self.size(key))
 
+    def start_multipart(self, key: str) -> MultipartUpload:
+        """Begin a multipart upload of `key`; see `MultipartUpload`."""
+        return MultipartUpload(self, key)
+
     def exists(self, key: str) -> bool:
         try:
             self.size(key)
             return True
+        except TransientStoreError:
+            # A throttled/faulting store does NOT mean the object is
+            # missing — propagate so callers can retry.
+            raise
         except StoreError:
             return False

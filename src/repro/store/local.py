@@ -2,10 +2,12 @@
 
 from __future__ import annotations
 
+import contextlib
 import os
+import shutil
 import threading
 
-from repro.store.base import ObjectMeta, ObjectStore, StoreError
+from repro.store.base import MultipartUpload, ObjectMeta, ObjectStore, StoreError
 
 
 class MemStore(ObjectStore):
@@ -47,6 +49,71 @@ class MemStore(ObjectStore):
     def delete(self, key: str) -> None:
         with self._lock:
             self._objects.pop(key, None)
+
+
+class _DirMultipartUpload(MultipartUpload):
+    """Disk-backed multipart: parts land as sibling `.mpart` files (bounded
+    memory), and complete() concatenates them into the final path with the
+    same tmp-then-replace atomic publish the store's put() uses."""
+
+    def _part_path(self, index: int) -> str:
+        return self.store._path(self.key) + f".mpart{index:06d}"
+
+    def put_part(self, index: int, data: bytes) -> None:
+        if index < 0:
+            raise StoreError(f"multipart {self.key!r}: bad part index {index}")
+        with self._lock:
+            if self._aborted:
+                raise StoreError(f"multipart {self.key!r}: upload aborted")
+            self._parts[index] = b""   # presence marker; bytes live on disk
+        path = self._part_path(index)
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(data)
+        os.replace(tmp, path)
+
+    def complete(self) -> None:
+        with self._lock:
+            if self._aborted:
+                raise StoreError(f"multipart {self.key!r}: upload aborted")
+            indexes = sorted(self._parts)
+        if indexes != list(range(len(indexes))):
+            raise StoreError(
+                f"multipart {self.key!r}: non-contiguous parts {indexes}"
+            )
+        final = self.store._path(self.key)
+        os.makedirs(os.path.dirname(final) or ".", exist_ok=True)
+        # Unique tmp per attempt: hedged/retried completes may run
+        # concurrently and must not clobber each other's staging file.
+        tmp = f"{final}.tmp{os.getpid()}-{threading.get_ident()}"
+        try:
+            with open(tmp, "wb") as out:
+                for i in indexes:
+                    with open(self._part_path(i), "rb") as f:
+                        shutil.copyfileobj(f, out)
+            os.replace(tmp, final)
+        except OSError as e:
+            with contextlib.suppress(OSError):
+                os.remove(tmp)
+            # A concurrent attempt may have published and removed the
+            # part files out from under us — that's success, not failure.
+            if not os.path.exists(final):
+                raise StoreError(
+                    f"multipart {self.key!r}: complete failed: {e}"
+                ) from e
+        for i in indexes:
+            with contextlib.suppress(OSError):
+                os.remove(self._part_path(i))
+
+    def abort(self) -> None:
+        with self._lock:
+            self._aborted = True
+            indexes = sorted(self._parts)
+            self._parts.clear()
+        for i in indexes:
+            with contextlib.suppress(OSError):
+                os.remove(self._part_path(i))
 
 
 class DirStore(ObjectStore):
@@ -93,6 +160,10 @@ class DirStore(ObjectStore):
         with open(tmp, "wb") as f:
             f.write(data)
         os.replace(tmp, path)  # atomic publish
+
+    def start_multipart(self, key: str) -> MultipartUpload:
+        self._path(key)  # validate the key before any part lands
+        return _DirMultipartUpload(self, key)
 
     def delete(self, key: str) -> None:
         try:

@@ -7,9 +7,23 @@ Failure injection on the link drives the fault-tolerance tests.
 
 from __future__ import annotations
 
-from repro.store.base import ObjectMeta, ObjectStore
+from repro.store.base import MultipartUpload, ObjectMeta, ObjectStore
 from repro.store.link import LinkModel
 from repro.store.local import MemStore
+
+
+class _SimS3MultipartUpload(MultipartUpload):
+    """S3-shaped multipart cost model: each part pays the put link when it
+    uploads (so concurrent part uploads overlap latency exactly like
+    concurrent GETs), and completion is server-side assembly — one
+    latency-only request, no payload re-transfer."""
+
+    def _charge_part(self, data: bytes) -> None:
+        self.store.put_link.transfer(len(data))
+
+    def _publish(self, data: bytes) -> None:
+        self.store.put_link.transfer(0)
+        self.store.backing.put(self.key, data)
 
 
 class SimS3Store(ObjectStore):
@@ -41,6 +55,9 @@ class SimS3Store(ObjectStore):
     def put(self, key: str, data: bytes) -> None:
         self.put_link.transfer(len(data))
         self.backing.put(key, data)
+
+    def start_multipart(self, key: str) -> MultipartUpload:
+        return _SimS3MultipartUpload(self, key)
 
     def delete(self, key: str) -> None:
         self.link.transfer(0)

@@ -210,7 +210,7 @@ class TestFacadeReads:
                 f = fs.open_many(metas(store))
                 f.read()
                 f.close()
-            assert len(fs._readers) <= 1   # dead epochs pruned
+            assert len(fs._handles) <= 1   # dead epochs pruned
             snap = fs.stats().snapshot()
         assert snap["opens"] == 5
         assert snap["totals"]["bytes_read"] == 5 * len(WANT)
