@@ -164,40 +164,44 @@ def bench_ckpt(n_leaves: int, leaf_bytes: int, part_bytes: int,
     )
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--smoke", action="store_true",
-                    help="tiny sizes for CI (seconds, not minutes)")
-    ap.add_argument("--out", default="BENCH_write.json")
-    ap.add_argument("--write-depth", type=int, default=4)
-    args = ap.parse_args()
-
-    if args.smoke:
+def main(quick: bool = False, out: str = "BENCH_write.json",
+         write_depth: int = 4) -> None:
+    if quick:
         stream = bench_stream(n_chunks=16, chunk_bytes=512 << 10,
-                              t_comp_s=0.01, write_depth=args.write_depth,
+                              t_comp_s=0.01, write_depth=write_depth,
                               reps=2)
         ckpt = bench_ckpt(n_leaves=8, leaf_bytes=96 << 10,
-                          part_bytes=256 << 10, write_depth=args.write_depth,
+                          part_bytes=256 << 10, write_depth=write_depth,
                           reps=2)
     else:
         stream = bench_stream(n_chunks=24, chunk_bytes=512 << 10,
-                              t_comp_s=0.01, write_depth=args.write_depth,
+                              t_comp_s=0.01, write_depth=write_depth,
                               reps=3)
         ckpt = bench_ckpt(n_leaves=16, leaf_bytes=192 << 10,
-                          part_bytes=256 << 10, write_depth=args.write_depth,
+                          part_bytes=256 << 10, write_depth=write_depth,
                           reps=3)
 
     record = dict(
         stream=stream,
         ckpt=ckpt,
         link=dict(latency_s=S3_LATENCY, bandwidth_Bps=S3_BW),
-        smoke=bool(args.smoke),
+        smoke=bool(quick),
     )
-    with open(args.out, "w") as f:
+    with open(out, "w") as f:
         json.dump(record, f, indent=2)
-    print(f"wrote {args.out}: stream {stream['speedup']:.2f}x, "
+    print(f"wrote {out}: stream {stream['speedup']:.2f}x, "
           f"ckpt {ckpt['speedup']:.2f}x (write-behind vs sync put)")
 
 
+def _cli() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI (seconds, not minutes)")
+    ap.add_argument("--out", default="BENCH_write.json")
+    ap.add_argument("--write-depth", type=int, default=4)
+    args = ap.parse_args()
+    main(quick=args.smoke, out=args.out, write_depth=args.write_depth)
+
+
 if __name__ == "__main__":
-    main()
+    _cli()

@@ -18,6 +18,8 @@ BENCHES = {
     "model_validation": "benchmarks.bench_model_validation",
     "training_pipeline": "benchmarks.bench_training_pipeline",
     "ckpt_restore": "benchmarks.bench_ckpt_restore",
+    "adaptive_read": "benchmarks.bench_adaptive_read",
+    "write_pipeline": "benchmarks.bench_write_pipeline",
     "roofline": "benchmarks.bench_roofline",
 }
 

@@ -226,8 +226,11 @@ def restore_checkpoint(
     out = []
     with PrefetchFS(store, policy=policy, tiers=tiers) as fs:
         stream = fs.open_many(files)
+        read = getattr(stream, "readview", stream.read)
         for meta, entry, tmpl in zip(files, entries, t_leaves):
-            raw = stream.read(meta.size)
+            # readview: a leaf inside one cached block decodes zero-copy
+            # (np.frombuffer over the block buffer's memoryview).
+            raw = read(meta.size)
             arr = np.frombuffer(
                 raw, dtype=_dtype_from_str(entry["dtype"])
             ).reshape(entry["shape"])

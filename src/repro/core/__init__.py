@@ -18,9 +18,10 @@ from repro.core.rolling import (
 )
 from repro.core.sequential import SequentialFile, SequentialStats
 from repro.core import cost_model
-from repro.core.autotune import BlockSizeTuner
+from repro.core.autotune import AimdDepthController, BlockSizeTuner
 
 __all__ = [
+    "AimdDepthController",
     "Block",
     "BlockPlan",
     "BlockState",

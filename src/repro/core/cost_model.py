@@ -80,3 +80,36 @@ def optimal_num_blocks(f: float, c: float, l_c: float) -> float:
 def optimal_blocksize(f: float, c: float, l_c: float) -> float:
     nb = optimal_num_blocks(f, c, l_c)
     return f / max(nb, 1.0)
+
+
+def is_latency_bound(l_c: float, b_cr: float, blocksize: float) -> bool:
+    """True when one request's fixed latency exceeds its payload transfer
+    time — the regime where Eq. 1's `n_b * l_c` term dominates and
+    coalescing adjacent blocks into one request wins."""
+    if blocksize <= 0:
+        return False
+    if b_cr <= 0 or math.isinf(b_cr):
+        return l_c > 0
+    return l_c > blocksize / b_cr
+
+
+def coalesce_width(l_c: float, b_cr: float, blocksize: float,
+                   max_width: int) -> int:
+    """How many adjacent blocks one GET should carry.
+
+    A width-`w` request costs `l_c + w*blocksize/b_cr`, i.e. per block
+    `l_c/w + blocksize/b_cr`. Growing `w` amortizes latency until the
+    latency share drops below the (irreducible) transfer share, so the
+    knee is `w = ceil(l_c * b_cr / blocksize)`; wider requests only
+    coarsen the prefetch pipeline (Eq. 2's per-block overlap granularity)
+    for no further gain. Bandwidth-bound links (`l_c <= blocksize/b_cr`)
+    get width 1 — coalescing cannot help there.
+    """
+    if max_width <= 1 or l_c <= 0 or blocksize <= 0:
+        return 1
+    if b_cr <= 0 or math.isinf(b_cr):
+        return max_width
+    per_block_s = blocksize / b_cr
+    if l_c <= per_block_s:
+        return 1
+    return max(1, min(max_width, math.ceil(l_c / per_block_s)))

@@ -88,3 +88,20 @@ class BlockPlan:
         start = self._file_global_start[file_index]
         size = self.files[file_index].size
         return start, start + size
+
+    def run_from(self, index: int, max_width: int,
+                 limit: int | None = None) -> list[Block]:
+        """Maximal run of byte-adjacent same-file blocks starting at
+        `index`, at most `max_width` long and stopping before block index
+        `limit` — the unit the adaptive scheduler fetches with one
+        coalesced `get_ranges` request."""
+        run = [self.blocks[index]]
+        while len(run) < max_width:
+            j = run[-1].index + 1
+            if j >= len(self.blocks) or (limit is not None and j >= limit):
+                break
+            nxt = self.blocks[j]
+            if nxt.key != run[-1].key or nxt.start != run[-1].end:
+                break
+            run.append(nxt)
+        return run

@@ -1,26 +1,42 @@
-"""Rolling Prefetch — the paper's core contribution.
+"""Rolling Prefetch — the paper's core contribution, with an adaptive
+event-driven scheduler.
 
 Three concurrent actors over a block plan (paper §II-A):
 
   * the READING thread (the caller of :meth:`RollingPrefetchFile.read`)
     serves bytes from cached blocks, blocking until the needed block has
     been prefetched, and flags fully-consumed blocks for eviction;
-  * the PREFETCHING thread(s) walk the plan in order, writing blocks into
-    the first priority-ordered cache tier with available budget
-    (Algorithm 1: optimistic `used` accounting + `verify_used`
-    reconciliation when a tier looks full);
-  * the EVICTION thread periodically deletes flagged blocks and performs a
-    final sweep on shutdown.
+  * the PREFETCHING stream(s) claim *runs* of adjacent blocks inside a
+    readahead horizon ahead of the reader, write them into the first
+    priority-ordered cache tier with available budget (Algorithm 1:
+    optimistic `used` accounting + `verify_used` reconciliation when a
+    tier looks full), and park on a condition when no work is eligible —
+    evictions and reader progress notify them, with a coarse wait timeout
+    only as a missed-wakeup backstop;
+  * the EVICTION thread deletes flagged blocks when notified (a consumed
+    block pushed a tier past its high-water mark, or a prefetcher found
+    every tier full), with the periodic interval only as a fallback, and
+    performs a final sweep on shutdown.
 
-Beyond the paper (all default-off so the faithful configuration is the
-baseline):
-  * ``depth > 1``: multiple concurrent fetch streams (S3 scales with
-    request concurrency; a single stream leaves the link idle during
-    request latency);
-  * ``hedge_timeout``: straggler mitigation — duplicate a block request
-    that exceeds a deadline and take the first copy that lands;
-  * transient-failure retries with exponential backoff (the paper assumes
-    a reliable store; thousand-node jobs cannot).
+Adaptive scheduling (all off by default so the faithful configuration is
+the baseline):
+
+  * ``coalesce > 1``: runs of adjacent blocks are fetched with ONE
+    vectorized ``store.get_ranges`` request — one request latency for the
+    whole run — when the cost model says the link is latency-bound
+    (Eq. 1's ``n_b·l_c`` term dominates); results split back into
+    per-block cache entries so eviction granularity is unchanged;
+  * ``readahead_blocks``: bounds the fetch window to a horizon ahead of
+    the reader position instead of racing to end-of-plan;
+  * ``max_depth``: an AIMD controller grows concurrent fetch streams
+    while observed fetch throughput holds and halves them when it
+    regresses;
+  * ``tuner``: a `BlockSizeTuner` fed per-request timings and reader
+    compute gaps, closing the Eq.-4 loop (the `PrefetchFS` facade retunes
+    blocksize/coalesce from it on the next open);
+  * ``depth > 1``, ``hedge_timeout``, transient-failure retries: as
+    before (S3 scales with request concurrency; thousand-node jobs need
+    straggler + fault tolerance).
 """
 
 from __future__ import annotations
@@ -31,6 +47,7 @@ import time
 import warnings
 from dataclasses import dataclass, field
 
+from repro.core.autotune import AimdDepthController, BlockSizeTuner
 from repro.core.plan import Block, BlockPlan
 from repro.store.base import ObjectMeta, ObjectStore, StoreError, TransientStoreError
 from repro.store.tiers import CacheTier
@@ -59,18 +76,23 @@ class _BlockInfo:
 class PrefetchStats:
     """Counters mutated from the reader, prefetch (possibly several when
     depth > 1), and eviction threads; all mutation goes through
-    :meth:`bump`, which serializes on an internal lock, and
-    :meth:`snapshot` reads under the same lock for a consistent view."""
+    :meth:`bump` / :meth:`note_depth`, which serialize on an internal
+    lock, and :meth:`snapshot` reads under the same lock for a consistent
+    view."""
 
     blocks_fetched: int = 0
     blocks_evicted: int = 0
     bytes_fetched: int = 0
     bytes_read: int = 0
     reader_wait_s: float = 0.0
-    fetch_s: float = 0.0        # cumulative time in store.get_range + tier.write
+    fetch_s: float = 0.0        # cumulative time in store fetch + tier.write
     retries: int = 0
     hedges: int = 0
     direct_reads: int = 0       # cache-miss fallbacks (backward seeks)
+    store_requests: int = 0     # GETs issued (== blocks_fetched unless coalesced)
+    coalesced_requests: int = 0  # GETs that carried more than one block
+    coalesced_blocks: int = 0    # blocks delivered by coalesced GETs
+    depth_peak: int = 0          # highest concurrent-stream target reached
     _lock: threading.Lock = field(default_factory=threading.Lock,
                                   repr=False, compare=False)
 
@@ -79,6 +101,10 @@ class PrefetchStats:
             for name, delta in deltas.items():
                 setattr(self, name, getattr(self, name) + delta)
 
+    def note_depth(self, target: int) -> None:
+        with self._lock:
+            self.depth_peak = max(self.depth_peak, target)
+
     def snapshot(self) -> dict:
         with self._lock:
             return {k: v for k, v in self.__dict__.items()
@@ -86,7 +112,7 @@ class PrefetchStats:
 
 
 class RollingPrefetcher:
-    """Shared engine: block plan + tiered cache + the three threads."""
+    """Shared engine: block plan + tiered cache + the scheduler threads."""
 
     def __init__(
         self,
@@ -96,38 +122,75 @@ class RollingPrefetcher:
         blocksize: int,
         *,
         depth: int = 1,
+        max_depth: int | None = None,
+        coalesce: int = 1,
+        readahead_blocks: int | None = None,
         eviction_interval_s: float = 5.0,
+        high_water: float = 0.75,
         max_retries: int = 3,
         retry_backoff_s: float = 0.05,
         hedge_timeout_s: float | None = None,
+        tuner: BlockSizeTuner | None = None,
     ) -> None:
         if not tiers:
             raise ValueError("at least one cache tier is required")
         if depth < 1:
             raise ValueError(f"depth must be >= 1, got {depth}")
+        if max_depth is not None and max_depth < depth:
+            raise ValueError(
+                f"max_depth ({max_depth}) must be >= depth ({depth})"
+            )
+        if coalesce < 1:
+            raise ValueError(f"coalesce must be >= 1, got {coalesce}")
+        if readahead_blocks is not None and readahead_blocks < 1:
+            raise ValueError(
+                f"readahead_blocks must be >= 1, got {readahead_blocks}"
+            )
         self.store = store
         self.plan = BlockPlan(files, blocksize)
         self.tiers = tiers
         self.depth = depth
+        self.coalesce = coalesce
+        self.readahead_blocks = readahead_blocks
         self.eviction_interval_s = eviction_interval_s
+        self.high_water = high_water
         self.max_retries = max_retries
         self.retry_backoff_s = retry_backoff_s
         self.hedge_timeout_s = hedge_timeout_s
+        self.tuner = tuner
         self.stats = PrefetchStats()
+        self._aimd = (
+            AimdDepthController(depth, max_depth)
+            if max_depth is not None else None
+        )
+        self._streams = max_depth if max_depth is not None else depth
+        self._spawned = 0             # streams actually started (lazy)
 
         self._info: list[_BlockInfo] = [_BlockInfo() for _ in self.plan.blocks]
         self._cond = threading.Condition()
-        self._next_block = 0          # next block index to claim for prefetch
+        self._next_block = 0          # lowest block index not yet claimed
+        self._reader_block = 0        # reader position, in block indexes
+        self._target_depth = depth    # streams allowed to fetch right now
+        self._probe_width = 0         # width alternator while tuner is cold
         self._fetch = True            # the paper's shared `fetch` flag
         self._threads: list[threading.Thread] = []
         self._started = False
         self._closed = False
+        # Eviction wakeup channel: consumed-past-high-water and
+        # tiers-all-full both notify here instead of waiting out the
+        # periodic interval (which remains only as a fallback).
+        self._evict_cond = threading.Condition()
+        self._evict_wanted = False
         # Reader-side buffer of the current block: the application issues
         # many small reads (3 per streamline in the paper's Nibabel trace);
         # local storage is read once per block, small reads are served from
         # this buffer without touching locks or the tier.
         self._buf_index: int | None = None
         self._buf_data: bytes = b""
+        # Compute-gap observation state (closed-loop autotune): wall time
+        # between read_range calls is pure application compute.
+        self._last_read_t: float | None = None
+        self._last_read_bytes = 0
 
     # ------------------------------------------------------------------ #
     # lifecycle
@@ -144,15 +207,31 @@ class RollingPrefetcher:
         if self._started:
             return
         self._started = True
-        for i in range(self.depth):
-            t = threading.Thread(
-                target=self._prefetch_loop, name=f"rp-prefetch-{i}", daemon=True
-            )
-            t.start()
-            self._threads.append(t)
+        # Streams spawn lazily: `depth` now, more only if the AIMD target
+        # actually grows — max_depth=64 must not cost 64 idle threads.
+        self._spawn_streams(self._target_depth)
         t = threading.Thread(target=self._evict_loop, name="rp-evict", daemon=True)
         t.start()
         self._threads.append(t)
+
+    def _spawn_streams(self, target: int) -> None:
+        """Bring the number of spawned streams up to `min(target, ceiling)`.
+        Workers above the current AIMD target park on `_cond`, so streams
+        never need un-spawning when the target shrinks."""
+        while True:
+            with self._cond:
+                if self._closed or not self._started:
+                    return
+                if self._spawned >= min(target, self._streams):
+                    return
+                i = self._spawned
+                self._spawned += 1
+            t = threading.Thread(
+                target=self._prefetch_loop, args=(i,),
+                name=f"rp-prefetch-{i}", daemon=True,
+            )
+            t.start()
+            self._threads.append(t)
 
     def close(self) -> None:
         with self._cond:
@@ -161,6 +240,8 @@ class RollingPrefetcher:
             self._closed = True
             self._fetch = False
             self._cond.notify_all()
+        with self._evict_cond:
+            self._evict_cond.notify_all()
         for t in self._threads:
             t.join(timeout=30.0)
         self._threads = []
@@ -173,109 +254,244 @@ class RollingPrefetcher:
     def __exit__(self, *exc) -> None:
         self.close()
 
-    # ------------------------------------------------------------------ #
-    # prefetching thread (Algorithm 1)
-    # ------------------------------------------------------------------ #
-    def _claim_next(self) -> int | None:
+    @property
+    def target_depth(self) -> int:
+        """Current AIMD stream target (== `depth` when adaptation is off)."""
         with self._cond:
-            while self._fetch:
-                if self._next_block >= len(self.plan):
-                    return None  # all files prefetched -> thread terminates
-                idx = self._next_block
-                self._next_block += 1
-                self._info[idx].state = BlockState.FETCHING
-                return idx
-            return None
+            return self._target_depth
 
-    def _prefetch_loop(self) -> None:
-        while True:
-            idx = self._claim_next()
-            if idx is None:
-                return
-            block = self.plan.blocks[idx]
-            placed = False
-            while not placed:
-                with self._cond:
-                    if not self._fetch:
-                        self._info[idx].state = BlockState.UNFETCHED
-                        return
-                # Priority-ordered tier walk, with verify_used reconciliation
-                # when a tier appears full (Algorithm 1).
-                tier = None
-                for cand in self.tiers:
-                    if cand.available() < block.size:
-                        cand.verify_used()
-                    if cand.reserve(block.size):
-                        tier = cand
-                        break
-                if tier is None:
-                    # Every tier full: wait for the eviction thread.
-                    with self._cond:
-                        self._cond.wait(timeout=0.01)
+    # ------------------------------------------------------------------ #
+    # prefetching streams (Algorithm 1 + adaptive scheduler)
+    # ------------------------------------------------------------------ #
+    def _effective_coalesce(self) -> int:
+        """Blocks per request for the next claim. Caller holds `_cond`."""
+        if self.coalesce <= 1:
+            return 1
+        if self.tuner is None:
+            return self.coalesce
+        if self.tuner.latency_s is None:
+            # Cold tuner: alternate 1- and 2-block requests so sizes vary
+            # and the request-timing fit can split latency from bandwidth.
+            self._probe_width += 1
+            return 1 + (self._probe_width % 2)
+        return self.tuner.suggest_coalesce(self.plan.blocksize, self.coalesce)
+
+    def _claim_run(self, worker_id: int) -> list[Block] | None:
+        """Claim the next run of adjacent unfetched blocks inside the
+        readahead horizon; parks (condition wait) while this stream is
+        over the AIMD target or the horizon is exhausted."""
+        with self._cond:
+            while True:
+                if not self._fetch:
+                    return None
+                if worker_id >= self._target_depth:
+                    # Parked by the depth controller; woken when the
+                    # target grows (or on close).
+                    self._cond.wait(timeout=0.5)
                     continue
-                try:
-                    self._fetch_into(block, tier)
-                    placed = True
-                except StoreError as e:
-                    tier.cancel(block.size)
-                    with self._cond:
-                        self._info[idx].state = BlockState.FAILED
-                        self._info[idx].error = e
-                        self._cond.notify_all()
-                    log.error("block %s failed permanently: %s", block.block_id, e)
-                    return
+                while (self._next_block < len(self.plan)
+                       and self._info[self._next_block].state
+                       != BlockState.UNFETCHED):
+                    self._next_block += 1
+                if self._next_block >= len(self.plan):
+                    return None  # plan fully claimed -> stream terminates
+                idx = self._next_block
+                limit = None
+                if self.readahead_blocks is not None:
+                    limit = self._reader_block + self.readahead_blocks
+                    if idx >= limit:
+                        # Horizon exhausted; reader progress notifies.
+                        self._cond.wait(timeout=0.5)
+                        continue
+                run: list[Block] = []
+                for b in self.plan.run_from(idx, self._effective_coalesce(),
+                                            limit):
+                    if self._info[b.index].state != BlockState.UNFETCHED:
+                        break
+                    self._info[b.index].state = BlockState.FETCHING
+                    run.append(b)
+                self._next_block = run[-1].index + 1
+                return run
 
-    def _fetch_into(self, block: Block, tier: CacheTier) -> None:
+    def _unclaim(self, blocks: list[Block]) -> None:
+        """Return claimed blocks to the pool. Caller holds `_cond`."""
+        for b in blocks:
+            self._info[b.index].state = BlockState.UNFETCHED
+        if blocks:
+            self._next_block = min(self._next_block, blocks[0].index)
+
+    def _prefetch_loop(self, worker_id: int) -> None:
+        while True:
+            run = self._claim_run(worker_id)
+            if run is None:
+                return
+            if not self._place_run(run):
+                return
+
+    def _place_run(self, run: list[Block]) -> bool:
+        """Reserve tier space for `run` and fetch it; shrinks the run when
+        only a single block fits, parks (eviction-notified) when every
+        tier is full. Returns False when this stream should exit."""
+        while True:
+            with self._cond:
+                if not self._fetch:
+                    self._unclaim(run)
+                    return False
+            total = sum(b.size for b in run)
+            tier = self._reserve(total)
+            if tier is None and len(run) > 1:
+                # The full run doesn't fit anywhere — give back the tail
+                # and try the head block alone before parking.
+                with self._cond:
+                    self._unclaim(run[1:])
+                    self._cond.notify_all()
+                run = run[:1]
+                continue
+            if tier is None:
+                # Every tier full: demand eviction, then park until the
+                # evictor (or close) notifies.
+                self._request_eviction()
+                with self._cond:
+                    if self._fetch:
+                        self._cond.wait(timeout=0.5)
+                continue
+            try:
+                self._fetch_into(run, tier)
+                return True
+            except StoreError as e:
+                tier.cancel(total)
+                with self._cond:
+                    for b in run:
+                        self._info[b.index].state = BlockState.FAILED
+                        self._info[b.index].error = e
+                    self._cond.notify_all()
+                log.error("blocks %s..%s failed permanently: %s",
+                          run[0].block_id, run[-1].block_id, e)
+                return False
+
+    def _reserve(self, nbytes: int) -> CacheTier | None:
+        # Priority-ordered tier walk, with verify_used reconciliation
+        # when a tier appears full (Algorithm 1).
+        for cand in self.tiers:
+            if cand.available() < nbytes:
+                cand.verify_used()
+            if cand.reserve(nbytes):
+                return cand
+        return None
+
+    def _fetch_into(self, run: list[Block], tier: CacheTier) -> None:
+        total = sum(b.size for b in run)
         t0 = time.perf_counter()
-        data = self._fetch_with_retries(block)
-        tier.write(block.block_id, data)
-        tier.commit(block.size)
-        self.stats.bump(
+        datas, store_s = self._fetch_with_retries(run)
+        written: list[Block] = []
+        try:
+            for b, d in zip(run, datas):
+                tier.write(b.block_id, d)
+                written.append(b)
+        except Exception as e:
+            # A mid-run write failure must not orphan the blocks that
+            # already landed: the caller cancels the whole reservation,
+            # and FAILED blocks are invisible to eviction, so resident
+            # bytes would leak past the tier's accounting forever.
+            for b in written:
+                try:
+                    tier.delete(b.block_id)
+                except Exception:  # noqa: BLE001 - best-effort cleanup
+                    pass
+            if isinstance(e, StoreError):
+                raise
+            # Translate e.g. ENOSPC from a disk tier into the StoreError
+            # the caller handles — anything else would skip the
+            # reservation cancel and leave the run FETCHING forever
+            # (reader deadlock).
+            raise StoreError(
+                f"tier write failed for blocks "
+                f"{run[0].block_id}..{run[-1].block_id}"
+            ) from e
+        tier.commit(total)
+        deltas: dict = dict(
             fetch_s=time.perf_counter() - t0,
-            blocks_fetched=1,
-            bytes_fetched=block.size,
+            blocks_fetched=len(run),
+            bytes_fetched=total,
+            store_requests=1,
         )
+        if len(run) > 1:
+            deltas.update(coalesced_requests=1, coalesced_blocks=len(run))
+        self.stats.bump(**deltas)
+        if self.tuner is not None and store_s is not None:
+            self.tuner.observe_request(total, store_s)
+        if self._aimd is not None:
+            new = self._aimd.on_fetch(total, time.perf_counter())
+            self.stats.note_depth(new)
+            grew = False
+            with self._cond:
+                if new != self._target_depth:
+                    grew = new > self._target_depth
+                    self._target_depth = new
+                    self._cond.notify_all()
+            if grew:
+                self._spawn_streams(new)
         with self._cond:
-            info = self._info[block.index]
-            info.state = BlockState.CACHED
-            info.tier = tier
+            for b in run:
+                info = self._info[b.index]
+                info.state = BlockState.CACHED
+                info.tier = tier
             self._cond.notify_all()
 
-    def _fetch_with_retries(self, block: Block) -> bytes:
+    def _fetch_with_retries(
+        self, run: list[Block]
+    ) -> tuple[list[bytes], float | None]:
         last: Exception | None = None
         for attempt in range(self.max_retries + 1):
             try:
-                return self._fetch_maybe_hedged(block)
+                return self._fetch_maybe_hedged(run)
             except TransientStoreError as e:
                 last = e
                 self.stats.bump(retries=1)
                 time.sleep(self.retry_backoff_s * (2**attempt))
         raise StoreError(
-            f"block {block.block_id}: exhausted {self.max_retries} retries"
+            f"blocks {run[0].block_id}..{run[-1].block_id}: "
+            f"exhausted {self.max_retries} retries"
         ) from last
 
-    def _fetch_maybe_hedged(self, block: Block) -> bytes:
+    def _request(self, run: list[Block]) -> list[bytes]:
+        if len(run) == 1:
+            b = run[0]
+            return [self.store.get_range(b.key, b.start, b.end)]
+        return self.store.get_ranges(
+            run[0].key, [(b.start, b.end) for b in run]
+        )
+
+    def _fetch_maybe_hedged(
+        self, run: list[Block]
+    ) -> tuple[list[bytes], float | None]:
+        """Returns (per-block payloads, store seconds). Seconds is None
+        when a hedge fired — racing duplicates contaminate the timing, so
+        hedged samples never reach the tuner."""
         if self.hedge_timeout_s is None:
-            return self.store.get_range(block.key, block.start, block.end)
+            t0 = time.perf_counter()
+            datas = self._request(run)
+            return datas, time.perf_counter() - t0
         # Straggler hedging: race a duplicate request after the deadline.
         cond = threading.Condition()
-        results: list[bytes] = []
+        results: list[list[bytes]] = []
         errors: list[Exception] = []
 
         def attempt() -> None:
             try:
-                data = self.store.get_range(block.key, block.start, block.end)
+                datas = self._request(run)
             except Exception as e:  # noqa: BLE001 - propagated below
                 with cond:
                     errors.append(e)
                     cond.notify_all()
             else:
                 with cond:
-                    results.append(data)
+                    results.append(datas)
                     cond.notify_all()
 
         threading.Thread(target=attempt, daemon=True).start()
         launched = 1
+        t0 = time.perf_counter()
         with cond:
             cond.wait_for(lambda: results or errors,
                           timeout=self.hedge_timeout_s)
@@ -291,39 +507,83 @@ class RollingPrefetcher:
             # the raise.
             cond.wait_for(lambda: results or len(errors) >= launched)
         if results:
-            return results[0]
+            store_s = None if launched > 1 else time.perf_counter() - t0
+            return results[0], store_s
         raise errors[0]
 
     # ------------------------------------------------------------------ #
     # reading path (called from the application thread)
     # ------------------------------------------------------------------ #
-    def read_range(self, global_start: int, global_end: int) -> bytes:
-        """Read logical-stream bytes [global_start, global_end); blocks until
-        the data has been prefetched (paper: the reader waits, bounding the
-        worst case at sequential performance)."""
-        out = bytearray()
-        pos = global_start
-        while pos < global_end:
-            block = self.plan.block_at(pos)
-            hi = min(global_end, block.global_end)
-            if self._buf_index == block.index:
-                data = self._buf_data[pos - block.global_start:
-                                      hi - block.global_start]
-            else:
-                data = self._read_from_block(block, pos, hi)
-            out.extend(data)
-            pos += len(data)
-            if pos >= block.global_end:
-                if self._buf_index == block.index:
-                    self._buf_index, self._buf_data = None, b""
-                self._mark_consumed(block)
-        self.stats.bump(bytes_read=len(out))
-        return bytes(out)
+    def read_range(self, global_start: int, global_end: int,
+                   *, view: bool = False) -> bytes | memoryview:
+        """Read logical-stream bytes [global_start, global_end); blocks
+        until the data has been prefetched (paper: the reader waits,
+        bounding the worst case at sequential performance).
 
-    def _read_from_block(self, block: Block, gstart: int, gend: int) -> bytes:
+        With ``view=True`` a request contained in one cached block is
+        served as a zero-copy `memoryview` over the block buffer (valid
+        indefinitely — the underlying bytes are immutable); multi-block
+        requests still return `bytes`.
+        """
+        self._observe_compute_gap()
+        try:
+            if global_end <= global_start:
+                return b""
+            block = self.plan.block_at(global_start)
+            if global_end <= block.global_end:
+                # Fast path: one block — at most one copy (zero with view).
+                data = self._read_single(block, global_start, global_end,
+                                         view=view)
+                self._last_read_bytes = len(data)
+                self.stats.bump(bytes_read=len(data))
+                return data
+            out = bytearray()
+            pos = global_start
+            while pos < global_end:
+                block = self.plan.block_at(pos)
+                hi = min(global_end, block.global_end)
+                out += self._read_single(block, pos, hi, view=True)
+                pos = hi
+            self._last_read_bytes = len(out)
+            self.stats.bump(bytes_read=len(out))
+            return bytes(out)
+        finally:
+            self._last_read_t = time.perf_counter()
+
+    def _observe_compute_gap(self) -> None:
+        if self.tuner is None:
+            return
+        now = time.perf_counter()
+        if self._last_read_t is not None and self._last_read_bytes > 0:
+            self.tuner.observe_compute(self._last_read_bytes,
+                                       now - self._last_read_t)
+
+    def _read_single(self, block: Block, gstart: int, gend: int,
+                     *, view: bool) -> bytes | memoryview:
+        lo = gstart - block.global_start
+        hi = gend - block.global_start
+        if self._buf_index == block.index:
+            data = (memoryview(self._buf_data)[lo:hi] if view
+                    else self._buf_data[lo:hi])
+        else:
+            data = self._read_from_block(block, gstart, gend, view=view)
+        if gend >= block.global_end:
+            if self._buf_index == block.index:
+                self._buf_index, self._buf_data = None, b""
+            self._mark_consumed(block)
+        return data
+
+    def _read_from_block(self, block: Block, gstart: int, gend: int,
+                         *, view: bool = False) -> bytes | memoryview:
         info = self._info[block.index]
         t0 = time.perf_counter()
         with self._cond:
+            # Advancing the reader position releases readahead-horizon
+            # headroom — wake parked prefetch streams BEFORE waiting on
+            # them, or neither side would move.
+            if block.index > self._reader_block:
+                self._reader_block = block.index
+                self._cond.notify_all()
             while info.state in (BlockState.UNFETCHED, BlockState.FETCHING):
                 self._cond.wait(timeout=0.5)
             state, tier, err = info.state, info.tier, info.error
@@ -335,7 +595,8 @@ class RollingPrefetcher:
             # small reads from the reader-side buffer.
             self._buf_data = tier.read(block.block_id, 0, block.size)
             self._buf_index = block.index
-            return self._buf_data[lo:hi]
+            return (memoryview(self._buf_data)[lo:hi] if view
+                    else self._buf_data[lo:hi])
         if state == BlockState.FAILED:
             raise StoreError(f"block {block.block_id} failed to prefetch") from err
         # CONSUMED/EVICTED (backward seek after eviction): direct fetch.
@@ -343,15 +604,33 @@ class RollingPrefetcher:
         return self.store.get_range(block.key, block.start + lo, block.start + hi)
 
     def _mark_consumed(self, block: Block) -> None:
+        notify_evict = False
         with self._cond:
             info = self._info[block.index]
+            if block.index + 1 > self._reader_block:
+                self._reader_block = block.index + 1
             if info.state == BlockState.CACHED:
                 info.state = BlockState.CONSUMED
-                self._cond.notify_all()
+                tier = info.tier
+                # Eviction-latency fix: a consumed block sitting in a tier
+                # past its high-water mark wakes the evictor NOW — a full
+                # tier must not stall prefetchers for up to the whole
+                # eviction interval.
+                if (tier is not None
+                        and tier.used >= self.high_water * tier.capacity):
+                    notify_evict = True
+            self._cond.notify_all()
+        if notify_evict:
+            self._request_eviction()
 
     # ------------------------------------------------------------------ #
     # eviction thread
     # ------------------------------------------------------------------ #
+    def _request_eviction(self) -> None:
+        with self._evict_cond:
+            self._evict_wanted = True
+            self._evict_cond.notify_all()
+
     def _evictable(self) -> list[Block]:
         with self._cond:
             return [
@@ -380,10 +659,12 @@ class RollingPrefetcher:
 
     def _evict_loop(self) -> None:
         while True:
-            with self._cond:
-                if not self._fetch:
-                    return
-                self._cond.wait(timeout=self.eviction_interval_s)
+            with self._evict_cond:
+                if self._fetch and not self._evict_wanted:
+                    self._evict_cond.wait(timeout=self.eviction_interval_s)
+                self._evict_wanted = False
+            if not self._fetch:
+                return
             self._evict_blocks(self._evictable())
 
     def _final_sweep(self) -> None:
@@ -407,7 +688,9 @@ class RollingPrefetchFile:
 
     Matches the subset of the S3Fs file API the paper's applications use:
     sequential ``read``/``seek``/``tell``. Backward seeks degrade to direct
-    store reads when the target block was already evicted.
+    store reads when the target block was already evicted. ``readview``
+    is the zero-copy variant for consumers (numpy decoding, device upload)
+    that accept a `memoryview`.
     """
 
     def __init__(self, prefetcher: RollingPrefetcher) -> None:
@@ -451,6 +734,17 @@ class RollingPrefetchFile:
         return self._closed
 
     def read(self, n: int = -1) -> bytes:
+        data = self._read_impl(n, view=False)
+        return data if type(data) is bytes else bytes(data)
+
+    def readview(self, n: int = -1) -> bytes | memoryview:
+        """Like :meth:`read` but may return a zero-copy `memoryview` over
+        the cached block buffer when the request lies within one block.
+        The view stays valid after subsequent reads (the underlying block
+        bytes are immutable)."""
+        return self._read_impl(n, view=True)
+
+    def _read_impl(self, n: int, *, view: bool) -> bytes | memoryview:
         if self._closed:
             raise ValueError("read on closed file")
         if n < 0:
@@ -458,7 +752,7 @@ class RollingPrefetchFile:
         end = min(self._pos + n, self.size)
         if end <= self._pos:
             return b""
-        data = self._pf.read_range(self._pos, end)
+        data = self._pf.read_range(self._pos, end, view=view)
         self._pos = end
         return data
 

@@ -27,7 +27,6 @@ from dataclasses import dataclass
 import jax
 import numpy as np
 
-from repro.core.autotune import BlockSizeTuner
 from repro.data.tokens import TokenStreamReader
 from repro.io import IOPolicy, PrefetchFS
 from repro.store.base import ObjectMeta, ObjectStore
@@ -108,23 +107,27 @@ class PrefetchingDataLoader:
         if not self.my_files:
             raise ValueError(f"host {cfg.host_id}: no files assigned")
         self.cursor = cursor or DataCursor()
-        self.policy = cfg.reader_policy()
+        policy = cfg.reader_policy()
+        if cfg.autotune and not policy.autotune:
+            policy = policy.replace(autotune=True)
+        self.policy = policy
         self.fs = PrefetchFS(store, policy=self.policy, tiers=tiers)
-        self.tuner = (
-            BlockSizeTuner() if (cfg.autotune or self.policy.autotune) else None
-        )
         self._file = None
         self._reader = None
 
+    @property
+    def tuner(self):
+        """The filesystem's closed-loop `BlockSizeTuner` (None unless
+        autotune is on). The rolling engine feeds it observed request
+        timings and reader compute gaps; `PrefetchFS` retunes blocksize
+        and coalesce width from it on every per-epoch reopen."""
+        return self.fs.tuner
+
     # -- stream management ------------------------------------------------
     def _open_stream(self):
-        overrides = {}
-        if self.tuner is not None:
-            total = sum(m.size for m in self.my_files)
-            overrides["blocksize"] = self.tuner.suggest_blocksize(
-                total, cache_budget=sum(t.capacity for t in self.tiers)
-            )
-        f = self.fs.open_many(self.my_files, **overrides)
+        # With autotune on, PrefetchFS picks the Eq.-4 blocksize and
+        # coalesce width per open — nothing to override here.
+        f = self.fs.open_many(self.my_files)
         self._file = f
         self._reader = TokenStreamReader(f, f.size)
 
@@ -146,7 +149,6 @@ class PrefetchingDataLoader:
                 self._open_stream()
             rows = []
             while len(rows) < self.cfg.batch_size:
-                t0 = time.perf_counter()
                 w = self._reader.read_window(window)
                 if w is None:
                     self._close_stream()
@@ -157,8 +159,6 @@ class PrefetchingDataLoader:
                     w = self._reader.read_window(window)
                     if w is None:
                         raise RuntimeError("dataset smaller than one window")
-                if self.tuner is not None:
-                    self.tuner.observe_fetch(window * 4, time.perf_counter() - t0)
                 if skip > 0:
                     skip -= 1
                     continue

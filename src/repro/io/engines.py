@@ -12,6 +12,7 @@ same way and become reachable from every `PrefetchFS` call site.
 
 from __future__ import annotations
 
+from repro.core.autotune import BlockSizeTuner
 from repro.core.rolling import RollingPrefetcher, RollingPrefetchFile
 from repro.core.sequential import SequentialFile
 from repro.io.policy import IOPolicy
@@ -21,26 +22,32 @@ from repro.store.base import ObjectMeta, ObjectStore
 from repro.store.tiers import CacheTier
 
 
-@register_reader("rolling", needs_tiers=True)
+@register_reader("rolling", needs_tiers=True, accepts_tuner=True)
 def open_rolling(store: ObjectStore, files: list[ObjectMeta],
-                 tiers: list[CacheTier], policy: IOPolicy) -> RollingPrefetchFile:
+                 tiers: list[CacheTier], policy: IOPolicy,
+                 tuner: BlockSizeTuner | None = None) -> RollingPrefetchFile:
     return RollingPrefetchFile(
         RollingPrefetcher(
             store, files, tiers, policy.blocksize,
             depth=policy.depth,
+            max_depth=policy.max_depth,
+            coalesce=policy.coalesce if policy.coalesce is not None else 1,
+            readahead_blocks=policy.readahead_blocks,
             eviction_interval_s=policy.eviction_interval_s,
             max_retries=policy.max_retries,
             retry_backoff_s=policy.retry_backoff_s,
             hedge_timeout_s=policy.hedge_timeout_s,
+            tuner=tuner,
         )
     )
 
 
-@register_reader("sequential")
+@register_reader("sequential", accepts_tuner=True)
 def open_sequential(store: ObjectStore, files: list[ObjectMeta],
-                    tiers: list[CacheTier], policy: IOPolicy) -> SequentialFile:
+                    tiers: list[CacheTier], policy: IOPolicy,
+                    tuner: BlockSizeTuner | None = None) -> SequentialFile:
     return SequentialFile(store, files, policy.blocksize,
-                          cache_blocks=policy.cache_blocks)
+                          cache_blocks=policy.cache_blocks, tuner=tuner)
 
 
 @register_reader("direct")

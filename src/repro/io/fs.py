@@ -30,6 +30,7 @@ import threading
 from dataclasses import dataclass, field
 from typing import Iterable, Sequence
 
+from repro.core.autotune import BlockSizeTuner
 from repro.io.policy import IOPolicy
 from repro.io.registry import available_engines, engine_spec
 from repro.io.stores import open_store
@@ -41,6 +42,16 @@ from repro.store.tiers import CacheTier, MemTier
 import repro.io.engines  # noqa: F401  (side-effect import)
 
 WRITE_ENGINE = "write-behind"   # per_engine stats bucket for writers
+
+# Coalesce-width ceiling applied when autotune is on but the caller left
+# `IOPolicy.coalesce` unset (None) — autotune alone should be able to
+# engage coalesced fetches, and the cost model holds the width at 1
+# anyway while the link looks bandwidth-bound.
+AUTOTUNE_COALESCE_CAP = 16
+
+# The facade's tuner accepts block sizes well below the paper-scale 1 MiB
+# floor: scaled benchmarks and tests run with KiB-range blocks.
+TUNER_MIN_BLOCKSIZE = 4 << 10
 
 
 @dataclass
@@ -57,12 +68,16 @@ class FSStats:
     opens: int = 0
     totals: dict = field(default_factory=dict)
     per_engine: dict = field(default_factory=dict)
+    # Closed-loop tuner estimates (latency_s, bandwidth_Bps,
+    # compute_s_per_byte, requests_observed); None when autotune is off.
+    tuner: dict | None = None
 
     def snapshot(self) -> dict:
         return {
             "opens": self.opens,
             "totals": dict(self.totals),
             "per_engine": {k: dict(v) for k, v in self.per_engine.items()},
+            "tuner": dict(self.tuner) if self.tuner is not None else None,
         }
 
 
@@ -91,6 +106,12 @@ class PrefetchFS:
         self._folded: dict[str, dict] = {}
         self._pool: UploadPool | None = None
         self._closed = False
+        # One tuner per filesystem: every autotuned open shares (and
+        # feeds) the same link/compute estimates.
+        self._tuner: BlockSizeTuner | None = (
+            BlockSizeTuner(min_blocksize=TUNER_MIN_BLOCKSIZE)
+            if self.policy.autotune else None
+        )
 
     # ------------------------------------------------------------------ #
     # opening readers
@@ -132,16 +153,57 @@ class PrefetchFS:
         with self._lock:
             if self._closed:
                 raise ValueError("open on closed PrefetchFS")
+            if pol.autotune:
+                pol = self._retune(pol, files, tiers)
             if tiers is not None:
                 use_tiers = list(tiers)
             elif spec.needs_tiers:
                 use_tiers = self._ensure_tiers(pol)
             else:
                 use_tiers = []
-            reader = spec.factory(self.store, files, use_tiers, pol)
+            if spec.accepts_tuner:
+                reader = spec.factory(self.store, files, use_tiers, pol,
+                                      tuner=self._tuner)
+            else:
+                reader = spec.factory(self.store, files, use_tiers, pol)
             self._prune_closed()
             self._handles.append((pol.engine, reader))
         return reader
+
+    def _retune(self, pol: IOPolicy, files: list[ObjectMeta],
+                tiers: Sequence[CacheTier] | None) -> IOPolicy:
+        """Closed-loop per-open retuning: pick the Eq.-4 blocksize from
+        the tuner's current link/compute estimates (falling back to the
+        policy blocksize while unobserved) and open the coalesce-width
+        ceiling so the engine's cost model can amortize request latency.
+        Caller holds `_lock`."""
+        tuner = self._ensure_tuner()
+        total = sum(m.size for m in files)
+        use_tiers = list(tiers) if tiers is not None else self._tiers
+        budget = (sum(t.capacity for t in use_tiers) if use_tiers
+                  else pol.default_tier_capacity())
+        blocksize = tuner.suggest_blocksize(
+            total, cache_budget=budget, default=pol.blocksize
+        )
+        # Open the ceiling only when the caller left coalesce unset: an
+        # explicit IOPolicy.coalesce — including 1, i.e. coalescing off —
+        # bounds the payload one request may carry (memory per GET,
+        # tier-fit granularity) and is not the tuner's to override.
+        coalesce = (pol.coalesce if pol.coalesce is not None
+                    else AUTOTUNE_COALESCE_CAP)
+        return pol.replace(blocksize=blocksize, coalesce=coalesce)
+
+    def _ensure_tuner(self) -> BlockSizeTuner:
+        if self._tuner is None:
+            self._tuner = BlockSizeTuner(min_blocksize=TUNER_MIN_BLOCKSIZE)
+        return self._tuner
+
+    @property
+    def tuner(self) -> BlockSizeTuner | None:
+        """The filesystem's closed-loop tuner (None until an autotuned
+        policy is seen)."""
+        with self._lock:
+            return self._tuner
 
     def open_write(self, key, *, policy: IOPolicy | None = None,
                    tiers: Sequence[CacheTier] | None = None,
@@ -208,7 +270,13 @@ class PrefetchFS:
         stats_obj = getattr(reader, "stats", None)
         snap = stats_obj.snapshot() if stats_obj is not None else {}
         for k, v in snap.items():
-            if isinstance(v, (int, float)):
+            if not isinstance(v, (int, float)):
+                continue
+            if k == "depth_peak":
+                # A high-water mark, not a counter: folding across
+                # reopened readers keeps the peak, not the sum of peaks.
+                bucket[k] = max(bucket.get(k, 0), v)
+            else:
                 bucket[k] = bucket.get(k, 0) + v
 
     def _prune_closed(self) -> None:
@@ -230,13 +298,20 @@ class PrefetchFS:
         with self._lock:
             per_engine = {k: dict(v) for k, v in self._folded.items()}
             handles = list(self._handles)
+            tuner = self._tuner
         for engine, handle in handles:
             self._fold_snapshot(per_engine.setdefault(engine, {}), handle)
         out = FSStats(per_engine=per_engine)
+        if tuner is not None:
+            out.tuner = tuner.estimates()
         for bucket in per_engine.values():
             out.opens += bucket.get("opens", 0)
             for k, v in bucket.items():
-                if k != "opens":
+                if k == "opens":
+                    continue
+                if k == "depth_peak":
+                    out.totals[k] = max(out.totals.get(k, 0), v)
+                else:
                     out.totals[k] = out.totals.get(k, 0) + v
         return out
 

@@ -21,25 +21,44 @@ class IOPolicy:
     """Reader *and* writer configuration shared by all engines.
 
     Fields consumed per engine:
-      * ``rolling``    — blocksize, depth, eviction_interval_s, max_retries,
-        retry_backoff_s, hedge_timeout_s, tier_capacity;
+      * ``rolling``    — blocksize, depth, max_depth, coalesce,
+        readahead_blocks, eviction_interval_s, max_retries,
+        retry_backoff_s, hedge_timeout_s, autotune, tier_capacity;
       * ``sequential`` — blocksize, cache_blocks;
       * ``direct``     — none (pass-through range reads);
       * write-behind `Writer` (``PrefetchFS.open_write``) — blocksize (the
         part size), write_depth, max_retries, retry_backoff_s,
         hedge_timeout_s, tier_capacity (staging budget).
+
+    The adaptive-scheduling knobs:
+      * ``coalesce`` — max adjacent blocks one store request may carry;
+        >1 turns on coalesced ``get_ranges`` fetches (the engine holds the
+        width at 1 while the link looks bandwidth-bound). The default
+        ``None`` means "unset": the engine fetches block-at-a-time, but
+        ``autotune`` may open the ceiling. An explicit value — including
+        1, i.e. coalescing off — is a hard bound autotune respects;
+      * ``readahead_blocks`` — fetch-window horizon ahead of the reader
+        position (None = race to end-of-plan, the paper's behaviour);
+      * ``max_depth`` — upper bound for the AIMD stream controller; None
+        pins concurrency at ``depth``;
+      * ``autotune`` — `PrefetchFS` owns a `BlockSizeTuner` fed by the
+        engine's observed request timings and compute gaps, and retunes
+        ``blocksize`` and ``coalesce`` on every open.
     """
 
     engine: str = "rolling"
     blocksize: int = 8 << 20
     depth: int = 1                      # concurrent prefetch streams
+    max_depth: int | None = None        # AIMD stream ceiling (None = fixed depth)
+    coalesce: int | None = None         # max blocks per range GET (None=unset)
+    readahead_blocks: int | None = None  # fetch horizon ahead of the reader
     write_depth: int = 2                # concurrent write-behind part uploads
     eviction_interval_s: float = 5.0
     max_retries: int = 3
     retry_backoff_s: float = 0.05
     hedge_timeout_s: float | None = None
     cache_blocks: int = 1               # sequential engine read-ahead cache
-    autotune: bool = False              # consumers may retune blocksize per open
+    autotune: bool = False              # retune blocksize/coalesce per open
     tier_capacity: int | None = None    # default cache budget when the FS owns tiers
 
     def __post_init__(self) -> None:
@@ -47,6 +66,16 @@ class IOPolicy:
             raise ValueError(f"blocksize must be positive, got {self.blocksize}")
         if self.depth < 1:
             raise ValueError(f"depth must be >= 1, got {self.depth}")
+        if self.max_depth is not None and self.max_depth < self.depth:
+            raise ValueError(
+                f"max_depth ({self.max_depth}) must be >= depth ({self.depth})"
+            )
+        if self.coalesce is not None and self.coalesce < 1:
+            raise ValueError(f"coalesce must be >= 1, got {self.coalesce}")
+        if self.readahead_blocks is not None and self.readahead_blocks < 1:
+            raise ValueError(
+                f"readahead_blocks must be >= 1, got {self.readahead_blocks}"
+            )
         if self.write_depth < 1:
             raise ValueError(
                 f"write_depth must be >= 1, got {self.write_depth}"

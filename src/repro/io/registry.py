@@ -21,19 +21,27 @@ class EngineSpec:
     name: str
     factory: ReaderFactory
     needs_tiers: bool = False   # whether the FS must supply cache tiers
+    accepts_tuner: bool = False  # factory takes a tuner= kwarg (closed loop)
 
 
 _REGISTRY: dict[str, EngineSpec] = {}
 
 
-def register_reader(name: str, *, needs_tiers: bool = False):
-    """Class/function decorator registering a reader engine factory."""
+def register_reader(name: str, *, needs_tiers: bool = False,
+                    accepts_tuner: bool = False):
+    """Class/function decorator registering a reader engine factory.
+
+    ``accepts_tuner`` engines receive the filesystem's `BlockSizeTuner`
+    as a ``tuner=`` keyword and are expected to feed it observed request
+    timings / compute gaps — that is the closed autotune loop.
+    """
 
     def deco(factory: ReaderFactory) -> ReaderFactory:
         if name in _REGISTRY:
             raise ValueError(f"reader engine {name!r} already registered")
         _REGISTRY[name] = EngineSpec(name=name, factory=factory,
-                                     needs_tiers=needs_tiers)
+                                     needs_tiers=needs_tiers,
+                                     accepts_tuner=accepts_tuner)
         return factory
 
     return deco

@@ -35,6 +35,9 @@ def main() -> None:
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--restore-mode", default="rolling",
                     choices=["rolling", "sequential"])
+    ap.add_argument("--autotune", action="store_true",
+                    help="adaptive restore: coalesced range GETs + AIMD "
+                         "stream depth + closed-loop blocksize tuning")
     ap.add_argument("--store", default="sims3://weights?latency_ms=10&bw_mbps=80",
                     help="weight store URI (any registered scheme)")
     ap.add_argument("--temperature", type=float, default=0.0)
@@ -56,6 +59,8 @@ def main() -> None:
     params, _ = restore_checkpoint(
         store, "weights", params,
         policy=IOPolicy(engine=args.restore_mode, depth=2,
+                        max_depth=8 if args.autotune else None,
+                        autotune=args.autotune,
                         eviction_interval_s=0.2),
     )
     print(f"weight restore ({args.restore_mode}): {time.time() - t0:.2f}s")

@@ -32,6 +32,22 @@ class ObjectMeta:
     size: int
 
 
+def adjacent_runs(
+    spans: list[tuple[int, int]],
+) -> list[list[tuple[int, int]]]:
+    """Group spans into maximal runs where each span starts exactly where
+    the previous one ended — the unit a coalescing store can serve with a
+    single request. Order is preserved; non-adjacent neighbours break the
+    run."""
+    runs: list[list[tuple[int, int]]] = []
+    for span in spans:
+        if runs and runs[-1][-1][1] == span[0]:
+            runs[-1].append(span)
+        else:
+            runs.append([span])
+    return runs
+
+
 class MultipartUpload:
     """Portable client-buffered multipart upload.
 
@@ -60,7 +76,9 @@ class MultipartUpload:
         with self._lock:
             if self._aborted:
                 raise StoreError(f"multipart {self.key!r}: upload aborted")
-            self._parts[index] = bytes(data)
+            # Immutable input needs no defensive copy; only bytearray /
+            # memoryview parts (mutable after return) are snapshotted.
+            self._parts[index] = data if type(data) is bytes else bytes(data)
 
     def complete(self) -> None:
         """Assemble parts 0..n-1 and publish the object atomically. Safe
@@ -107,6 +125,21 @@ class ObjectStore(abc.ABC):
         """Fetch bytes [start, end) of `key`. One call == one request
         (pays one latency)."""
 
+    def get_ranges(
+        self, key: str, spans: list[tuple[int, int]]
+    ) -> list[bytes]:
+        """Vectorized range fetch: bytes for each [start, end) span of
+        `key`, in span order.
+
+        The portable fallback issues one request per span. Stores with a
+        cheaper native path override it: the simulated S3 coalesces runs
+        of adjacent spans into one request (one latency for the whole
+        run), the directory store serves every span from a single file
+        open. Adjacent spans SHOULD therefore be passed in stream order —
+        that is what the prefetch scheduler's coalesced GETs do.
+        """
+        return [self.get_range(key, start, end) for start, end in spans]
+
     @abc.abstractmethod
     def put(self, key: str, data: bytes) -> None:
         ...
@@ -116,6 +149,9 @@ class ObjectStore(abc.ABC):
         ...
 
     def get(self, key: str) -> bytes:
+        """Fetch the whole object. The portable fallback pays two
+        round-trips (HEAD for the size, then the ranged GET); concrete
+        stores override it to serve whole-object gets in one request."""
         return self.get_range(key, 0, self.size(key))
 
     def start_multipart(self, key: str) -> MultipartUpload:

@@ -39,6 +39,12 @@ class LinkModel:
     bytes_moved: int = field(default=0, repr=False)
     requests: int = field(default=0, repr=False)
     busy_s: float = field(default=0.0, repr=False)
+    latency_paid_s: float = field(default=0.0, repr=False)
+    # Coalesced-transfer accounting: a vectorized get_ranges run charges
+    # ONE request for several logical spans — `spans_served` counts the
+    # spans, `coalesced_requests` the requests that carried more than one.
+    spans_served: int = field(default=0, repr=False)
+    coalesced_requests: int = field(default=0, repr=False)
 
     def __post_init__(self) -> None:
         self._rng = random.Random(self.seed)
@@ -57,8 +63,11 @@ class LinkModel:
                 raise TransientStoreError(f"{self.name}: injected random failure")
 
     # -- transfer ---------------------------------------------------------
-    def transfer(self, nbytes: int) -> None:
-        """Block for the simulated duration of moving `nbytes`."""
+    def transfer(self, nbytes: int, spans: int = 1) -> None:
+        """Block for the simulated duration of moving `nbytes` as ONE
+        request. `spans` is telemetry only: how many logical ranges the
+        request carried (a coalesced get_ranges run pays one latency for
+        all of them; the cost charged here is identical either way)."""
         self._maybe_fail()
         lat = self.latency_s
         if self.jitter > 0.0:
@@ -82,6 +91,10 @@ class LinkModel:
         with self._lock:
             self.bytes_moved += nbytes
             self.requests += 1
+            self.latency_paid_s += lat
+            self.spans_served += max(1, spans)
+            if spans > 1:
+                self.coalesced_requests += 1
 
     # -- observed constants (for the cost-model autotuner) -----------------
     def observed_bandwidth(self) -> float:
@@ -89,6 +102,15 @@ class LinkModel:
             if self.busy_s == 0.0:
                 return self.bandwidth_Bps
             return self.bytes_moved / self.busy_s
+
+    def observed_latency(self) -> float:
+        """Mean per-request latency actually paid (== `latency_s` when
+        jitter is off); the ground truth the closed-loop tuner's estimate
+        is validated against."""
+        with self._lock:
+            if self.requests == 0:
+                return self.latency_s
+            return self.latency_paid_s / self.requests
 
 
 # Paper Table I constants (t2.xlarge, us-west-2), in SI bytes/sec.

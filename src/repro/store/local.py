@@ -42,6 +42,24 @@ class MemStore(ObjectStore):
             raise StoreError(f"bad range [{start}, {end})")
         return data[start:end]
 
+    def get_ranges(self, key: str, spans: list[tuple[int, int]]) -> list[bytes]:
+        with self._lock:
+            try:
+                data = self._objects[key]
+            except KeyError:
+                raise StoreError(f"no such object: {key}") from None
+        for start, end in spans:
+            if start < 0 or end < start:
+                raise StoreError(f"bad range [{start}, {end})")
+        return [data[start:end] for start, end in spans]
+
+    def get(self, key: str) -> bytes:
+        with self._lock:
+            try:
+                return self._objects[key]
+            except KeyError:
+                raise StoreError(f"no such object: {key}") from None
+
     def put(self, key: str, data: bytes) -> None:
         with self._lock:
             self._objects[key] = bytes(data)
@@ -150,6 +168,25 @@ class DirStore(ObjectStore):
             with open(self._path(key), "rb") as f:
                 f.seek(start)
                 return f.read(end - start)
+        except OSError:
+            raise StoreError(f"no such object: {key}") from None
+
+    def get_ranges(self, key: str, spans: list[tuple[int, int]]) -> list[bytes]:
+        # One open per call: every span is a seek + read on the same fd.
+        try:
+            with open(self._path(key), "rb") as f:
+                out = []
+                for start, end in spans:
+                    f.seek(start)
+                    out.append(f.read(end - start))
+                return out
+        except OSError:
+            raise StoreError(f"no such object: {key}") from None
+
+    def get(self, key: str) -> bytes:
+        try:
+            with open(self._path(key), "rb") as f:
+                return f.read()
         except OSError:
             raise StoreError(f"no such object: {key}") from None
 

@@ -7,7 +7,12 @@ Failure injection on the link drives the fault-tolerance tests.
 
 from __future__ import annotations
 
-from repro.store.base import MultipartUpload, ObjectMeta, ObjectStore
+from repro.store.base import (
+    MultipartUpload,
+    ObjectMeta,
+    ObjectStore,
+    adjacent_runs,
+)
 from repro.store.link import LinkModel
 from repro.store.local import MemStore
 
@@ -49,6 +54,28 @@ class SimS3Store(ObjectStore):
 
     def get_range(self, key: str, start: int, end: int) -> bytes:
         data = self.backing.get_range(key, start, end)
+        self.link.transfer(len(data))
+        return data
+
+    def get_ranges(self, key: str, spans: list[tuple[int, int]]) -> list[bytes]:
+        """Coalesced range GET: every maximal run of adjacent spans is one
+        request — one `latency_s` for the whole run, payload charged once
+        at the run's total size (an S3 `Range: a-b` header covering the
+        run). Non-adjacent runs each pay their own request."""
+        out: list[bytes] = []
+        for run in adjacent_runs(spans):
+            start, end = run[0][0], run[-1][1]
+            data = self.backing.get_range(key, start, end)
+            self.link.transfer(len(data), spans=len(run))
+            if len(run) == 1:
+                out.append(data)
+            else:
+                out.extend(data[s - start:e - start] for s, e in run)
+        return out
+
+    def get(self, key: str) -> bytes:
+        # Whole-object GET: one request, no HEAD round-trip for the size.
+        data = self.backing.get(key)
         self.link.transfer(len(data))
         return data
 
