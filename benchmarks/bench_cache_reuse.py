@@ -1,0 +1,219 @@
+"""Shared/persistent cache A/B: crash-warm restarts and cross-reader
+single-flight, on the scaled-Table-I simulated S3 store.
+
+Two scenarios, mirroring the north-star workload (many readers / restarted
+jobs hitting the same objects):
+
+  * ``restart`` — the same logical job runs twice over a persistent
+    journaled `DirTier`. The cold run fetches every block from the store;
+    the "restarted" run constructs a brand-new tier over the same
+    directory (journal recovery) and a brand-new `PrefetchFS` (index
+    primed from the recovered tier). Acceptance: the warm run performs
+    **zero** store GETs for cached blocks.
+  * ``shared`` — N concurrent readers stream the same file. With the
+    shared `CacheIndex` (one fs), single-flight registration means every
+    block crosses the store once (~1x); the baseline arm gives each
+    reader its own fs + tier (the pre-PR behaviour) and pays ~Nx.
+
+Emits ``name,us_per_call,derived`` CSV rows and writes the full record to
+``BENCH_cache.json`` so CI tracks cache-reuse behaviour over time.
+
+  PYTHONPATH=src python -m benchmarks.bench_cache_reuse [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import threading
+import time
+
+from benchmarks.common import S3_BW, S3_LATENCY, emit, make_trk_dataset
+from repro.io import IOPolicy, PrefetchFS, open_store
+from repro.store import DirTier, MemTier
+
+
+def _store(ds, bucket: str):
+    store = open_store(
+        f"sims3://{bucket}?latency_ms={S3_LATENCY * 1e3:g}"
+        f"&bw_mbps={S3_BW / 1e6:g}",
+        fresh=True,
+    )
+    for k, v in ds.objects.items():
+        store.backing.put(k, v)
+    return store
+
+
+# --------------------------------------------------------------------------- #
+# scenario 1: cold vs warm (crash/restart) through a persistent DirTier
+# --------------------------------------------------------------------------- #
+def bench_restart(n_files: int, blocksize: int, cache_root: str) -> dict:
+    ds = make_trk_dataset(n_files)
+    store = _store(ds, "bench-cache-restart")
+    policy = IOPolicy(engine="rolling", blocksize=blocksize, depth=2,
+                      keep_cached=True, eviction_interval_s=0.05)
+    capacity = 2 * ds.total_bytes
+
+    def run() -> tuple[float, dict]:
+        tier = DirTier(capacity, root=cache_root)
+        fs = PrefetchFS(store, policy=policy, tiers=[tier])
+        t0 = time.perf_counter()
+        try:
+            with fs:
+                f = fs.open_many(ds.metas())
+                data = f.read()
+                f.close()
+            dt = time.perf_counter() - t0
+        finally:
+            tier.close()   # release the root lock; the "restart" owns it next
+        assert data == b"".join(v for _, v in sorted(ds.objects.items()))
+        return dt, fs.stats().snapshot()
+
+    t_cold, cold = run()
+    bytes_before_warm = store.link.bytes_moved
+    t_warm, warm = run()                     # fresh tier object: recovery
+    warm_fetched = warm["totals"].get("blocks_fetched", 0)
+    cold_fetched = cold["totals"].get("blocks_fetched", 0)
+    # Acceptance: a restarted job pays ZERO store GETs for cached blocks
+    # (the link moves no data bytes; size HEADs are payload-free).
+    assert warm_fetched == 0, f"warm restart refetched {warm_fetched} blocks"
+    assert store.link.bytes_moved == bytes_before_warm
+    assert warm["cache"]["recovered"] == cold_fetched
+    speedup = t_cold / t_warm
+    emit("cache_restart_cold", t_cold * 1e6, f"blocks={cold_fetched}")
+    emit("cache_restart_warm", t_warm * 1e6,
+         f"store_gets=0;hits={warm['totals'].get('cache_hits', 0)};"
+         f"speedup={speedup:.2f}x")
+    return dict(
+        cold_s=t_cold,
+        warm_s=t_warm,
+        speedup=speedup,
+        cold_blocks_fetched=cold_fetched,
+        warm_blocks_fetched=warm_fetched,
+        warm_cache_hits=warm["totals"].get("cache_hits", 0),
+        recovered_blocks=warm["cache"]["recovered"],
+        params=dict(n_files=n_files, blocksize=blocksize,
+                    dataset_bytes=ds.total_bytes),
+    )
+
+
+# --------------------------------------------------------------------------- #
+# scenario 2: N concurrent readers, shared index vs per-reader caches
+# --------------------------------------------------------------------------- #
+def bench_shared_readers(n_readers: int, blocksize: int) -> dict:
+    ds = make_trk_dataset(1, streamlines_per_file=8000)
+    want = b"".join(v for _, v in sorted(ds.objects.items()))
+    nblocks = -(-ds.total_bytes // blocksize)
+    policy = IOPolicy(engine="rolling", blocksize=blocksize, depth=2,
+                      keep_cached=True, eviction_interval_s=0.05)
+
+    def run_threads(open_reader) -> tuple[float, list]:
+        readers: list = [None] * n_readers
+        errs: list = []
+
+        def go(i):
+            try:
+                f = open_reader()
+                readers[i] = f
+                assert f.read() == want
+                f.close()
+            except Exception as e:   # noqa: BLE001 — surfaced below
+                errs.append(e)
+
+        threads = [threading.Thread(target=go, args=(i,))
+                   for i in range(n_readers)]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        dt = time.perf_counter() - t0
+        assert not errs, errs
+        return dt, readers
+
+    # Shared arm: ONE fs -> one CacheIndex -> single-flight fetches.
+    store_a = _store(ds, "bench-cache-shared")
+    fs = PrefetchFS(store_a, policy=policy,
+                    tiers=[MemTier(2 * ds.total_bytes)])
+    t_shared, readers = run_threads(lambda: fs.open_many(ds.metas()))
+    shared_fetched = sum(r.stats.blocks_fetched for r in readers)
+    shared_hits = sum(r.stats.cache_hits + r.stats.flight_joins
+                      for r in readers)
+    fs.close()
+
+    # Baseline arm: every reader brings its own fs + tier (pre-PR shape).
+    store_b = _store(ds, "bench-cache-unshared")
+
+    def own_fs_reader():
+        one = PrefetchFS(store_b, policy=policy,
+                         tiers=[MemTier(2 * ds.total_bytes)])
+        return one.open_many(ds.metas())
+
+    t_unshared, readers_b = run_threads(own_fs_reader)
+    unshared_fetched = sum(r.stats.blocks_fetched for r in readers_b)
+
+    # Acceptance: shared readers issue ~1x (not Nx) block fetches.
+    assert shared_fetched == nblocks, (
+        f"shared arm fetched {shared_fetched}, expected {nblocks}"
+    )
+    assert unshared_fetched == n_readers * nblocks
+    speedup = t_unshared / t_shared
+    emit("cache_shared_readers", t_shared * 1e6,
+         f"n={n_readers};fetched={shared_fetched};hits={shared_hits};"
+         f"speedup={speedup:.2f}x")
+    emit("cache_unshared_readers", t_unshared * 1e6,
+         f"n={n_readers};fetched={unshared_fetched}")
+    return dict(
+        shared_s=t_shared,
+        unshared_s=t_unshared,
+        speedup=speedup,
+        n_readers=n_readers,
+        blocks=nblocks,
+        shared_blocks_fetched=shared_fetched,
+        unshared_blocks_fetched=unshared_fetched,
+        fetch_amplification_shared=shared_fetched / nblocks,
+        fetch_amplification_unshared=unshared_fetched / nblocks,
+        params=dict(blocksize=blocksize, dataset_bytes=ds.total_bytes),
+    )
+
+
+def main(quick: bool = False, out: str = "BENCH_cache.json") -> None:
+    with tempfile.TemporaryDirectory(prefix="bench-cache-") as tmp:
+        cache_root = os.path.join(tmp, "tier")
+        if quick:
+            restart = bench_restart(n_files=4, blocksize=64 << 10,
+                                    cache_root=cache_root)
+            shared = bench_shared_readers(n_readers=4, blocksize=64 << 10)
+        else:
+            restart = bench_restart(n_files=12, blocksize=128 << 10,
+                                    cache_root=cache_root)
+            shared = bench_shared_readers(n_readers=8, blocksize=64 << 10)
+
+    record = dict(
+        restart=restart,
+        shared=shared,
+        link=dict(latency_s=S3_LATENCY, bandwidth_Bps=S3_BW),
+        smoke=bool(quick),
+    )
+    with open(out, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"wrote {out}: warm restart {restart['speedup']:.2f}x with "
+          f"{restart['warm_blocks_fetched']} store GETs; "
+          f"{shared['n_readers']} shared readers fetched "
+          f"{shared['fetch_amplification_shared']:.2f}x blocks "
+          f"(unshared {shared['fetch_amplification_unshared']:.2f}x)")
+
+
+def _cli() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI (seconds, not minutes)")
+    ap.add_argument("--out", default="BENCH_cache.json")
+    args = ap.parse_args()
+    main(quick=args.smoke, out=args.out)
+
+
+if __name__ == "__main__":
+    _cli()

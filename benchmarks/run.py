@@ -20,6 +20,7 @@ BENCHES = {
     "ckpt_restore": "benchmarks.bench_ckpt_restore",
     "adaptive_read": "benchmarks.bench_adaptive_read",
     "write_pipeline": "benchmarks.bench_write_pipeline",
+    "cache_reuse": "benchmarks.bench_cache_reuse",
     "roofline": "benchmarks.bench_roofline",
 }
 

@@ -180,6 +180,8 @@ def restore_checkpoint(
     policy: IOPolicy | None = None,
     mode: str | None = None,
     tiers: list[CacheTier] | None = None,
+    cache_dir: str | None = None,
+    cache_capacity: int | None = None,
     blocksize: int = 8 << 20,
     prefetch_depth: int = 2,
 ):
@@ -191,52 +193,84 @@ def restore_checkpoint(
     reader engine and its knobs. ``mode``/``blocksize``/``prefetch_depth``
     are the deprecated pre-facade spelling and are folded into a policy
     when no explicit ``policy`` is given.
+
+    ``cache_dir`` makes the restore crash-warm: leaf blocks cache in a
+    persistent journaled `DirTier` under that directory and stay resident
+    after the restore (``keep_cached``), so a restarted job — a replaced
+    serve replica, a preempted trainer — restores the same step with zero
+    store GETs for every block that survived on local disk. The journal's
+    checksums discard torn blocks from a mid-write crash.
+    ``cache_capacity`` bounds the directory (default: 4x blocksize or
+    256 MiB, whichever is larger).
     """
     store = open_store(store)
-    if mode is not None:
-        warnings.warn(
-            "restore_checkpoint(mode=...) is deprecated; pass "
-            "policy=IOPolicy(engine=...) instead",
-            DeprecationWarning,
-            stacklevel=2,
-        )
-    if policy is None:
-        policy = IOPolicy(
-            engine=mode or "rolling",
-            blocksize=blocksize,
-            depth=prefetch_depth,
-            eviction_interval_s=0.2,
-        )
-    if step is None:
-        step = latest_step(store, prefix)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoint under {prefix!r}")
-    manifest = _load_manifest(store, prefix, step)
-    t_leaves, treedef = _flatten(template)
-    entries = manifest["leaves"]
-    if len(entries) != len(t_leaves):
-        raise ValueError(
-            f"template has {len(t_leaves)} leaves, checkpoint {len(entries)}"
-        )
+    warm_cache = cache_dir is not None and tiers is None
+    if warm_cache:
+        from repro.store.tiers import DirTier
 
-    files = [
-        ObjectMeta(e["key"], _with_retries(lambda k=e["key"]: store.size(k)))
-        for e in entries
-    ]
-    out = []
-    with PrefetchFS(store, policy=policy, tiers=tiers) as fs:
-        stream = fs.open_many(files)
-        read = getattr(stream, "readview", stream.read)
-        for meta, entry, tmpl in zip(files, entries, t_leaves):
-            # readview: a leaf inside one cached block decodes zero-copy
-            # (np.frombuffer over the block buffer's memoryview).
-            raw = read(meta.size)
-            arr = np.frombuffer(
-                raw, dtype=_dtype_from_str(entry["dtype"])
-            ).reshape(entry["shape"])
-            sharding = getattr(tmpl, "sharding", None)
-            # device_put overlaps with the prefetch of subsequent leaves.
-            out.append(jax.device_put(arr, sharding))
+        cap = cache_capacity
+        if cap is None:
+            bs = policy.blocksize if policy is not None else blocksize
+            cap = max(4 * bs, 256 << 20)
+        tiers = [DirTier(cap, root=cache_dir, name="ckpt.cache")]
+    # Everything past tier construction runs under the finally that
+    # releases the cache root's advisory lock — a missing manifest or a
+    # failed metadata call must not leak the lock in a long-lived process
+    # (the retry's DirTier would silently become a non-owner).
+    try:
+        if mode is not None:
+            warnings.warn(
+                "restore_checkpoint(mode=...) is deprecated; pass "
+                "policy=IOPolicy(engine=...) instead",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+        if policy is None:
+            policy = IOPolicy(
+                engine=mode or "rolling",
+                blocksize=blocksize,
+                depth=prefetch_depth,
+                eviction_interval_s=0.2,
+            )
+        if warm_cache and not policy.keep_cached:
+            policy = policy.replace(keep_cached=True)
+        if step is None:
+            step = latest_step(store, prefix)
+            if step is None:
+                raise FileNotFoundError(f"no checkpoint under {prefix!r}")
+        manifest = _load_manifest(store, prefix, step)
+        t_leaves, treedef = _flatten(template)
+        entries = manifest["leaves"]
+        if len(entries) != len(t_leaves):
+            raise ValueError(
+                f"template has {len(t_leaves)} leaves, checkpoint {len(entries)}"
+            )
+
+        files = [
+            ObjectMeta(e["key"], _with_retries(lambda k=e["key"]: store.size(k)))
+            for e in entries
+        ]
+        out = []
+        with PrefetchFS(store, policy=policy, tiers=tiers) as fs:
+            stream = fs.open_many(files)
+            read = getattr(stream, "readview", stream.read)
+            for meta, entry, tmpl in zip(files, entries, t_leaves):
+                # readview: a leaf inside one cached block decodes zero-copy
+                # (np.frombuffer over the block buffer's memoryview).
+                raw = read(meta.size)
+                arr = np.frombuffer(
+                    raw, dtype=_dtype_from_str(entry["dtype"])
+                ).reshape(entry["shape"])
+                sharding = getattr(tmpl, "sharding", None)
+                # device_put overlaps with the prefetch of subsequent leaves.
+                out.append(jax.device_put(arr, sharding))
+    finally:
+        if warm_cache:
+            # Release the lock; blocks stay on disk for the next —
+            # possibly warm — restore.
+            for t in tiers:
+                with contextlib.suppress(Exception):
+                    t.close()
     return jax.tree_util.tree_unflatten(treedef, out), manifest
 
 

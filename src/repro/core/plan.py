@@ -33,7 +33,12 @@ class Block:
 
     @property
     def block_id(self) -> str:
-        return f"{self.file_index:06d}.{self.start:015d}.{self.key}"
+        # Content-addressed (key + byte range), NOT plan-relative: two
+        # readers with different file lists — or a restarted job — derive
+        # the same id for the same stored bytes, which is what lets the
+        # shared CacheIndex and a recovered persistent DirTier serve them
+        # without re-fetching.
+        return f"{self.key}@{self.start:015d}-{self.end:015d}"
 
 
 class BlockPlan:

@@ -50,7 +50,7 @@ from dataclasses import dataclass, field
 from repro.core.autotune import AimdDepthController, BlockSizeTuner
 from repro.core.plan import Block, BlockPlan
 from repro.store.base import ObjectMeta, ObjectStore, StoreError, TransientStoreError
-from repro.store.tiers import CacheTier
+from repro.store.tiers import BlockMeta, CacheFlight, CacheIndex, CacheTier
 from repro.utils import get_logger
 
 log = get_logger("core.rolling")
@@ -70,6 +70,11 @@ class _BlockInfo:
     state: BlockState = BlockState.UNFETCHED
     tier: CacheTier | None = None
     error: Exception | None = None
+    # The reader gave up waiting (READ_PATIENCE_S) and read this block
+    # directly from the store: when the scheduled fetch finally lands, it
+    # arrives pre-consumed so its pin is released instead of sitting
+    # CACHED forever for a reader that already moved past it.
+    abandoned: bool = False
 
 
 @dataclass
@@ -89,6 +94,8 @@ class PrefetchStats:
     retries: int = 0
     hedges: int = 0
     direct_reads: int = 0       # cache-miss fallbacks (backward seeks)
+    cache_hits: int = 0         # blocks served from the shared index, no GET
+    flight_joins: int = 0       # blocks obtained by joining another reader's GET
     store_requests: int = 0     # GETs issued (== blocks_fetched unless coalesced)
     coalesced_requests: int = 0  # GETs that carried more than one block
     coalesced_blocks: int = 0    # blocks delivered by coalesced GETs
@@ -114,6 +121,17 @@ class PrefetchStats:
 class RollingPrefetcher:
     """Shared engine: block plan + tiered cache + the scheduler threads."""
 
+    # Upper bound on how long the READER waits for a block the scheduler
+    # has not delivered before degrading to a direct store read. Normal
+    # waits are milliseconds; this only fires when the shared-cache
+    # machinery is wedged (e.g. another reader's pinned readahead holds
+    # every tier byte while that reader waits on our leader — a cycle no
+    # eviction can break). A direct GET restores progress for everyone:
+    # this reader consumes on, its pins release, the parked leader gets
+    # space. The paper's worst-case contract (degrade to sequential
+    # performance, never hang) is preserved.
+    READ_PATIENCE_S = 30.0
+
     def __init__(
         self,
         store: ObjectStore,
@@ -131,6 +149,7 @@ class RollingPrefetcher:
         retry_backoff_s: float = 0.05,
         hedge_timeout_s: float | None = None,
         tuner: BlockSizeTuner | None = None,
+        index: CacheIndex | None = None,
     ) -> None:
         if not tiers:
             raise ValueError("at least one cache tier is required")
@@ -158,6 +177,14 @@ class RollingPrefetcher:
         self.retry_backoff_s = retry_backoff_s
         self.hedge_timeout_s = hedge_timeout_s
         self.tuner = tuner
+        # Shared cache index: residency + refcounts + single-flight fetch
+        # registration. When the caller (PrefetchFS) supplies one, every
+        # reader over these tiers shares it — N readers of the same key
+        # issue ~1x store GETs, and a block pinned by any reader is never
+        # evicted from under another. A private index (one reader) behaves
+        # exactly like the paper's per-reader cache, except that a
+        # persistent DirTier still primes it warm after a restart.
+        self.index = index if index is not None else CacheIndex(tiers)
         self.stats = PrefetchStats()
         self._aimd = (
             AimdDepthController(depth, max_depth)
@@ -329,23 +356,87 @@ class RollingPrefetcher:
                 return
 
     def _place_run(self, run: list[Block]) -> bool:
-        """Reserve tier space for `run` and fetch it; shrinks the run when
-        only a single block fits, parks (eviction-notified) when every
-        tier is full. Returns False when this stream should exit."""
+        """Resolve each claimed block against the shared cache index:
+        blocks already resident (another reader, a previous epoch, or a
+        recovered persistent tier) are pinned without a store request,
+        blocks another reader is fetching right now are joined, and only
+        blocks this stream leads are fetched — contiguous leader groups
+        still go out as ONE coalesced request. Returns False when this
+        stream should exit."""
+        group: list[tuple[Block, CacheFlight]] = []
+        for pos, b in enumerate(run):
+            kind, val = self.index.acquire(b.block_id)
+            if kind == "leader":
+                group.append((b, val))
+                continue
+            if not self._flush_group(group):
+                self._fail_rest(run[pos:], skip_acquired=(b, kind, val))
+                return False
+            group = []
+            if kind == "hit":
+                self.stats.bump(cache_hits=1)
+                self._mark_cached(b, val)
+            elif not self._join_flight(b, val):
+                self._fail_rest(run[pos + 1:])
+                return False
+        return self._flush_group(group)
+
+    def _fail_rest(self, rest: list[Block], skip_acquired=None) -> None:
+        """A group failed permanently mid-run: the remaining claimed
+        blocks can never be fetched by this stream — mark them FAILED so
+        the reader raises instead of waiting forever (matching the old
+        whole-run-FAILED semantics). On shutdown they are unclaimed
+        instead. Pins/flights already acquired for them are released."""
+        with self._cond:
+            closing = not self._fetch
+            err: Exception | None = None
+            unclaim: list[Block] = []
+            for b in rest:
+                info = self._info[b.index]
+                if info.state != BlockState.FETCHING:
+                    continue
+                if skip_acquired is not None and skip_acquired[0] is b:
+                    _, kind, val = skip_acquired
+                    if kind == "hit":
+                        self.index.unpin(b.block_id)
+                    elif kind == "wait":
+                        self.index.leave(val)
+                if closing:
+                    unclaim.append(b)
+                    continue
+                if err is None:
+                    err = StoreError("prefetch stream failed upstream")
+                info.state = BlockState.FAILED
+                info.error = err
+            if unclaim:
+                self._unclaim(unclaim)
+            self._cond.notify_all()
+
+    def _flush_group(self, group: list[tuple[Block, CacheFlight]]) -> bool:
+        """Reserve tier space for a contiguous group of leader blocks and
+        fetch it as one request; shrinks to the head block when only one
+        fits, parks (eviction-notified) when every tier is full. Returns
+        False when this stream should exit."""
+        if not group:
+            return True
         while True:
             with self._cond:
                 if not self._fetch:
-                    self._unclaim(run)
+                    for b, fl in group:
+                        self.index.abort_fetch(fl)
+                    self._unclaim([b for b, _ in group])
                     return False
-            total = sum(b.size for b in run)
+            total = sum(b.size for b, _ in group)
             tier = self._reserve(total)
-            if tier is None and len(run) > 1:
-                # The full run doesn't fit anywhere — give back the tail
+            if tier is None and len(group) > 1:
+                # The full group doesn't fit anywhere — give back the tail
                 # and try the head block alone before parking.
                 with self._cond:
-                    self._unclaim(run[1:])
+                    for b, fl in group[1:]:
+                        self.index.abort_fetch(fl)
+                    self._unclaim([b for b, _ in group[1:]])
                     self._cond.notify_all()
-                run = run[:1]
+                group = group[:1]
                 continue
             if tier is None:
                 # Every tier full: demand eviction, then park until the
@@ -356,43 +447,94 @@ class RollingPrefetcher:
                         self._cond.wait(timeout=0.5)
                 continue
             try:
-                self._fetch_into(run, tier)
+                self._fetch_group(group, tier)
                 return True
-            except StoreError as e:
+            except Exception as e:  # noqa: BLE001 — flights MUST abort:
+                # a leaked flight would park every waiter (other readers
+                # included) until their patience fallback, and this
+                # reader's blocks would stay FETCHING forever.
                 tier.cancel(total)
+                err = e if isinstance(e, StoreError) else StoreError(
+                    f"fetch failed for blocks "
+                    f"{group[0][0].block_id}..{group[-1][0].block_id}: {e}"
+                )
                 with self._cond:
-                    for b in run:
+                    for b, fl in group:
+                        self.index.abort_fetch(fl, err)
                         self._info[b.index].state = BlockState.FAILED
-                        self._info[b.index].error = e
+                        self._info[b.index].error = err
                     self._cond.notify_all()
                 log.error("blocks %s..%s failed permanently: %s",
-                          run[0].block_id, run[-1].block_id, e)
+                          group[0][0].block_id, group[-1][0].block_id, e)
                 return False
 
-    def _reserve(self, nbytes: int) -> CacheTier | None:
-        # Priority-ordered tier walk, with verify_used reconciliation
-        # when a tier appears full (Algorithm 1).
-        for cand in self.tiers:
-            if cand.available() < nbytes:
-                cand.verify_used()
-            if cand.reserve(nbytes):
-                return cand
-        return None
+    def _join_flight(self, b: Block, flight: CacheFlight) -> bool:
+        """Another reader is fetching `b` right now: wait for its flight
+        instead of issuing a duplicate GET. If the leader fails, retry the
+        block ourselves (possibly becoming the new leader). Returns False
+        when this stream should exit."""
+        while True:
+            with self._cond:
+                if not self._fetch:
+                    self.index.leave(flight)
+                    self._unclaim([b])
+                    return False
+            kind, val = self.index.join(flight, timeout=0.5)
+            if kind == "timeout":
+                continue
+            if kind == "hit":
+                self.stats.bump(flight_joins=1)
+                self._mark_cached(b, val)
+                return True
+            # Leader failed (or abandoned): re-acquire; the block may have
+            # landed meanwhile, someone else may be retrying it, or we
+            # become the leader and run our own retry budget.
+            kind, val = self.index.acquire(b.block_id)
+            if kind == "hit":
+                self.stats.bump(cache_hits=1)
+                self._mark_cached(b, val)
+                return True
+            if kind == "wait":
+                flight = val
+                continue
+            return self._flush_group([(b, val)])
 
-    def _fetch_into(self, run: list[Block], tier: CacheTier) -> None:
+    def _mark_cached(self, b: Block, tier: CacheTier) -> None:
+        evict = False
+        with self._cond:
+            info = self._info[b.index]
+            info.state = (BlockState.CONSUMED if info.abandoned
+                          else BlockState.CACHED)
+            info.tier = tier
+            evict = info.abandoned
+            self._cond.notify_all()
+        if evict:
+            self._request_eviction()
+
+    def _reserve(self, nbytes: int) -> CacheTier | None:
+        # Priority-ordered tier walk with verify_used reconciliation and
+        # capacity-pressure LRU eviction of unpinned index blocks, shared
+        # with the sequential engine via the index.
+        return self.index.reserve_space(nbytes)
+
+    def _fetch_group(self, group: list[tuple[Block, CacheFlight]],
+                     tier: CacheTier) -> None:
+        run = [b for b, _ in group]
         total = sum(b.size for b in run)
         t0 = time.perf_counter()
         datas, store_s = self._fetch_with_retries(run)
         written: list[Block] = []
         try:
             for b, d in zip(run, datas):
-                tier.write(b.block_id, d)
+                tier.write(b.block_id, d,
+                           meta=BlockMeta(key=b.key, offset=b.start))
                 written.append(b)
         except Exception as e:
             # A mid-run write failure must not orphan the blocks that
             # already landed: the caller cancels the whole reservation,
             # and FAILED blocks are invisible to eviction, so resident
-            # bytes would leak past the tier's accounting forever.
+            # bytes would leak past the tier's accounting forever. None of
+            # these blocks were published yet, so no index entry to undo.
             for b in written:
                 try:
                     tier.delete(b.block_id)
@@ -431,12 +573,20 @@ class RollingPrefetcher:
                     self._cond.notify_all()
             if grew:
                 self._spawn_streams(new)
+        evict = False
         with self._cond:
-            for b in run:
+            for b, fl in group:
+                # Publish pins the entry for us (plus any waiters); our
+                # pin is released when this reader's eviction unpins it.
+                self.index.publish(fl, tier, b.size)
                 info = self._info[b.index]
-                info.state = BlockState.CACHED
+                info.state = (BlockState.CONSUMED if info.abandoned
+                              else BlockState.CACHED)
                 info.tier = tier
+                evict = evict or info.abandoned
             self._cond.notify_all()
+        if evict:
+            self._request_eviction()
 
     def _fetch_with_retries(
         self, run: list[Block]
@@ -577,6 +727,7 @@ class RollingPrefetcher:
                          *, view: bool = False) -> bytes | memoryview:
         info = self._info[block.index]
         t0 = time.perf_counter()
+        stalled = False
         with self._cond:
             # Advancing the reader position releases readahead-horizon
             # headroom — wake parked prefetch streams BEFORE waiting on
@@ -585,21 +736,64 @@ class RollingPrefetcher:
                 self._reader_block = block.index
                 self._cond.notify_all()
             while info.state in (BlockState.UNFETCHED, BlockState.FETCHING):
+                # An already-abandoned block short-circuits: once one
+                # read() burned the full patience on this block, later
+                # reads into it go direct immediately instead of paying
+                # another 30 s each.
+                if info.abandoned or time.perf_counter() - t0 > self.READ_PATIENCE_S:
+                    stalled = True
+                    info.abandoned = True
+                    break
                 self._cond.wait(timeout=0.5)
             state, tier, err = info.state, info.tier, info.error
         self.stats.bump(reader_wait_s=time.perf_counter() - t0)
         lo = gstart - block.global_start
         hi = gend - block.global_start
+        if stalled:
+            # Patience expired: the scheduler owes us this block but can't
+            # deliver (wedged tier space / leaked flight). Degrade to a
+            # direct read so the pipeline unwedges instead of hanging.
+            self.stats.bump(direct_reads=1)
+            return self.store.get_range(block.key, block.start + lo,
+                                        block.start + hi)
         if state == BlockState.CACHED and tier is not None:
-            # Load the whole block from the tier once; serve subsequent
-            # small reads from the reader-side buffer.
-            self._buf_data = tier.read(block.block_id, 0, block.size)
+            try:
+                # Load the whole block from the tier once; serve subsequent
+                # small reads from the reader-side buffer.
+                self._buf_data = tier.read(block.block_id, 0, block.size)
+            except StoreError:
+                # A sibling process sharing a persistent cache dir may
+                # have evicted the file beneath our index entry — the
+                # bytes are one range GET away, don't crash the reader.
+                # Drop the stale entry so the next acquire re-fetches into
+                # the cache instead of paying a direct GET forever.
+                self.index.invalidate(block.block_id)
+                self.stats.bump(direct_reads=1)
+                return self.store.get_range(block.key, block.start + lo,
+                                            block.start + hi)
             self._buf_index = block.index
             return (memoryview(self._buf_data)[lo:hi] if view
                     else self._buf_data[lo:hi])
         if state == BlockState.FAILED:
             raise StoreError(f"block {block.block_id} failed to prefetch") from err
-        # CONSUMED/EVICTED (backward seek after eviction): direct fetch.
+        # CONSUMED/EVICTED (backward seek): the shared cache may still
+        # hold the block (keep_cached, another reader's pin) — serve it
+        # locally before paying a store GET.
+        kind, val = self.index.acquire(block.block_id)
+        if kind == "hit":
+            try:
+                data = val.read(block.block_id, lo, hi)
+                self.stats.bump(cache_hits=1)
+                return data
+            except StoreError:
+                # Vanished beneath us: drop the stale entry, go direct.
+                self.index.invalidate(block.block_id)
+            finally:
+                self.index.unpin(block.block_id)
+        elif kind == "leader":
+            self.index.abort_fetch(val)   # not fetching into the tier here
+        else:
+            self.index.leave(val)
         self.stats.bump(direct_reads=1)
         return self.store.get_range(block.key, block.start + lo, block.start + hi)
 
@@ -645,17 +839,19 @@ class RollingPrefetcher:
                 info = self._info[block.index]
                 if info.state != BlockState.CONSUMED or info.tier is None:
                     continue
-                tier = info.tier
-            # Verify existence at removal time (paper: eviction checks the
-            # filesystem rather than trusting stale lists).
-            if tier.contains(block.block_id):
-                tier.delete(block.block_id)
-                tier.release(block.size)
-            with self._cond:
+                # Claim the transition before unpinning so overlapping
+                # eviction rounds never double-release the same pin.
                 info.state = BlockState.EVICTED
                 info.tier = None
+            # Refcount-aware eviction replaces the old fire-and-forget
+            # delete: the block disappears only when the LAST reader's pin
+            # drops (and stays resident under keep_cached, where capacity
+            # pressure evicts instead).
+            evicted = self.index.unpin(block.block_id, want_evict=True)
+            with self._cond:
                 self._cond.notify_all()
-            self.stats.bump(blocks_evicted=1)
+            if evicted:
+                self.stats.bump(blocks_evicted=1)
 
     def _evict_loop(self) -> None:
         while True:
@@ -668,19 +864,22 @@ class RollingPrefetcher:
             self._evict_blocks(self._evictable())
 
     def _final_sweep(self) -> None:
-        """Delete every remaining cached block (paper: the eviction thread
-        ensures deletion of all remaining files prior to terminating)."""
+        """Release this reader's pin on every remaining cached block
+        (paper: the eviction thread ensures deletion of all remaining
+        files prior to terminating). Blocks another reader still pins, or
+        a keep_cached index keeps warm for the next open/restart, survive
+        the sweep — only the pin is dropped."""
         for i, info in enumerate(self._info):
             with self._cond:
                 tier = info.tier
                 state = info.state
-            if tier is not None and state in (BlockState.CACHED, BlockState.CONSUMED):
-                if tier.contains(self.plan.blocks[i].block_id):
-                    tier.delete(self.plan.blocks[i].block_id)
-                    tier.release(self.plan.blocks[i].size)
-                with self._cond:
+                if tier is not None and state in (BlockState.CACHED,
+                                                  BlockState.CONSUMED):
                     info.state = BlockState.EVICTED
                     info.tier = None
+                else:
+                    continue
+            self.index.unpin(self.plan.blocks[i].block_id, want_evict=True)
 
 
 class RollingPrefetchFile:

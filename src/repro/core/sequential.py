@@ -5,6 +5,14 @@ distinct phases. A ``read()`` that misses the single-block cache fetches
 the containing block from the object store synchronously (paying one
 request latency + bandwidth), then serves from memory. No background
 threads, no overlap.
+
+When the `PrefetchFS` facade hands this engine a shared `CacheIndex`
+(i.e. the filesystem owns cache tiers), misses consult it first: blocks
+another reader already fetched — or a recovered persistent `DirTier`
+holds — are read from the local tier instead of the store, and
+single-flight registration keeps N concurrent sequential readers of the
+same object at ~1x store GETs. Constructed bare (no index), the engine
+is byte- and request-identical to the paper's baseline.
 """
 
 from __future__ import annotations
@@ -13,8 +21,9 @@ import time
 from dataclasses import dataclass
 from typing import TYPE_CHECKING
 
-from repro.core.plan import BlockPlan
-from repro.store.base import ObjectMeta, ObjectStore
+from repro.core.plan import Block, BlockPlan
+from repro.store.base import ObjectMeta, ObjectStore, StoreError
+from repro.store.tiers import BlockMeta, CacheIndex
 
 if TYPE_CHECKING:
     from repro.core.autotune import BlockSizeTuner
@@ -27,6 +36,8 @@ class SequentialStats:
     bytes_read: int = 0
     fetch_s: float = 0.0
     store_requests: int = 0
+    cache_hits: int = 0         # blocks served from the shared index
+    flight_joins: int = 0       # blocks obtained from another reader's GET
 
     def snapshot(self) -> dict:
         return dict(self.__dict__)
@@ -50,11 +61,13 @@ class SequentialFile:
         blocksize: int,
         cache_blocks: int = 1,
         tuner: "BlockSizeTuner | None" = None,
+        index: CacheIndex | None = None,
     ) -> None:
         self.store = store
         self.plan = BlockPlan(files, blocksize)
         self.cache_blocks = max(1, cache_blocks)
         self.tuner = tuner
+        self.index = index
         self.stats = SequentialStats()
         self._cache: dict[int, _CacheEntry] = {}
         self._lru: list[int] = []
@@ -83,6 +96,19 @@ class SequentialFile:
             if b.index in self._cache:
                 break  # keep the request one adjacent span
             run.append(b)
+        if self.index is None:
+            datas = self._fetch_run(run)
+        else:
+            datas = self._resolve_shared(run)
+        for b, d in zip(run, datas):
+            self._cache[b.index] = _CacheEntry(b.index, d)
+            self._lru.append(b.index)
+        while len(self._lru) > self.cache_blocks:
+            self._cache.pop(self._lru.pop(0), None)
+        return self._cache[index].data
+
+    def _fetch_run(self, run: list[Block]) -> list[bytes]:
+        """One synchronous store request for a contiguous run of blocks."""
         t0 = time.perf_counter()
         if len(run) == 1:
             datas = [self.store.get_range(run[0].key, run[0].start, run[0].end)]
@@ -101,12 +127,141 @@ class SequentialFile:
             # engine closes the loop too: with autotune on, PrefetchFS
             # retunes the Eq.-4 blocksize from these samples on reopen.
             self.tuner.observe_request(nbytes, dt)
-        for b, d in zip(run, datas):
-            self._cache[b.index] = _CacheEntry(b.index, d)
-            self._lru.append(b.index)
-        while len(self._lru) > self.cache_blocks:
-            self._cache.pop(self._lru.pop(0), None)
-        return self._cache[index].data
+        return datas
+
+    # -- shared-index path --------------------------------------------------
+    def _resolve_shared(self, run: list[Block]) -> list[bytes]:
+        """Resolve a run against the shared `CacheIndex`: resident blocks
+        are read from their local tier, in-flight blocks join the other
+        reader's fetch, and only led blocks hit the store (contiguous
+        leader segments still coalesce into one request, published back to
+        a tier for the next reader)."""
+        out: dict[int, bytes] = {}
+        group: list[tuple[Block, object]] = []
+        for b in run:
+            kind, val = self.index.acquire(b.block_id)
+            if kind == "leader":
+                group.append((b, val))
+                continue
+            try:
+                self._fetch_leaders(group, out)
+                group = []
+            except Exception:
+                # The pin (hit) / waiter slot (wait) just taken for `b`
+                # must not leak past a failed leader group, or the block
+                # becomes unevictable forever.
+                if kind == "hit":
+                    self.index.unpin(b.block_id)
+                else:
+                    self.index.leave(val)
+                raise
+            if kind == "hit":
+                out[b.index] = self._read_hit(b, val)
+            else:
+                out[b.index] = self._join_flight(b, val)
+        self._fetch_leaders(group, out)
+        return [out[b.index] for b in run]
+
+    def _read_hit(self, b: Block, tier) -> bytes:
+        """Serve a resident block from its tier. Hits/joins deliberately
+        do NOT count into blocks_fetched/bytes_fetched — those mean store
+        traffic, matching the rolling engine's accounting. The unpin asks
+        for eviction unless the index retains (keep_cached), preserving
+        the evict-when-consumed default for this engine too."""
+        try:
+            try:
+                data = tier.read(b.block_id, 0, b.size)
+            finally:
+                self.index.unpin(b.block_id,
+                                 want_evict=not self.index.keep_cached)
+        except StoreError:
+            # A sibling process sharing a persistent cache dir may have
+            # evicted the file beneath the entry — drop the stale entry
+            # and fetch it ourselves.
+            self.index.invalidate(b.block_id)
+            return self._fetch_run([b])[0]
+        self.stats.cache_hits += 1
+        return data
+
+    def _fetch_leaders(self, group: list[tuple[Block, object]],
+                       out: dict[int, bytes]) -> None:
+        if not group:
+            return
+        blocks = [b for b, _ in group]
+        try:
+            datas = self._fetch_run(blocks)
+        except Exception as e:   # noqa: BLE001 — waiters must not hang
+            for _, fl in group:
+                self.index.abort_fetch(fl, e)
+            raise
+        for (b, fl), d in zip(group, datas):
+            out[b.index] = d
+            if fl.waiters == 0 and not self.index.keep_cached:
+                # Nobody is waiting and retention is off: publishing would
+                # write the block into a tier and evict it on the very
+                # next line — skip the dead work. (A waiter registering in
+                # this racy instant just re-fetches itself.)
+                self.index.abort_fetch(fl)
+                continue
+            tier = self.index.reserve_space(b.size)
+            if tier is None:
+                # Nowhere to publish (tiers full of pinned blocks): the
+                # data is still returned; waiters re-acquire and fetch.
+                self.index.abort_fetch(fl)
+                continue
+            try:
+                tier.write(b.block_id, d,
+                           meta=BlockMeta(key=b.key, offset=b.start))
+            except Exception:   # noqa: BLE001 — cache write is best-effort
+                tier.cancel(b.size)
+                self.index.abort_fetch(fl)
+                continue
+            tier.commit(b.size)
+            self.index.publish(fl, tier, b.size)
+            # No long pin (bytes copied out); without keep_cached the
+            # block must not outlive its consumption — the paper's
+            # evict-when-consumed default applies to this engine too.
+            self.index.unpin(b.block_id,
+                             want_evict=not self.index.keep_cached)
+
+    # How long a synchronous reader waits on another reader's in-flight
+    # fetch before giving up and fetching the block itself. A leaked
+    # flight (leader killed without publish/abort) must never hang the
+    # application's read() forever — a duplicate GET beats a deadlock.
+    JOIN_PATIENCE_S = 10.0
+
+    def _join_flight(self, b: Block, flight) -> bytes:
+        waited = 0.0
+        while True:
+            kind, val = self.index.join(flight, timeout=0.5)
+            if kind == "timeout":
+                waited += 0.5
+                if waited >= self.JOIN_PATIENCE_S:
+                    self.index.leave(flight)
+                    return self._fetch_run([b])[0]
+                continue
+            if kind == "hit":
+                try:
+                    try:
+                        data = val.read(b.block_id, 0, b.size)
+                    finally:
+                        self.index.unpin(b.block_id,
+                                         want_evict=not self.index.keep_cached)
+                except StoreError:
+                    self.index.invalidate(b.block_id)
+                    return self._fetch_run([b])[0]
+                self.stats.flight_joins += 1
+                return data
+            # Leader failed: take over (or join the next attempt).
+            kind, val = self.index.acquire(b.block_id)
+            if kind == "hit":
+                return self._read_hit(b, val)
+            if kind == "wait":
+                flight = val
+                continue
+            out: dict[int, bytes] = {}
+            self._fetch_leaders([(b, val)], out)
+            return out[b.index]
 
     def read(self, n: int = -1) -> bytes:
         if self._closed:

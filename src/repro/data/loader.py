@@ -49,6 +49,10 @@ class LoaderConfig:
     prefetch_depth: int = 1      # concurrent fetch streams (beyond paper)
     eviction_interval_s: float = 0.2
     autotune: bool = False
+    # Epoch-to-epoch cache reuse: consumed blocks stay resident in the
+    # tiers (LRU under capacity pressure) so the per-epoch stream reopen
+    # starts warm — with a persistent DirTier, so does a restarted job.
+    keep_cached: bool = False
     policy: IOPolicy | None = None   # reader policy (preferred over mode/...)
 
     def reader_policy(self) -> IOPolicy:
@@ -72,6 +76,7 @@ class LoaderConfig:
             eviction_interval_s=self.eviction_interval_s,
             hedge_timeout_s=self.hedge_timeout_s,
             autotune=self.autotune,
+            keep_cached=self.keep_cached,
         )
 
 
@@ -110,6 +115,8 @@ class PrefetchingDataLoader:
         policy = cfg.reader_policy()
         if cfg.autotune and not policy.autotune:
             policy = policy.replace(autotune=True)
+        if cfg.keep_cached and not policy.keep_cached:
+            policy = policy.replace(keep_cached=True)
         self.policy = policy
         self.fs = PrefetchFS(store, policy=self.policy, tiers=tiers)
         self._file = None

@@ -30,13 +30,21 @@ log = get_logger("ft.restart")
 class RestartManager:
     """`store` may be an `ObjectStore` or a registry URI
     (``"sims3://ckpt?latency_ms=10"``); `write_policy` carries the
-    write-behind knobs for periodic snapshot saves."""
+    write-behind knobs for periodic snapshot saves.
+
+    ``cache_dir`` points restores at a persistent journaled `DirTier`:
+    blocks cached during one restore survive the process, so the NEXT
+    restart (the whole point of this manager) restores warm — zero store
+    GETs for blocks still on local disk, torn blocks discarded by
+    checksum at recovery."""
 
     store: ObjectStore | str
     prefix: str
     ckpt_interval: int = 50
     keep_last: int = 3
     write_policy: IOPolicy | None = None
+    cache_dir: str | None = None
+    cache_capacity: int | None = None
 
     def __post_init__(self) -> None:
         self.store = open_store(self.store)
@@ -55,6 +63,7 @@ class RestartManager:
         state, manifest = restore_checkpoint(
             self.store, self.prefix, template, step=step,
             policy=policy, mode=mode,
+            cache_dir=self.cache_dir, cache_capacity=self.cache_capacity,
         )
         cursor = DataCursor.from_dict(
             manifest["extra"].get("cursor", DataCursor().to_dict())

@@ -19,13 +19,15 @@ from repro.io.policy import IOPolicy
 from repro.io.reader import DirectReader
 from repro.io.registry import register_reader
 from repro.store.base import ObjectMeta, ObjectStore
-from repro.store.tiers import CacheTier
+from repro.store.tiers import CacheIndex, CacheTier
 
 
-@register_reader("rolling", needs_tiers=True, accepts_tuner=True)
+@register_reader("rolling", needs_tiers=True, accepts_tuner=True,
+                 accepts_index=True)
 def open_rolling(store: ObjectStore, files: list[ObjectMeta],
                  tiers: list[CacheTier], policy: IOPolicy,
-                 tuner: BlockSizeTuner | None = None) -> RollingPrefetchFile:
+                 tuner: BlockSizeTuner | None = None,
+                 index: CacheIndex | None = None) -> RollingPrefetchFile:
     return RollingPrefetchFile(
         RollingPrefetcher(
             store, files, tiers, policy.blocksize,
@@ -38,16 +40,19 @@ def open_rolling(store: ObjectStore, files: list[ObjectMeta],
             retry_backoff_s=policy.retry_backoff_s,
             hedge_timeout_s=policy.hedge_timeout_s,
             tuner=tuner,
+            index=index,
         )
     )
 
 
-@register_reader("sequential", accepts_tuner=True)
+@register_reader("sequential", accepts_tuner=True, accepts_index=True)
 def open_sequential(store: ObjectStore, files: list[ObjectMeta],
                     tiers: list[CacheTier], policy: IOPolicy,
-                    tuner: BlockSizeTuner | None = None) -> SequentialFile:
+                    tuner: BlockSizeTuner | None = None,
+                    index: CacheIndex | None = None) -> SequentialFile:
     return SequentialFile(store, files, policy.blocksize,
-                          cache_blocks=policy.cache_blocks, tuner=tuner)
+                          cache_blocks=policy.cache_blocks, tuner=tuner,
+                          index=index)
 
 
 @register_reader("direct")

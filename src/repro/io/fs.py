@@ -36,7 +36,7 @@ from repro.io.registry import available_engines, engine_spec
 from repro.io.stores import open_store
 from repro.io.write import UploadPool, Writer
 from repro.store.base import ObjectMeta, ObjectStore
-from repro.store.tiers import CacheTier, MemTier
+from repro.store.tiers import CacheIndex, CacheTier, MemTier
 
 # Importing the engines module populates the registry with the built-ins.
 import repro.io.engines  # noqa: F401  (side-effect import)
@@ -71,6 +71,9 @@ class FSStats:
     # Closed-loop tuner estimates (latency_s, bandwidth_Bps,
     # compute_s_per_byte, requests_observed); None when autotune is off.
     tuner: dict | None = None
+    # Shared cache-index counters (hits, misses, joins, evictions,
+    # recovered, resident_blocks/bytes); None until the fs has tiers.
+    cache: dict | None = None
 
     def snapshot(self) -> dict:
         return {
@@ -78,6 +81,7 @@ class FSStats:
             "totals": dict(self.totals),
             "per_engine": {k: dict(v) for k, v in self.per_engine.items()},
             "tuner": dict(self.tuner) if self.tuner is not None else None,
+            "cache": dict(self.cache) if self.cache is not None else None,
         }
 
 
@@ -89,6 +93,7 @@ class PrefetchFS:
         store: ObjectStore | str,
         policy: IOPolicy | None = None,
         tiers: Sequence[CacheTier] | None = None,
+        index: CacheIndex | None = None,
     ) -> None:
         # `store` may be a URI ("mem://", "local:///path", "sims3://bucket")
         # resolved through the store registry; same URI -> same instance.
@@ -97,6 +102,16 @@ class PrefetchFS:
         self._tiers: list[CacheTier] | None = (
             list(tiers) if tiers is not None else None
         )
+        # One CacheIndex per distinct tier list: every reader this fs opens
+        # over the same tiers shares residency, refcounts, and in-flight
+        # fetch registration. An explicit `index` (e.g. handed to several
+        # fs instances) extends that sharing across filesystems; its tiers
+        # become the fs tiers unless `tiers` overrides them.
+        self._indexes: dict[tuple[int, ...], CacheIndex] = {}
+        if index is not None:
+            if self._tiers is None:
+                self._tiers = list(index.tiers)
+            self._indexes[tuple(id(t) for t in index.tiers)] = index
         self._lock = threading.RLock()
         # Open readers AND writers, as (engine-name, handle) pairs.
         self._handles: list[tuple[str, object]] = []
@@ -160,15 +175,37 @@ class PrefetchFS:
             elif spec.needs_tiers:
                 use_tiers = self._ensure_tiers(pol)
             else:
-                use_tiers = []
+                # Engines that merely *accept* an index still share the fs
+                # tiers when the fs already has them (sequential warm
+                # reads); none are created just for them.
+                use_tiers = list(self._tiers) if self._tiers else []
+            kw: dict = {}
             if spec.accepts_tuner:
-                reader = spec.factory(self.store, files, use_tiers, pol,
-                                      tuner=self._tuner)
-            else:
-                reader = spec.factory(self.store, files, use_tiers, pol)
+                kw["tuner"] = self._tuner
+            if spec.accepts_index:
+                kw["index"] = self._index_for(use_tiers, pol)
+            reader = spec.factory(self.store, files, use_tiers, pol, **kw)
             self._prune_closed()
             self._handles.append((pol.engine, reader))
         return reader
+
+    def _index_for(self, tiers: Sequence[CacheTier],
+                   pol: IOPolicy) -> CacheIndex | None:
+        """Shared `CacheIndex` for a tier list (created on first use, one
+        per distinct list, primed from persistent tiers' recovered
+        blocks). An open asking for ``keep_cached`` upgrades an existing
+        index to retention — the reverse never downgrades, since other
+        readers may rely on warm blocks. Caller holds `_lock`."""
+        if not tiers:
+            return None
+        key = tuple(id(t) for t in tiers)
+        idx = self._indexes.get(key)
+        if idx is None:
+            idx = CacheIndex(list(tiers), keep_cached=pol.keep_cached)
+            self._indexes[key] = idx
+        elif pol.keep_cached and not idx.keep_cached:
+            idx.set_keep_cached(True)
+        return idx
 
     def _retune(self, pol: IOPolicy, files: list[ObjectMeta],
                 tiers: Sequence[CacheTier] | None) -> IOPolicy:
@@ -228,7 +265,8 @@ class PrefetchFS:
             if self._pool is None:
                 self._pool = UploadPool()
             self._pool.ensure(pol.write_depth)
-            writer = Writer(self.store, str(key), pol, use_tiers, self._pool)
+            writer = Writer(self.store, str(key), pol, use_tiers, self._pool,
+                            index=self._index_for(use_tiers, pol))
             self._prune_closed()
             self._handles.append((WRITE_ENGINE, writer))
         return writer
@@ -263,6 +301,15 @@ class PrefetchFS:
         that needs them is opened, unless tiers were supplied)."""
         with self._lock:
             return list(self._tiers or [])
+
+    @property
+    def cache_index(self) -> CacheIndex | None:
+        """The shared `CacheIndex` over the fs-level tiers (None until a
+        reader over them has been opened)."""
+        with self._lock:
+            if not self._tiers:
+                return None
+            return self._indexes.get(tuple(id(t) for t in self._tiers))
 
     @staticmethod
     def _fold_snapshot(bucket: dict, reader) -> None:
@@ -299,11 +346,16 @@ class PrefetchFS:
             per_engine = {k: dict(v) for k, v in self._folded.items()}
             handles = list(self._handles)
             tuner = self._tuner
+            index = None
+            if self._tiers:
+                index = self._indexes.get(tuple(id(t) for t in self._tiers))
         for engine, handle in handles:
             self._fold_snapshot(per_engine.setdefault(engine, {}), handle)
         out = FSStats(per_engine=per_engine)
         if tuner is not None:
             out.tuner = tuner.estimates()
+        if index is not None:
+            out.cache = index.snapshot()
         for bucket in per_engine.values():
             out.opens += bucket.get("opens", 0)
             for k, v in bucket.items():
@@ -320,9 +372,11 @@ class PrefetchFS:
     # ------------------------------------------------------------------ #
     def close(self) -> None:
         """Close every reader and writer this filesystem opened (engines
-        run their final eviction sweep so owned tiers end empty; writers
-        flush and publish), then shut down the upload pool. The first
-        writer-close failure is re-raised after everything is closed."""
+        run their final eviction sweep so owned tiers end empty — unless
+        ``IOPolicy.keep_cached`` retains consumed blocks warm for the next
+        open or a restarted job; writers flush and publish), then shut
+        down the upload pool. The first writer-close failure is re-raised
+        after everything is closed."""
         with self._lock:
             if self._closed:
                 return

@@ -60,6 +60,13 @@ class IOPolicy:
     cache_blocks: int = 1               # sequential engine read-ahead cache
     autotune: bool = False              # retune blocksize/coalesce per open
     tier_capacity: int | None = None    # default cache budget when the FS owns tiers
+    # Shared-cache retention: with True, fully-consumed blocks stay
+    # resident in the tiers after a reader (or the whole fs) closes —
+    # LRU-evicted only under capacity pressure — so per-epoch reopens,
+    # other readers of the same keys, and (with a persistent DirTier)
+    # restarted jobs start warm. False keeps the paper's
+    # evict-when-consumed behaviour.
+    keep_cached: bool = False
 
     def __post_init__(self) -> None:
         if self.blocksize <= 0:

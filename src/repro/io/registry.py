@@ -22,18 +22,24 @@ class EngineSpec:
     factory: ReaderFactory
     needs_tiers: bool = False   # whether the FS must supply cache tiers
     accepts_tuner: bool = False  # factory takes a tuner= kwarg (closed loop)
+    accepts_index: bool = False  # factory takes an index= kwarg (shared cache)
 
 
 _REGISTRY: dict[str, EngineSpec] = {}
 
 
 def register_reader(name: str, *, needs_tiers: bool = False,
-                    accepts_tuner: bool = False):
+                    accepts_tuner: bool = False,
+                    accepts_index: bool = False):
     """Class/function decorator registering a reader engine factory.
 
     ``accepts_tuner`` engines receive the filesystem's `BlockSizeTuner`
     as a ``tuner=`` keyword and are expected to feed it observed request
     timings / compute gaps — that is the closed autotune loop.
+
+    ``accepts_index`` engines receive the filesystem's shared `CacheIndex`
+    as an ``index=`` keyword (None when the FS has no tiers): single-flight
+    fetches, refcounted eviction, and warm cross-open/-restart reuse.
     """
 
     def deco(factory: ReaderFactory) -> ReaderFactory:
@@ -41,7 +47,8 @@ def register_reader(name: str, *, needs_tiers: bool = False,
             raise ValueError(f"reader engine {name!r} already registered")
         _REGISTRY[name] = EngineSpec(name=name, factory=factory,
                                      needs_tiers=needs_tiers,
-                                     accepts_tuner=accepts_tuner)
+                                     accepts_tuner=accepts_tuner,
+                                     accepts_index=accepts_index)
         return factory
 
     return deco

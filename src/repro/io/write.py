@@ -42,7 +42,7 @@ from typing import Callable, Sequence
 
 from repro.io.policy import IOPolicy
 from repro.store.base import ObjectStore, StoreError, TransientStoreError
-from repro.store.tiers import CacheTier
+from repro.store.tiers import CacheIndex, CacheTier
 from repro.utils import get_logger
 
 log = get_logger("io.write")
@@ -109,10 +109,14 @@ class UploadPool:
                 self._threads.append(t)
 
     def submit(self, job: Callable[[], None]) -> None:
+        # Enqueue UNDER the lock: checking `_closed` and putting outside
+        # it raced with close() — a job could land behind the shutdown
+        # sentinels and be silently dropped while its writer's barrier
+        # waited on a `_done` bump that would never come.
         with self._lock:
             if self._closed:
                 raise ValueError("submit on closed UploadPool")
-        self._q.put(job)
+            self._q.put(job)
 
     def _worker(self) -> None:
         while True:
@@ -130,8 +134,11 @@ class UploadPool:
                 return
             self._closed = True
             threads = list(self._threads)
-        for _ in threads:
-            self._q.put(None)
+            # Sentinels go in while still holding the lock, so every job
+            # accepted by submit() is strictly ahead of them in the FIFO —
+            # workers drain all remaining jobs before they see a sentinel.
+            for _ in threads:
+                self._q.put(None)
         for t in threads:
             t.join(timeout=30.0)
 
@@ -161,11 +168,17 @@ class Writer:
         policy: IOPolicy,
         tiers: Sequence[CacheTier],
         pool: UploadPool,
+        index: CacheIndex | None = None,
     ) -> None:
         self.store = store
         self.key = key
         self.policy = policy
         self.tiers = list(tiers)
+        # Shared cache index over the same tiers (when the fs has one):
+        # staging backpressure may pressure-evict unpinned cached blocks
+        # instead of spinning forever against a tier filled by
+        # keep_cached readers.
+        self.index = index
         self.stats = WriteStats()
         self._pool = pool
         self._cond = threading.Condition()
@@ -323,8 +336,20 @@ class Writer:
                         continue
                     if cand.available() < len(data):
                         cand.verify_used()
-                    if cand.reserve(len(data)):
-                        cand.write(block_id, data)
+                    reserved = cand.reserve(len(data))
+                    if not reserved and self.index is not None:
+                        # Tier full of retained cache blocks (keep_cached
+                        # readers), not in-flight parts: evict unpinned
+                        # ones, or the producer would wait forever on
+                        # uploads that free nothing.
+                        if self.index.evict_from(cand, len(data)) > 0:
+                            reserved = cand.reserve(len(data))
+                    if reserved:
+                        # durable=False: staged parts are transient — a
+                        # persistent DirTier must not journal them (a
+                        # crashed producer's staging is garbage-collected
+                        # at recovery, never resurrected into the cache).
+                        cand.write(block_id, data, durable=False)
                         cand.commit(len(data))
                         return _Part(index, len(data), cand, block_id, None)
                 with self._cond:

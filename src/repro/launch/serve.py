@@ -40,6 +40,11 @@ def main() -> None:
                          "stream depth + closed-loop blocksize tuning")
     ap.add_argument("--store", default="sims3://weights?latency_ms=10&bw_mbps=80",
                     help="weight store URI (any registered scheme)")
+    ap.add_argument("--cache-dir", default=None,
+                    help="persistent weight-block cache directory: restores "
+                         "cache into a journaled DirTier there, so a "
+                         "restarted replica cold-starts warm (zero store "
+                         "GETs for blocks that survived on local disk)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--quant", choices=["int8"], default=None,
                     help="weight-only int8 serving (TP-only layout)")
@@ -62,8 +67,10 @@ def main() -> None:
                         max_depth=8 if args.autotune else None,
                         autotune=args.autotune,
                         eviction_interval_s=0.2),
+        cache_dir=args.cache_dir,
     )
-    print(f"weight restore ({args.restore_mode}): {time.time() - t0:.2f}s")
+    print(f"weight restore ({args.restore_mode}): {time.time() - t0:.2f}s"
+          + (f" [cache: {args.cache_dir}]" if args.cache_dir else ""))
     if args.quant == "int8":
         from repro.models.quant import quantize_params
 

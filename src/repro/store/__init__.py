@@ -8,9 +8,19 @@ from repro.store.base import (
 from repro.store.link import LinkModel
 from repro.store.sim_s3 import SimS3Store
 from repro.store.local import DirStore, MemStore
-from repro.store.tiers import CacheTier, MemTier, DirTier
+from repro.store.tiers import (
+    BlockMeta,
+    CacheFlight,
+    CacheIndex,
+    CacheTier,
+    DirTier,
+    MemTier,
+)
 
 __all__ = [
+    "BlockMeta",
+    "CacheFlight",
+    "CacheIndex",
     "MultipartUpload",
     "ObjectStore",
     "ObjectMeta",

@@ -90,6 +90,16 @@ class _DirMultipartUpload(MultipartUpload):
         with open(tmp, "wb") as f:
             f.write(data)
         os.replace(tmp, path)
+        # An abort() racing this upload may have swept the part files
+        # before our replace landed — re-check and clean up, or the part
+        # would be orphaned on disk forever (abort only removes parts it
+        # saw registered at sweep time).
+        with self._lock:
+            aborted = self._aborted
+        if aborted:
+            with contextlib.suppress(OSError):
+                os.remove(path)
+            raise StoreError(f"multipart {self.key!r}: upload aborted")
 
     def complete(self) -> None:
         with self._lock:
