@@ -1,0 +1,267 @@
+"""Resilience A/B benchmarks: goodput under injected faults, jittered vs
+synchronized backoff, and throttle-aware vs throttle-oblivious depth
+control — on the scaled-Table-I simulated S3 store.
+
+Three experiments:
+
+  * ``goodput`` — the rolling engine streams a dataset through a
+    `FaultyStore` at increasing fault rates (transient drops, stalls,
+    mid-transfer cuts). Acceptance: every run returns byte-identical
+    data; goodput degrades gracefully instead of collapsing to zero.
+  * ``backoff`` — N concurrent clients hammer an rps-limited link
+    (with SlowDown escalation: rejected requests drain penalty tokens)
+    and retry 503s. The synchronized arm uses the old unjittered
+    ``2 ** attempt`` backoff (every client re-collides at the same
+    instant — a retry storm); the jittered arm uses the shared
+    `RetryPolicy`'s full jitter. Acceptance (full run): full jitter
+    completes the same workload in less wall time.
+  * ``throttle_aimd`` — the rolling engine reads against an rps-limited
+    escalating link with ``max_depth`` streams. The aware arm (default)
+    lets `ThrottleError` halve the AIMD stream target; the oblivious
+    arm (``IOPolicy.throttle_aimd=False``) only backs off, keeping the
+    full herd hammering a backend that punishes exactly that.
+    Acceptance (full run): throttle-aware goodput beats oblivious.
+
+Emits ``name,us_per_call,derived`` CSV rows and writes the full record
+to ``BENCH_resilience.json`` so CI tracks failure behaviour over time.
+
+  PYTHONPATH=src python -m benchmarks.bench_resilience [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+
+from benchmarks.common import S3_BW, S3_LATENCY, emit, make_trk_dataset
+from repro.io import IOPolicy, PrefetchFS, Retrier, RetryPolicy, open_store
+from repro.store import FaultSchedule, FaultyStore, LinkModel, SimS3Store
+from repro.store.base import ThrottleError
+
+
+def _store(ds, bucket: str, **link_kw) -> SimS3Store:
+    params = "&".join(f"{k}={v:g}" for k, v in link_kw.items())
+    store = open_store(
+        f"sims3://{bucket}?latency_ms={S3_LATENCY * 1e3:g}"
+        f"&bw_mbps={S3_BW / 1e6:g}" + (f"&{params}" if params else ""),
+        fresh=True,
+    )
+    for k, v in ds.objects.items():
+        store.backing.put(k, v)
+    return store
+
+
+# --------------------------------------------------------------------------- #
+# experiment 1: goodput vs injected fault rate
+# --------------------------------------------------------------------------- #
+def fault_schedule(rate: float, seed: int = 17) -> FaultSchedule:
+    return (FaultSchedule(seed=seed)
+            .transient(ops=("get_range", "get_ranges"), prob=rate)
+            .stall(0.005, ops=("get_range", "get_ranges"), prob=rate)
+            .cut(after_bytes=8 << 10, ops=("get_range", "get_ranges"),
+                 prob=rate / 2))
+
+
+def bench_goodput(n_files: int, blocksize: int, rates: list[float]) -> dict:
+    ds = make_trk_dataset(n_files)
+    want = b"".join(v for _, v in sorted(ds.objects.items()))
+    out = []
+    for rate in rates:
+        store = _store(ds, "bench-res-goodput")
+        faulty = FaultyStore(store, fault_schedule(rate))
+        policy = IOPolicy(
+            engine="rolling", blocksize=blocksize, depth=2,
+            retry=RetryPolicy(max_retries=10, backoff_s=0.002,
+                              backoff_cap_s=0.05),
+            eviction_interval_s=0.05,
+        )
+        t0 = time.perf_counter()
+        with PrefetchFS(faulty, policy=policy) as fs:
+            f = fs.open_many(ds.metas())
+            data = f.read()
+            f.close()
+            snap = fs.stats().snapshot()
+        dt = time.perf_counter() - t0
+        assert data == want, f"fault rate {rate}: bytes differ"
+        goodput = ds.total_bytes / dt
+        out.append(dict(
+            fault_rate=rate,
+            wall_s=dt,
+            goodput_MBps=goodput / 1e6,
+            retries=snap["totals"].get("retries", 0),
+            injected=faulty.snapshot(),
+            failed_requests=store.link.failed_requests,
+        ))
+        emit(f"resilience_goodput_rate_{rate:g}", dt * 1e6,
+             f"goodput={goodput / 1e6:.1f}MBps;"
+             f"retries={snap['totals'].get('retries', 0)}")
+    # Graceful degradation: the faultiest run still finishes and moves
+    # real data (no collapse), and the clean run is near the front of
+    # the pack (low fault rates cost little; 25% covers timing noise on
+    # a shared machine).
+    assert all(r["goodput_MBps"] > 0 for r in out)
+    assert out[0]["wall_s"] <= 1.25 * min(r["wall_s"] for r in out)
+    return dict(rates=out,
+                params=dict(n_files=n_files, blocksize=blocksize,
+                            dataset_bytes=ds.total_bytes))
+
+
+# --------------------------------------------------------------------------- #
+# experiment 2: jittered vs synchronized backoff under throttling
+# --------------------------------------------------------------------------- #
+def bench_backoff(n_clients: int, requests_each: int) -> dict:
+    def run(jitter: str, seed_base: int) -> dict:
+        link = LinkModel(latency_s=0.001, rps_limit=150.0, rps_burst=4.0,
+                        rps_penalty=0.5, name="throttled")
+        policy = RetryPolicy(max_retries=12, backoff_s=0.05,
+                             backoff_cap_s=0.4, jitter=jitter)
+        barrier = threading.Barrier(n_clients)
+        errs: list[Exception] = []
+
+        def client(i: int) -> None:
+            retrier = Retrier(policy, seed=seed_base + i)
+            try:
+                barrier.wait()
+                for _ in range(requests_each):
+                    retrier.call(lambda: link.transfer(0))
+            except Exception as e:  # noqa: BLE001 — surfaced below
+                errs.append(e)
+
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(n_clients)]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        dt = time.perf_counter() - t0
+        assert not errs, errs
+        return dict(wall_s=dt, throttled=link.throttled,
+                    requests=link.requests)
+
+    sync = run("none", 0)
+    jittered = run("full", 1000)
+    emit("resilience_backoff_synchronized", sync["wall_s"] * 1e6,
+         f"throttled={sync['throttled']}")
+    emit("resilience_backoff_jittered", jittered["wall_s"] * 1e6,
+         f"throttled={jittered['throttled']};"
+         f"storm_ratio={sync['wall_s'] / jittered['wall_s']:.2f}x")
+    return dict(synchronized=sync, jittered=jittered,
+                params=dict(n_clients=n_clients,
+                            requests_each=requests_each))
+
+
+# --------------------------------------------------------------------------- #
+# experiment 3: throttle-aware AIMD vs oblivious depth
+# --------------------------------------------------------------------------- #
+def bench_throttle_aimd(n_files: int, blocksize: int, reps: int = 1) -> dict:
+    ds = make_trk_dataset(n_files)
+    want = b"".join(v for _, v in sorted(ds.objects.items()))
+
+    def run(aware: bool) -> dict:
+        store = _store(ds, "bench-res-aimd", rps_limit=120, rps_burst=8,
+                       rps_penalty=0.75)
+        policy = IOPolicy(
+            engine="rolling", blocksize=blocksize, depth=12, max_depth=12,
+            throttle_aimd=aware,
+            retry=RetryPolicy(max_retries=20, backoff_s=0.01,
+                              backoff_cap_s=0.2),
+            eviction_interval_s=0.05,
+        )
+        t0 = time.perf_counter()
+        with PrefetchFS(store, policy=policy) as fs:
+            f = fs.open_many(ds.metas())
+            data = f.read()
+            f.close()
+            snap = fs.stats().snapshot()
+        dt = time.perf_counter() - t0
+        assert data == want
+        return dict(
+            wall_s=dt,
+            goodput_MBps=ds.total_bytes / dt / 1e6,
+            throttles=snap["totals"].get("throttles", 0),
+            retries=snap["totals"].get("retries", 0),
+            depth_peak=snap["totals"].get("depth_peak", 0),
+        )
+
+    # Interleaved repetitions (aware, oblivious, aware, ...) + median
+    # wall time: a single shot of either arm — or all reps of one arm
+    # back to back — is hostage to machine-load drift on a shared box.
+    samples: dict[bool, list[dict]] = {True: [], False: []}
+    for _ in range(reps):
+        for arm in (True, False):
+            samples[arm].append(run(arm))
+
+    def median(arm: bool) -> dict:
+        runs = sorted(samples[arm], key=lambda r: r["wall_s"])
+        med = dict(runs[len(runs) // 2])
+        med["reps"] = [r["wall_s"] for r in runs]
+        return med
+
+    aware = median(True)
+    oblivious = median(False)
+    speedup = oblivious["wall_s"] / aware["wall_s"]
+    emit("resilience_aimd_aware", aware["wall_s"] * 1e6,
+         f"goodput={aware['goodput_MBps']:.1f}MBps;"
+         f"throttles={aware['throttles']};speedup={speedup:.2f}x")
+    emit("resilience_aimd_oblivious", oblivious["wall_s"] * 1e6,
+         f"goodput={oblivious['goodput_MBps']:.1f}MBps;"
+         f"throttles={oblivious['throttles']}")
+    return dict(aware=aware, oblivious=oblivious, speedup=speedup,
+                params=dict(n_files=n_files, blocksize=blocksize,
+                            dataset_bytes=ds.total_bytes, rps_limit=120,
+                            rps_penalty=0.75, reps=reps))
+
+
+def main(quick: bool = False, out: str = "BENCH_resilience.json") -> None:
+    if quick:
+        goodput = bench_goodput(n_files=2, blocksize=32 << 10,
+                                rates=[0.0, 0.2])
+        backoff = bench_backoff(n_clients=6, requests_each=6)
+        aimd = bench_throttle_aimd(n_files=2, blocksize=32 << 10)
+    else:
+        goodput = bench_goodput(n_files=6, blocksize=64 << 10,
+                                rates=[0.0, 0.05, 0.15, 0.3])
+        backoff = bench_backoff(n_clients=12, requests_each=10)
+        aimd = bench_throttle_aimd(n_files=8, blocksize=64 << 10, reps=3)
+        # Full-run acceptance: full jitter breaks the retry storm (the
+        # same fixed workload completes in less wall time — total
+        # throttle COUNT can go either way, since jittered clients probe
+        # sooner on average; wall time is what the workload pays), and
+        # throttle-aware AIMD beats the oblivious baseline on goodput.
+        assert backoff["jittered"]["wall_s"] < \
+            backoff["synchronized"]["wall_s"], backoff
+        assert aimd["aware"]["goodput_MBps"] > \
+            aimd["oblivious"]["goodput_MBps"], aimd
+
+    record = dict(
+        goodput=goodput,
+        backoff=backoff,
+        throttle_aimd=aimd,
+        link=dict(latency_s=S3_LATENCY, bandwidth_Bps=S3_BW),
+        smoke=bool(quick),
+    )
+    with open(out, "w") as f:
+        json.dump(record, f, indent=2)
+    print(
+        f"wrote {out}: jitter storm ratio "
+        f"{backoff['synchronized']['wall_s'] / backoff['jittered']['wall_s']:.2f}x, "
+        f"throttle-aware AIMD {aimd['speedup']:.2f}x oblivious "
+        f"({aimd['aware']['goodput_MBps']:.1f} vs "
+        f"{aimd['oblivious']['goodput_MBps']:.1f} MB/s)"
+    )
+
+
+def _cli() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI (seconds, not minutes)")
+    ap.add_argument("--out", default="BENCH_resilience.json")
+    args = ap.parse_args()
+    main(quick=args.smoke, out=args.out)
+
+
+if __name__ == "__main__":
+    _cli()

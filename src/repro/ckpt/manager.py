@@ -43,6 +43,7 @@ import jax
 import numpy as np
 
 from repro.io import IOPolicy, PrefetchFS, open_store
+from repro.io.retry import Retrier, RetryPolicy
 from repro.store.base import ObjectMeta, ObjectStore
 from repro.store.tiers import CacheTier
 from repro.utils import get_logger
@@ -51,20 +52,22 @@ log = get_logger("ckpt")
 
 MANIFEST = "MANIFEST.json"
 
+# Metadata ops (list/size/get-manifest) retry through the shared
+# resilience layer — full-jitter backoff, so a fleet of restarting
+# workers hitting the same manifest does not re-collide in one backoff
+# window. Bulk leaf reads retry inside the reader engines themselves.
+META_RETRY = RetryPolicy(max_retries=4, backoff_s=0.02, backoff_cap_s=1.0)
 
-def _with_retries(fn, *, attempts: int = 5, backoff_s: float = 0.02):
-    """Metadata ops (list/size/get-manifest) retry transient store faults;
-    bulk leaf reads retry inside the Rolling Prefetch engine itself."""
-    from repro.store.base import TransientStoreError
+# ONE long-lived executor for the default policy: the Retrier's state
+# (seeded jitter rng, retry budget, telemetry) is designed to span calls
+# — a fresh instance per metadata op would silently degrade a policy
+# budget to a per-call cap.
+_META_RETRIER = Retrier(META_RETRY)
 
-    last: Exception | None = None
-    for i in range(attempts):
-        try:
-            return fn()
-        except TransientStoreError as e:
-            last = e
-            time.sleep(backoff_s * (2 ** i))
-    raise last  # type: ignore[misc]
+
+def _with_retries(fn, *, policy: RetryPolicy = META_RETRY):
+    retrier = _META_RETRIER if policy is META_RETRY else Retrier(policy)
+    return retrier.call(fn, label="checkpoint metadata")
 
 
 def _step_prefix(prefix: str, step: int) -> str:

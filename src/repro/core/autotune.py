@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import math
 import threading
+import time
 from collections import deque
 from dataclasses import dataclass
 
@@ -207,7 +208,8 @@ class AimdDepthController:
     """
 
     def __init__(self, initial: int, max_depth: int, *, window: int = 4,
-                 tolerance: float = 0.85) -> None:
+                 tolerance: float = 0.85,
+                 throttle_cooldown_s: float = 0.25) -> None:
         if max_depth < 1:
             raise ValueError(f"max_depth must be >= 1, got {max_depth}")
         self.max_depth = max_depth
@@ -215,12 +217,66 @@ class AimdDepthController:
         self.peak = self.target
         self._window = max(1, window)
         self._tolerance = tolerance
+        self._cooldown = throttle_cooldown_s
         self._lock = threading.Lock()
         self._n = 0
         self._bytes = 0
         self._t0: float | None = None
         self._last_thr: float | None = None
+        self._last_cut: float | None = None
+        self._last_grow: float | None = None
         self.adjustments = 0
+        self.throttle_cuts = 0
+
+    def on_throttle(self, now: float | None = None) -> int:
+        """Backend pushback (503 SlowDown, `ThrottleError`): cut the
+        stream target multiplicatively NOW, without waiting for a
+        throughput window to close — the store has said, explicitly,
+        that concurrency is too high. Like TCP's one-halving-per-RTT
+        rule, cuts within ``throttle_cooldown_s`` of the last one are
+        coalesced: N streams throttled by the same pressure burst count
+        as ONE signal, not N halvings to the floor. The measurement
+        window resets so the next throughput sample doesn't mix the
+        pre- and post-throttle regimes; additive growth then re-probes
+        upward once throughput holds — rate-limited to one step per
+        cooldown while pushback is recent (within 8x the cooldown),
+        since per-window growth at high fetch rates would climb right
+        back into the throttled regime before the next cut is even
+        allowed (see :meth:`_may_grow`)."""
+        if now is None:
+            now = time.perf_counter()   # same clock as on_fetch callers
+        with self._lock:
+            if (self._last_cut is not None
+                    and now - self._last_cut < self._cooldown):
+                return self.target
+            self._last_cut = now
+            # Ceil halving: 3 -> 2, not 3 -> 1 — at small depths floor
+            # division overshoots the cut and strands the target below
+            # the sustainable point.
+            new = max(1, (self.target + 1) // 2)
+            if new != self.target:
+                self.target = new
+                self.adjustments += 1
+            self.throttle_cuts += 1
+            self._n = 0
+            self._bytes = 0
+            self._t0 = None
+            self._last_thr = None
+            return self.target
+
+    def _may_grow(self, now: float) -> bool:
+        """Additive-increase gate. Caller holds `_lock`. Free-running
+        when the backend has never pushed back (or not for 8x the
+        cooldown); under recent throttle pressure, at most one +1 step
+        per cooldown — the TCP-flavoured asymmetry that lets the target
+        settle near the sustainable depth instead of sawtoothing at the
+        window-close rate."""
+        if self._cooldown <= 0.0 or self._last_cut is None:
+            return True
+        if now - self._last_cut >= 8.0 * self._cooldown:
+            return True
+        return (self._last_grow is None
+                or now - self._last_grow >= self._cooldown)
 
     def on_fetch(self, nbytes: int, now: float) -> int:
         """Record one completed fetch; returns the (possibly updated)
@@ -237,6 +293,9 @@ class AimdDepthController:
             last, self._last_thr = self._last_thr, thr
             self._n, self._bytes, self._t0 = 0, 0, now
             if last is None or thr >= last * self._tolerance:
+                if not self._may_grow(now):
+                    return self.target
+                self._last_grow = now
                 new = min(self.max_depth, self.target + 1)
             else:
                 new = max(1, self.target // 2)

@@ -34,9 +34,15 @@ the baseline):
   * ``tuner``: a `BlockSizeTuner` fed per-request timings and reader
     compute gaps, closing the Eq.-4 loop (the `PrefetchFS` facade retunes
     blocksize/coalesce from it on the next open);
-  * ``depth > 1``, ``hedge_timeout``, transient-failure retries: as
-    before (S3 scales with request concurrency; thousand-node jobs need
-    straggler + fault tolerance).
+  * ``depth > 1``, ``hedge_timeout``, transient-failure retries: S3
+    scales with request concurrency; thousand-node jobs need straggler +
+    fault tolerance. All retrying and hedging resolves through the
+    unified resilience layer (`repro.io.retry`): one `Retrier` with
+    full-jitter backoff and one capped `Hedger` per prefetcher, shared
+    by every stream and the reader's direct-GET fallbacks. A
+    `ThrottleError` (503 SlowDown) additionally halves the AIMD stream
+    target, so backend pushback shrinks prefetch concurrency instead of
+    just rescheduling the same herd.
 """
 
 from __future__ import annotations
@@ -49,6 +55,7 @@ from dataclasses import dataclass, field
 
 from repro.core.autotune import AimdDepthController, BlockSizeTuner
 from repro.core.plan import Block, BlockPlan
+from repro.io.retry import Hedger, Retrier, RetryPolicy
 from repro.store.base import ObjectMeta, ObjectStore, StoreError, TransientStoreError
 from repro.store.tiers import BlockMeta, CacheFlight, CacheIndex, CacheTier
 from repro.utils import get_logger
@@ -92,6 +99,7 @@ class PrefetchStats:
     reader_wait_s: float = 0.0
     fetch_s: float = 0.0        # cumulative time in store fetch + tier.write
     retries: int = 0
+    throttles: int = 0          # ThrottleError responses (503 SlowDown)
     hedges: int = 0
     direct_reads: int = 0       # cache-miss fallbacks (backward seeks)
     cache_hits: int = 0         # blocks served from the shared index, no GET
@@ -147,7 +155,10 @@ class RollingPrefetcher:
         high_water: float = 0.75,
         max_retries: int = 3,
         retry_backoff_s: float = 0.05,
+        retry: RetryPolicy | None = None,
         hedge_timeout_s: float | None = None,
+        max_hedges: int = 4,
+        throttle_aimd: bool = True,
         tuner: BlockSizeTuner | None = None,
         index: CacheIndex | None = None,
     ) -> None:
@@ -173,10 +184,18 @@ class RollingPrefetcher:
         self.readahead_blocks = readahead_blocks
         self.eviction_interval_s = eviction_interval_s
         self.high_water = high_water
-        self.max_retries = max_retries
-        self.retry_backoff_s = retry_backoff_s
         self.hedge_timeout_s = hedge_timeout_s
         self.tuner = tuner
+        # Unified resilience layer: ONE Retrier (shared jitter rng and
+        # retry budget across all prefetch streams + the reader's direct
+        # GETs) and ONE Hedger (the max-hedges-in-flight cap bounds
+        # duplicates across concurrent streams). ThrottleError responses
+        # reach `_on_throttle`, which shrinks the AIMD stream target —
+        # backend pushback lowers prefetch concurrency, not just this
+        # request's schedule.
+        self.retry = (retry if retry is not None else RetryPolicy(
+            max_retries=max_retries, backoff_s=retry_backoff_s))
+        self.throttle_aimd = throttle_aimd
         # Shared cache index: residency + refcounts + single-flight fetch
         # registration. When the caller (PrefetchFS) supplies one, every
         # reader over these tiers shares it — N readers of the same key
@@ -189,6 +208,16 @@ class RollingPrefetcher:
         self._aimd = (
             AimdDepthController(depth, max_depth)
             if max_depth is not None else None
+        )
+        self._retrier = Retrier(
+            self.retry,
+            on_retry=lambda attempt, exc, pause: self.stats.bump(retries=1),
+            on_throttle=self._on_throttle,
+        )
+        self._hedger = Hedger(
+            hedge_timeout_s,
+            max_in_flight=max_hedges,
+            on_hedge=lambda: self.stats.bump(hedges=1),
         )
         self._streams = max_depth if max_depth is not None else depth
         self._spawned = 0             # streams actually started (lazy)
@@ -588,78 +617,54 @@ class RollingPrefetcher:
         if evict:
             self._request_eviction()
 
+    def _on_throttle(self) -> None:
+        """ThrottleError from the store (via the shared Retrier): record
+        it and — when AIMD depth control is on — cut the stream target
+        multiplicatively right now. Backoff alone would keep `max_depth`
+        streams hammering a rate-limited backend; shrinking concurrency
+        is what actually relieves the pressure."""
+        self.stats.bump(throttles=1)
+        if self._aimd is None or not self.throttle_aimd:
+            return
+        new = self._aimd.on_throttle()
+        self.stats.note_depth(new)
+        with self._cond:
+            if new != self._target_depth:
+                self._target_depth = new
+                self._cond.notify_all()
+
     def _fetch_with_retries(
         self, run: list[Block]
     ) -> tuple[list[bytes], float | None]:
-        last: Exception | None = None
-        for attempt in range(self.max_retries + 1):
-            try:
-                return self._fetch_maybe_hedged(run)
-            except TransientStoreError as e:
-                last = e
-                self.stats.bump(retries=1)
-                time.sleep(self.retry_backoff_s * (2**attempt))
-        raise StoreError(
-            f"blocks {run[0].block_id}..{run[-1].block_id}: "
-            f"exhausted {self.max_retries} retries"
-        ) from last
+        """One resilient (retried, optionally hedged) fetch of a
+        contiguous run. Returns (per-block payloads, store seconds);
+        seconds is None when a hedge fired — racing duplicates
+        contaminate the timing, so hedged samples never reach the
+        tuner."""
+        return self._retrier.call(
+            lambda: self._hedger.call(lambda: self._request(run)),
+            label=f"blocks {run[0].block_id}..{run[-1].block_id}",
+        )
 
     def _request(self, run: list[Block]) -> list[bytes]:
         if len(run) == 1:
             b = run[0]
-            return [self.store.get_range(b.key, b.start, b.end)]
-        return self.store.get_ranges(
-            run[0].key, [(b.start, b.end) for b in run]
-        )
-
-    def _fetch_maybe_hedged(
-        self, run: list[Block]
-    ) -> tuple[list[bytes], float | None]:
-        """Returns (per-block payloads, store seconds). Seconds is None
-        when a hedge fired — racing duplicates contaminate the timing, so
-        hedged samples never reach the tuner."""
-        if self.hedge_timeout_s is None:
-            t0 = time.perf_counter()
-            datas = self._request(run)
-            return datas, time.perf_counter() - t0
-        # Straggler hedging: race a duplicate request after the deadline.
-        cond = threading.Condition()
-        results: list[list[bytes]] = []
-        errors: list[Exception] = []
-
-        def attempt() -> None:
-            try:
-                datas = self._request(run)
-            except Exception as e:  # noqa: BLE001 - propagated below
-                with cond:
-                    errors.append(e)
-                    cond.notify_all()
-            else:
-                with cond:
-                    results.append(datas)
-                    cond.notify_all()
-
-        threading.Thread(target=attempt, daemon=True).start()
-        launched = 1
-        t0 = time.perf_counter()
-        with cond:
-            cond.wait_for(lambda: results or errors,
-                          timeout=self.hedge_timeout_s)
-            hedge = not results and not errors
-        if hedge:
-            self.stats.bump(hedges=1)
-            threading.Thread(target=attempt, daemon=True).start()
-            launched = 2
-        with cond:
-            # A success wins immediately; a failure only propagates once
-            # every launched attempt has reported, so a still-in-flight
-            # duplicate can rescue the fetch and no attempt thread outlives
-            # the raise.
-            cond.wait_for(lambda: results or len(errors) >= launched)
-        if results:
-            store_s = None if launched > 1 else time.perf_counter() - t0
-            return results[0], store_s
-        raise errors[0]
+            datas = [self.store.get_range(b.key, b.start, b.end)]
+        else:
+            datas = self.store.get_ranges(
+                run[0].key, [(b.start, b.end) for b in run]
+            )
+        for b, d in zip(run, datas):
+            if len(d) != b.size:
+                # A short response the server reported as complete
+                # (dropped connection, proxy truncation): caching it
+                # would silently corrupt the stream. Surface it as a
+                # transient fault so the Retrier re-requests.
+                raise TransientStoreError(
+                    f"truncated response for {b.block_id}: "
+                    f"got {len(d)} of {b.size} bytes"
+                )
+        return datas
 
     # ------------------------------------------------------------------ #
     # reading path (called from the application thread)
@@ -723,6 +728,29 @@ class RollingPrefetcher:
             self._mark_consumed(block)
         return data
 
+    def _direct_get(self, block: Block, lo: int, hi: int) -> bytes:
+        """Direct store read on the reader thread (patience fallback,
+        backward seek past eviction) — resilient via the shared Retrier
+        like every other production store call."""
+        self.stats.bump(direct_reads=1)
+
+        def attempt() -> bytes:
+            data = self.store.get_range(block.key, block.start + lo,
+                                        block.start + hi)
+            if len(data) != hi - lo:
+                # Same guard as _request: a short response the server
+                # reported as complete must retry, not silently hand the
+                # application fewer bytes than it asked for.
+                raise TransientStoreError(
+                    f"truncated response for {block.block_id}: "
+                    f"got {len(data)} of {hi - lo} bytes"
+                )
+            return data
+
+        return self._retrier.call(
+            attempt, label=f"direct read {block.block_id}",
+        )
+
     def _read_from_block(self, block: Block, gstart: int, gend: int,
                          *, view: bool = False) -> bytes | memoryview:
         info = self._info[block.index]
@@ -753,9 +781,7 @@ class RollingPrefetcher:
             # Patience expired: the scheduler owes us this block but can't
             # deliver (wedged tier space / leaked flight). Degrade to a
             # direct read so the pipeline unwedges instead of hanging.
-            self.stats.bump(direct_reads=1)
-            return self.store.get_range(block.key, block.start + lo,
-                                        block.start + hi)
+            return self._direct_get(block, lo, hi)
         if state == BlockState.CACHED and tier is not None:
             try:
                 # Load the whole block from the tier once; serve subsequent
@@ -768,9 +794,7 @@ class RollingPrefetcher:
                 # Drop the stale entry so the next acquire re-fetches into
                 # the cache instead of paying a direct GET forever.
                 self.index.invalidate(block.block_id)
-                self.stats.bump(direct_reads=1)
-                return self.store.get_range(block.key, block.start + lo,
-                                            block.start + hi)
+                return self._direct_get(block, lo, hi)
             self._buf_index = block.index
             return (memoryview(self._buf_data)[lo:hi] if view
                     else self._buf_data[lo:hi])
@@ -794,8 +818,7 @@ class RollingPrefetcher:
             self.index.abort_fetch(val)   # not fetching into the tier here
         else:
             self.index.leave(val)
-        self.stats.bump(direct_reads=1)
-        return self.store.get_range(block.key, block.start + lo, block.start + hi)
+        return self._direct_get(block, lo, hi)
 
     def _mark_consumed(self, block: Block) -> None:
         notify_evict = False

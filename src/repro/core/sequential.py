@@ -22,7 +22,13 @@ from dataclasses import dataclass
 from typing import TYPE_CHECKING
 
 from repro.core.plan import Block, BlockPlan
-from repro.store.base import ObjectMeta, ObjectStore, StoreError
+from repro.io.retry import Retrier, RetryPolicy
+from repro.store.base import (
+    ObjectMeta,
+    ObjectStore,
+    StoreError,
+    TransientStoreError,
+)
 from repro.store.tiers import BlockMeta, CacheIndex
 
 if TYPE_CHECKING:
@@ -36,6 +42,8 @@ class SequentialStats:
     bytes_read: int = 0
     fetch_s: float = 0.0
     store_requests: int = 0
+    retries: int = 0            # transient faults retried (shared Retrier)
+    throttles: int = 0          # ThrottleError responses (503 SlowDown)
     cache_hits: int = 0         # blocks served from the shared index
     flight_joins: int = 0       # blocks obtained from another reader's GET
 
@@ -62,6 +70,7 @@ class SequentialFile:
         cache_blocks: int = 1,
         tuner: "BlockSizeTuner | None" = None,
         index: CacheIndex | None = None,
+        retry: RetryPolicy | None = None,
     ) -> None:
         self.store = store
         self.plan = BlockPlan(files, blocksize)
@@ -69,6 +78,18 @@ class SequentialFile:
         self.tuner = tuner
         self.index = index
         self.stats = SequentialStats()
+        # Pre-resilience-layer this engine retried NOTHING: the first
+        # transient fault of a direct read or a `_join_flight` fallback
+        # GET killed the application's read() while the rolling engine
+        # rode out the same schedule. Every store request now resolves
+        # through the shared Retrier (full-jitter backoff), so both
+        # engines survive the same faults.
+        self.retry = retry if retry is not None else RetryPolicy()
+        self._retrier = Retrier(
+            self.retry,
+            on_retry=self._on_retry,
+            on_throttle=self._on_throttle,
+        )
         self._cache: dict[int, _CacheEntry] = {}
         self._lru: list[int] = []
         self._pos = 0
@@ -107,25 +128,51 @@ class SequentialFile:
             self._cache.pop(self._lru.pop(0), None)
         return self._cache[index].data
 
-    def _fetch_run(self, run: list[Block]) -> list[bytes]:
-        """One synchronous store request for a contiguous run of blocks."""
-        t0 = time.perf_counter()
+    def _on_retry(self, attempt: int, exc: Exception, pause: float) -> None:
+        self.stats.retries += 1
+
+    def _on_throttle(self) -> None:
+        self.stats.throttles += 1
+
+    def _request(self, run: list[Block]) -> list[bytes]:
         if len(run) == 1:
-            datas = [self.store.get_range(run[0].key, run[0].start, run[0].end)]
+            datas = [self.store.get_range(run[0].key, run[0].start,
+                                          run[0].end)]
         else:
             datas = self.store.get_ranges(
                 run[0].key, [(b.start, b.end) for b in run]
             )
+        for b, d in zip(run, datas):
+            if len(d) != b.size:
+                # Short response reported as complete: retry, don't
+                # cache-and-corrupt (same guard as the rolling engine).
+                raise TransientStoreError(
+                    f"truncated response for {b.block_id}: "
+                    f"got {len(d)} of {b.size} bytes"
+                )
+        return datas
+
+    def _fetch_run(self, run: list[Block]) -> list[bytes]:
+        """One synchronous (resilient) store request for a contiguous run
+        of blocks."""
+        retries_before = self.stats.retries
+        t0 = time.perf_counter()
+        datas = self._retrier.call(
+            lambda: self._request(run),
+            label=f"blocks {run[0].block_id}..{run[-1].block_id}",
+        )
         dt = time.perf_counter() - t0
         nbytes = sum(len(d) for d in datas)
         self.stats.fetch_s += dt
         self.stats.store_requests += 1
         self.stats.blocks_fetched += len(run)
         self.stats.bytes_fetched += nbytes
-        if self.tuner is not None:
+        if self.tuner is not None and self.stats.retries == retries_before:
             # Synchronous fetches time the store request exactly, so this
             # engine closes the loop too: with autotune on, PrefetchFS
             # retunes the Eq.-4 blocksize from these samples on reopen.
+            # Retried calls are excluded — their wall time carries
+            # backoff sleeps, not link behaviour.
             self.tuner.observe_request(nbytes, dt)
         return datas
 

@@ -22,6 +22,7 @@ from repro.io.fs import FSStats, PrefetchFS
 from repro.io.policy import IOPolicy
 from repro.io.reader import DirectReader, DirectStats, Reader
 from repro.io.registry import available_engines, engine_spec, register_reader
+from repro.io.retry import Hedger, Retrier, RetryPolicy
 from repro.io.stores import (
     StoreURI,
     available_stores,
@@ -42,6 +43,9 @@ __all__ = [
     "available_engines",
     "engine_spec",
     "register_reader",
+    "RetryPolicy",
+    "Retrier",
+    "Hedger",
     "StoreURI",
     "available_stores",
     "clear_store_cache",

@@ -8,26 +8,34 @@
 Each factory receives ``(store, files, tiers, policy)`` and returns a
 `Reader`. New engines (real S3, async, sharded multi-host) register the
 same way and become reachable from every `PrefetchFS` call site.
+
+The core engine modules are imported lazily inside the factories: they
+depend on ``repro.io.retry`` (the unified resilience layer), and a
+module-level import here would close an import cycle through the
+``repro.io`` package init.
 """
 
 from __future__ import annotations
 
-from repro.core.autotune import BlockSizeTuner
-from repro.core.rolling import RollingPrefetcher, RollingPrefetchFile
-from repro.core.sequential import SequentialFile
+from typing import TYPE_CHECKING
+
 from repro.io.policy import IOPolicy
-from repro.io.reader import DirectReader
 from repro.io.registry import register_reader
 from repro.store.base import ObjectMeta, ObjectStore
 from repro.store.tiers import CacheIndex, CacheTier
+
+if TYPE_CHECKING:
+    from repro.core.autotune import BlockSizeTuner
 
 
 @register_reader("rolling", needs_tiers=True, accepts_tuner=True,
                  accepts_index=True)
 def open_rolling(store: ObjectStore, files: list[ObjectMeta],
                  tiers: list[CacheTier], policy: IOPolicy,
-                 tuner: BlockSizeTuner | None = None,
-                 index: CacheIndex | None = None) -> RollingPrefetchFile:
+                 tuner: "BlockSizeTuner | None" = None,
+                 index: CacheIndex | None = None):
+    from repro.core.rolling import RollingPrefetcher, RollingPrefetchFile
+
     return RollingPrefetchFile(
         RollingPrefetcher(
             store, files, tiers, policy.blocksize,
@@ -36,9 +44,10 @@ def open_rolling(store: ObjectStore, files: list[ObjectMeta],
             coalesce=policy.coalesce if policy.coalesce is not None else 1,
             readahead_blocks=policy.readahead_blocks,
             eviction_interval_s=policy.eviction_interval_s,
-            max_retries=policy.max_retries,
-            retry_backoff_s=policy.retry_backoff_s,
+            retry=policy.retry_policy(),
             hedge_timeout_s=policy.hedge_timeout_s,
+            max_hedges=policy.max_hedges,
+            throttle_aimd=policy.throttle_aimd,
             tuner=tuner,
             index=index,
         )
@@ -48,14 +57,18 @@ def open_rolling(store: ObjectStore, files: list[ObjectMeta],
 @register_reader("sequential", accepts_tuner=True, accepts_index=True)
 def open_sequential(store: ObjectStore, files: list[ObjectMeta],
                     tiers: list[CacheTier], policy: IOPolicy,
-                    tuner: BlockSizeTuner | None = None,
-                    index: CacheIndex | None = None) -> SequentialFile:
+                    tuner: "BlockSizeTuner | None" = None,
+                    index: CacheIndex | None = None):
+    from repro.core.sequential import SequentialFile
+
     return SequentialFile(store, files, policy.blocksize,
                           cache_blocks=policy.cache_blocks, tuner=tuner,
-                          index=index)
+                          index=index, retry=policy.retry_policy())
 
 
 @register_reader("direct")
 def open_direct(store: ObjectStore, files: list[ObjectMeta],
-                tiers: list[CacheTier], policy: IOPolicy) -> DirectReader:
+                tiers: list[CacheTier], policy: IOPolicy):
+    from repro.io.reader import DirectReader
+
     return DirectReader(store, files)

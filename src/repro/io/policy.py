@@ -15,6 +15,8 @@ import dataclasses
 from dataclasses import dataclass
 from typing import Any, Mapping
 
+from repro.io.retry import RetryPolicy
+
 
 @dataclass(frozen=True)
 class IOPolicy:
@@ -22,13 +24,14 @@ class IOPolicy:
 
     Fields consumed per engine:
       * ``rolling``    — blocksize, depth, max_depth, coalesce,
-        readahead_blocks, eviction_interval_s, max_retries,
-        retry_backoff_s, hedge_timeout_s, autotune, tier_capacity;
-      * ``sequential`` — blocksize, cache_blocks;
+        readahead_blocks, eviction_interval_s, retry (or
+        max_retries/retry_backoff_s), hedge_timeout_s, max_hedges,
+        throttle_aimd, autotune, tier_capacity;
+      * ``sequential`` — blocksize, cache_blocks, retry;
       * ``direct``     — none (pass-through range reads);
       * write-behind `Writer` (``PrefetchFS.open_write``) — blocksize (the
-        part size), write_depth, max_retries, retry_backoff_s,
-        hedge_timeout_s, tier_capacity (staging budget).
+        part size), write_depth, retry (or max_retries/retry_backoff_s),
+        hedge_timeout_s, max_hedges, tier_capacity (staging budget).
 
     The adaptive-scheduling knobs:
       * ``coalesce`` — max adjacent blocks one store request may carry;
@@ -56,7 +59,18 @@ class IOPolicy:
     eviction_interval_s: float = 5.0
     max_retries: int = 3
     retry_backoff_s: float = 0.05
+    # The full resilience configuration. None (the default) builds a
+    # `RetryPolicy` from the legacy `max_retries`/`retry_backoff_s`
+    # knobs (full-jitter backoff); pass an explicit `RetryPolicy` for
+    # the budget/deadline/jitter knobs. See :meth:`retry_policy`.
+    retry: RetryPolicy | None = None
     hedge_timeout_s: float | None = None
+    max_hedges: int = 4                 # hedge duplicates in flight, per handle
+    # Throttle→depth feedback: a `ThrottleError` from the store halves
+    # the AIMD stream target immediately (rolling engine, max_depth set).
+    # False keeps the throttle-oblivious behaviour — retries back off but
+    # concurrency stays up (the A/B baseline in bench_resilience).
+    throttle_aimd: bool = True
     cache_blocks: int = 1               # sequential engine read-ahead cache
     autotune: bool = False              # retune blocksize/coalesce per open
     tier_capacity: int | None = None    # default cache budget when the FS owns tiers
@@ -89,6 +103,18 @@ class IOPolicy:
             )
         if self.max_retries < 0:
             raise ValueError(f"max_retries must be >= 0, got {self.max_retries}")
+        if self.max_hedges < 1:
+            raise ValueError(f"max_hedges must be >= 1, got {self.max_hedges}")
+
+    def retry_policy(self) -> RetryPolicy:
+        """The effective `RetryPolicy`: the explicit ``retry`` object
+        when given, else one built from the legacy scalar knobs (with
+        full-jitter backoff — the unjittered ``2 ** attempt`` loops this
+        replaces synchronized concurrent streams into retry storms)."""
+        if self.retry is not None:
+            return self.retry
+        return RetryPolicy(max_retries=self.max_retries,
+                           backoff_s=self.retry_backoff_s)
 
     def replace(self, **overrides: Any) -> "IOPolicy":
         """A copy with the given fields overridden (per-open tweaks)."""

@@ -189,9 +189,13 @@ def _open_local(uri: StoreURI) -> ObjectStore:
 def _open_sims3(uri: StoreURI) -> ObjectStore:
     uri.require_known_params(
         {"latency_ms", "bw_mbps", "jitter", "seed", "fail_prob",
+         "rps_limit", "rps_burst", "rps_penalty",
          "put_latency_ms", "put_bw_mbps"}
     )
     name = uri.location or "s3"
+    rps_limit = uri.float_param("rps_limit")
+    rps_burst = uri.float_param("rps_burst")
+    rps_penalty = uri.float_param("rps_penalty", 0.0) or 0.0
     link = LinkModel(
         latency_s=(uri.float_param("latency_ms", 0.0) or 0.0) / 1e3,
         bandwidth_Bps=(
@@ -202,12 +206,16 @@ def _open_sims3(uri: StoreURI) -> ObjectStore:
         jitter=uri.float_param("jitter", 0.0) or 0.0,
         seed=int(uri.float_param("seed", 0) or 0),
         fail_prob=uri.float_param("fail_prob", 0.0) or 0.0,
+        rps_limit=rps_limit if rps_limit is not None else float("inf"),
+        rps_burst=rps_burst,
+        rps_penalty=rps_penalty,
         name=name,
     )
     put_link = None
     if "put_latency_ms" in uri.params or "put_bw_mbps" in uri.params:
-        # Jitter/seed/fault-injection apply to BOTH directions; only the
-        # latency/bandwidth shape is asymmetric.
+        # Jitter/seed/fault-injection/rate-limits apply to BOTH
+        # directions (each direction gets its own token bucket); only
+        # the latency/bandwidth shape is asymmetric.
         put_link = LinkModel(
             latency_s=(
                 uri.float_param("put_latency_ms", link.latency_s * 1e3) or 0.0
@@ -220,6 +228,9 @@ def _open_sims3(uri: StoreURI) -> ObjectStore:
             jitter=link.jitter,
             seed=link.seed,
             fail_prob=link.fail_prob,
+            rps_limit=link.rps_limit,
+            rps_burst=link.rps_burst,
+            rps_penalty=link.rps_penalty,
             name=f"{name}.put",
         )
     return SimS3Store(link=link, put_link=put_link)

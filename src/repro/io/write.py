@@ -24,10 +24,12 @@ Durability contract:
     the final round-trips instead of paying one per writer serially;
   * ``abort()`` drops pending work and never publishes.
 
-Transient store faults retry with exponential backoff; an optional hedge
-(``IOPolicy.hedge_timeout_s``) duplicates a straggling part upload — puts
-to the same part index are idempotent, so taking the first copy that lands
-is safe. Both knobs reuse the rolling engine's straggler recipe.
+Transient store faults retry through the unified resilience layer
+(`repro.io.retry`): full-jitter exponential backoff via the policy's
+`RetryPolicy`, and an optional hedge (``IOPolicy.hedge_timeout_s``,
+capped by ``max_hedges``) duplicates a straggling part upload — puts to
+the same part index are idempotent, so taking the first copy that lands
+is safe. The rolling read engine resolves through the same layer.
 """
 
 from __future__ import annotations
@@ -41,7 +43,8 @@ from dataclasses import dataclass, field
 from typing import Callable, Sequence
 
 from repro.io.policy import IOPolicy
-from repro.store.base import ObjectStore, StoreError, TransientStoreError
+from repro.io.retry import Hedger, Retrier
+from repro.store.base import ObjectStore, StoreError
 from repro.store.tiers import CacheIndex, CacheTier
 from repro.utils import get_logger
 
@@ -60,6 +63,7 @@ class WriteStats:
     parts_uploaded: int = 0
     put_requests: int = 0
     retries: int = 0
+    throttles: int = 0          # ThrottleError responses (503 SlowDown)
     hedges: int = 0
     upload_s: float = 0.0       # cumulative time inside store calls
     stage_wait_s: float = 0.0   # application blocked on staging backpressure
@@ -193,6 +197,20 @@ class Writer:
         self._aborted = False
         self._pos = 0
         self._uid = next(_WRITER_IDS)
+        # Unified resilience layer: one Retrier (full-jitter backoff,
+        # shared across this writer's concurrent part uploads) and one
+        # Hedger (max-hedges-in-flight cap) replace the old inline
+        # `2 ** attempt` loop and its copy-pasted hedging.
+        self._retrier = Retrier(
+            policy.retry_policy(),
+            on_retry=lambda attempt, exc, pause: self.stats.bump(retries=1),
+            on_throttle=lambda: self.stats.bump(throttles=1),
+        )
+        self._hedger = Hedger(
+            policy.hedge_timeout_s,
+            max_in_flight=policy.max_hedges,
+            on_hedge=lambda: self.stats.bump(hedges=1, put_requests=1),
+        )
 
     # ------------------------------------------------------------------ #
     # file-object surface
@@ -430,60 +448,16 @@ class Writer:
                 self._cond.notify_all()
 
     def _execute_put(self, fn: Callable[[], None]) -> None:
-        """Retries + optional hedging around one store request (the rolling
-        engine's fetch recipe, applied to puts)."""
-        last: Exception | None = None
-        for attempt in range(self.policy.max_retries + 1):
-            try:
-                return self._put_maybe_hedged(fn)
-            except TransientStoreError as e:
-                last = e
-                if attempt < self.policy.max_retries:
-                    self.stats.bump(retries=1)
-                    time.sleep(self.policy.retry_backoff_s * (2 ** attempt))
-        raise StoreError(
-            f"{self.key}: exhausted {self.policy.max_retries + 1} "
-            f"upload attempts"
-        ) from last
+        """Retries + optional hedging around one store request, resolved
+        through the shared resilience layer (puts to the same key/part
+        index are idempotent, so taking the first hedged copy that lands
+        is safe)."""
 
-    def _put_maybe_hedged(self, fn: Callable[[], None]) -> None:
-        if self.policy.hedge_timeout_s is None:
+        def attempt():
             self.stats.bump(put_requests=1)
-            return fn()
-        cond = threading.Condition()
-        ok: list[bool] = []
-        errors: list[Exception] = []
+            return self._hedger.call(fn)
 
-        def attempt() -> None:
-            try:
-                fn()
-            except Exception as e:   # noqa: BLE001 - propagated below
-                with cond:
-                    errors.append(e)
-                    cond.notify_all()
-            else:
-                with cond:
-                    ok.append(True)
-                    cond.notify_all()
-
-        self.stats.bump(put_requests=1)
-        threading.Thread(target=attempt, daemon=True).start()
-        launched = 1
-        with cond:
-            cond.wait_for(lambda: ok or errors,
-                          timeout=self.policy.hedge_timeout_s)
-            hedge = not ok and not errors
-        if hedge:
-            # Puts to the same key/part are idempotent: race a duplicate
-            # and take the first copy that lands.
-            self.stats.bump(hedges=1, put_requests=1)
-            threading.Thread(target=attempt, daemon=True).start()
-            launched = 2
-        with cond:
-            cond.wait_for(lambda: ok or len(errors) >= launched)
-        if ok:
-            return
-        raise errors[0]
+        self._retrier.call(attempt, label=f"upload {self.key!r}")
 
     # ------------------------------------------------------------------ #
     # error + barrier plumbing

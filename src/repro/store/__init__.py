@@ -3,7 +3,17 @@ from repro.store.base import (
     ObjectMeta,
     ObjectStore,
     StoreError,
+    ThrottleError,
     TransientStoreError,
+)
+from repro.store.faults import (
+    ALL_OPS,
+    META_OPS,
+    READ_OPS,
+    WRITE_OPS,
+    FaultRule,
+    FaultSchedule,
+    FaultyStore,
 )
 from repro.store.link import LinkModel
 from repro.store.sim_s3 import SimS3Store
@@ -18,13 +28,21 @@ from repro.store.tiers import (
 )
 
 __all__ = [
+    "ALL_OPS",
+    "META_OPS",
+    "READ_OPS",
+    "WRITE_OPS",
     "BlockMeta",
     "CacheFlight",
     "CacheIndex",
+    "FaultRule",
+    "FaultSchedule",
+    "FaultyStore",
     "MultipartUpload",
     "ObjectStore",
     "ObjectMeta",
     "StoreError",
+    "ThrottleError",
     "TransientStoreError",
     "LinkModel",
     "SimS3Store",

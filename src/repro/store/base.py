@@ -23,7 +23,14 @@ class StoreError(RuntimeError):
 
 
 class TransientStoreError(StoreError):
-    """Retryable failure (simulated network fault, throttling)."""
+    """Retryable failure (simulated network fault, dropped connection)."""
+
+
+class ThrottleError(TransientStoreError):
+    """Backend pushback (S3 503 SlowDown): retryable, but the correct
+    response is to back off AND shrink concurrency — `repro.io.retry`
+    routes this subclass into the AIMD depth controller so the prefetch
+    pipeline stops hammering a rate-limited store."""
 
 
 @dataclass(frozen=True)
