@@ -21,6 +21,7 @@ BENCHES = {
     "adaptive_read": "benchmarks.bench_adaptive_read",
     "write_pipeline": "benchmarks.bench_write_pipeline",
     "cache_reuse": "benchmarks.bench_cache_reuse",
+    "hsm": "benchmarks.bench_hsm",
     "resilience": "benchmarks.bench_resilience",
     "roofline": "benchmarks.bench_roofline",
 }

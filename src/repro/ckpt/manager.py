@@ -235,6 +235,11 @@ def restore_checkpoint(
                 depth=prefetch_depth,
                 eviction_interval_s=0.2,
             )
+        if policy.io_class == "default":
+            # Restore streams are the checkpoint workload class (top-tier
+            # HSM admission); an explicit io_class — e.g. "serve" from
+            # `ServeEngine.from_store` — wins.
+            policy = policy.replace(io_class="ckpt")
         if warm_cache and not policy.keep_cached:
             policy = policy.replace(keep_cached=True)
         if step is None:

@@ -161,6 +161,7 @@ class RollingPrefetcher:
         throttle_aimd: bool = True,
         tuner: BlockSizeTuner | None = None,
         index: CacheIndex | None = None,
+        io_class: str = "default",
     ) -> None:
         if not tiers:
             raise ValueError("at least one cache tier is required")
@@ -204,6 +205,10 @@ class RollingPrefetcher:
         # exactly like the paper's per-reader cache, except that a
         # persistent DirTier still primes it warm after a restart.
         self.index = index if index is not None else CacheIndex(tiers)
+        # Workload class stamped on every acquire/reserve: the HSM index
+        # keys admission (entry tier, protection, scan resistance) and
+        # per-class hit accounting off it; a flat index ignores it.
+        self.io_class = io_class
         self.stats = PrefetchStats()
         self._aimd = (
             AimdDepthController(depth, max_depth)
@@ -394,7 +399,7 @@ class RollingPrefetcher:
         stream should exit."""
         group: list[tuple[Block, CacheFlight]] = []
         for pos, b in enumerate(run):
-            kind, val = self.index.acquire(b.block_id)
+            kind, val = self.index.acquire(b.block_id, self.io_class)
             if kind == "leader":
                 group.append((b, val))
                 continue
@@ -518,7 +523,7 @@ class RollingPrefetcher:
             # Leader failed (or abandoned): re-acquire; the block may have
             # landed meanwhile, someone else may be retrying it, or we
             # become the leader and run our own retry budget.
-            kind, val = self.index.acquire(b.block_id)
+            kind, val = self.index.acquire(b.block_id, self.io_class)
             if kind == "hit":
                 self.stats.bump(cache_hits=1)
                 self._mark_cached(b, val)
@@ -544,7 +549,7 @@ class RollingPrefetcher:
         # Priority-ordered tier walk with verify_used reconciliation and
         # capacity-pressure LRU eviction of unpinned index blocks, shared
         # with the sequential engine via the index.
-        return self.index.reserve_space(nbytes)
+        return self.index.reserve_space(nbytes, self.io_class)
 
     def _fetch_group(self, group: list[tuple[Block, CacheFlight]],
                      tier: CacheTier) -> None:
@@ -803,7 +808,7 @@ class RollingPrefetcher:
         # CONSUMED/EVICTED (backward seek): the shared cache may still
         # hold the block (keep_cached, another reader's pin) — serve it
         # locally before paying a store GET.
-        kind, val = self.index.acquire(block.block_id)
+        kind, val = self.index.acquire(block.block_id, self.io_class)
         if kind == "hit":
             try:
                 data = val.read(block.block_id, lo, hi)

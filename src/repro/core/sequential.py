@@ -71,12 +71,14 @@ class SequentialFile:
         tuner: "BlockSizeTuner | None" = None,
         index: CacheIndex | None = None,
         retry: RetryPolicy | None = None,
+        io_class: str = "default",
     ) -> None:
         self.store = store
         self.plan = BlockPlan(files, blocksize)
         self.cache_blocks = max(1, cache_blocks)
         self.tuner = tuner
         self.index = index
+        self.io_class = io_class
         self.stats = SequentialStats()
         # Pre-resilience-layer this engine retried NOTHING: the first
         # transient fault of a direct read or a `_join_flight` fallback
@@ -186,7 +188,7 @@ class SequentialFile:
         out: dict[int, bytes] = {}
         group: list[tuple[Block, object]] = []
         for b in run:
-            kind, val = self.index.acquire(b.block_id)
+            kind, val = self.index.acquire(b.block_id, self.io_class)
             if kind == "leader":
                 group.append((b, val))
                 continue
@@ -250,7 +252,7 @@ class SequentialFile:
                 # this racy instant just re-fetches itself.)
                 self.index.abort_fetch(fl)
                 continue
-            tier = self.index.reserve_space(b.size)
+            tier = self.index.reserve_space(b.size, self.io_class)
             if tier is None:
                 # Nowhere to publish (tiers full of pinned blocks): the
                 # data is still returned; waiters re-acquire and fetch.
@@ -300,7 +302,7 @@ class SequentialFile:
                 self.stats.flight_joins += 1
                 return data
             # Leader failed: take over (or join the next attempt).
-            kind, val = self.index.acquire(b.block_id)
+            kind, val = self.index.acquire(b.block_id, self.io_class)
             if kind == "hit":
                 return self._read_hit(b, val)
             if kind == "wait":

@@ -101,7 +101,7 @@ class PrefetchingDataLoader:
         self,
         store: ObjectStore,
         files: list[ObjectMeta],
-        tiers: list[CacheTier],
+        tiers: list[CacheTier] | None,
         cfg: LoaderConfig,
         cursor: DataCursor | None = None,
     ) -> None:
@@ -117,7 +117,15 @@ class PrefetchingDataLoader:
             policy = policy.replace(autotune=True)
         if cfg.keep_cached and not policy.keep_cached:
             policy = policy.replace(keep_cached=True)
+        if policy.io_class == "default":
+            # Epoch sweeps are the canonical bulk-scan class: under an HSM
+            # hierarchy they enter at the disk level and are
+            # scan-resistant, so one epoch cannot flush the hot set. An
+            # explicit io_class on the caller's policy wins.
+            policy = policy.replace(io_class="loader")
         self.policy = policy
+        # `tiers=None` lets the filesystem own placement: it builds its
+        # default MemTier, or adopts the hierarchy of an `hsm://` store.
         self.fs = PrefetchFS(store, policy=self.policy, tiers=tiers)
         self._file = None
         self._reader = None

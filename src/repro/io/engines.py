@@ -50,6 +50,7 @@ def open_rolling(store: ObjectStore, files: list[ObjectMeta],
             throttle_aimd=policy.throttle_aimd,
             tuner=tuner,
             index=index,
+            io_class=policy.io_class,
         )
     )
 
@@ -63,7 +64,8 @@ def open_sequential(store: ObjectStore, files: list[ObjectMeta],
 
     return SequentialFile(store, files, policy.blocksize,
                           cache_blocks=policy.cache_blocks, tuner=tuner,
-                          index=index, retry=policy.retry_policy())
+                          index=index, retry=policy.retry_policy(),
+                          io_class=policy.io_class)
 
 
 @register_reader("direct")

@@ -36,6 +36,7 @@ from repro.io.registry import available_engines, engine_spec
 from repro.io.stores import open_store
 from repro.io.write import UploadPool, Writer
 from repro.store.base import ObjectMeta, ObjectStore
+from repro.store.hsm import HSMStore
 from repro.store.tiers import CacheIndex, CacheTier, MemTier
 
 # Importing the engines module populates the registry with the built-ins.
@@ -74,6 +75,10 @@ class FSStats:
     # Shared cache-index counters (hits, misses, joins, evictions,
     # recovered, resident_blocks/bytes); None until the fs has tiers.
     cache: dict | None = None
+    # HSM placement counters (promotions, demotions, per-tier and
+    # per-class hits, residency per tier, cost-model estimates); None
+    # unless the fs index is an `HSMIndex`.
+    hsm: dict | None = None
 
     def snapshot(self) -> dict:
         return {
@@ -82,6 +87,7 @@ class FSStats:
             "per_engine": {k: dict(v) for k, v in self.per_engine.items()},
             "tuner": dict(self.tuner) if self.tuner is not None else None,
             "cache": dict(self.cache) if self.cache is not None else None,
+            "hsm": dict(self.hsm) if self.hsm is not None else None,
         }
 
 
@@ -98,6 +104,17 @@ class PrefetchFS:
         # `store` may be a URI ("mem://", "local:///path", "sims3://bucket")
         # resolved through the store registry; same URI -> same instance.
         self.store = open_store(store)
+        # An `hsm://` composite store carries its whole hierarchy: adopt
+        # its tiers and `HSMIndex` (unless the caller overrides them) and
+        # read through the backing store — every engine then places blocks
+        # via HSM admission/promotion with no call-site changes. Two
+        # filesystems opened on the same hsm URI share one hierarchy.
+        if isinstance(self.store, HSMStore):
+            if tiers is None:
+                tiers = self.store.tiers
+            if index is None:
+                index = self.store.index
+            self.store = self.store.inner
         self.policy = policy if policy is not None else IOPolicy()
         self._tiers: list[CacheTier] | None = (
             list(tiers) if tiers is not None else None
@@ -356,6 +373,9 @@ class PrefetchFS:
             out.tuner = tuner.estimates()
         if index is not None:
             out.cache = index.snapshot()
+            hsm_snap = getattr(index, "hsm_snapshot", None)
+            if hsm_snap is not None:
+                out.hsm = hsm_snap()
         for bucket in per_engine.values():
             out.opens += bucket.get("opens", 0)
             for k, v in bucket.items():

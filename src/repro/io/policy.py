@@ -81,6 +81,14 @@ class IOPolicy:
     # restarted jobs start warm. False keeps the paper's
     # evict-when-consumed behaviour.
     keep_cached: bool = False
+    # Workload class carried to the cache layer (HSM admission): "loader"
+    # (bulk epoch sweeps: disk-level entry, scan-resistant), "ckpt"
+    # (restore streams: top-tier entry), "serve" (latency-critical
+    # restores: top-tier entry, protected from displacement by other
+    # classes), or "default". A flat CacheIndex ignores it; the loader,
+    # checkpoint, and serve call sites stamp their class when the caller
+    # left this at "default".
+    io_class: str = "default"
 
     def __post_init__(self) -> None:
         if self.blocksize <= 0:
@@ -105,6 +113,10 @@ class IOPolicy:
             raise ValueError(f"max_retries must be >= 0, got {self.max_retries}")
         if self.max_hedges < 1:
             raise ValueError(f"max_hedges must be >= 1, got {self.max_hedges}")
+        if not self.io_class or not isinstance(self.io_class, str):
+            raise ValueError(
+                f"io_class must be a non-empty string, got {self.io_class!r}"
+            )
 
     def retry_policy(self) -> RetryPolicy:
         """The effective `RetryPolicy`: the explicit ``retry`` object

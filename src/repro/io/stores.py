@@ -41,7 +41,7 @@ from __future__ import annotations
 import threading
 from dataclasses import dataclass, field
 from typing import Callable, Mapping
-from urllib.parse import parse_qsl, urlsplit
+from urllib.parse import parse_qsl, quote, urlsplit
 
 from repro.store.base import ObjectStore
 from repro.store.link import LinkModel
@@ -67,7 +67,17 @@ class StoreURI:
         return self.netloc + self.path
 
     def canonical(self) -> str:
-        query = "&".join(f"{k}={v}" for k, v in sorted(self.params.items()))
+        """Injective normal form used as the instance-cache key: scheme is
+        already lowercased by the parser, params are sorted AND
+        re-percent-encoded. The re-encoding matters: ``parse_qsl``
+        decodes escapes, so joining raw values would collapse e.g.
+        ``?a=1&b=2`` and ``?a=1%26b%3D2`` (one param whose VALUE is
+        "1&b=2") into the same key — two different stores would silently
+        share one cached instance (one LinkModel, one state)."""
+        query = "&".join(
+            f"{quote(k, safe='')}={quote(v, safe='')}"
+            for k, v in sorted(self.params.items())
+        )
         return f"{self.scheme}://{self.netloc}{self.path}" + (
             f"?{query}" if query else ""
         )
@@ -109,7 +119,9 @@ def parse_store_uri(uri: str) -> StoreURI:
 
 _REGISTRY: dict[str, StoreFactory] = {}
 _CACHE: dict[str, ObjectStore] = {}
-_CACHE_LOCK = threading.Lock()
+# Reentrant: composite factories (hsm://) resolve their backing store
+# through open_store while the cache lock is held.
+_CACHE_LOCK = threading.RLock()
 
 
 def register_store(scheme: str):
@@ -234,3 +246,20 @@ def _open_sims3(uri: StoreURI) -> ObjectStore:
             name=f"{name}.put",
         )
     return SimS3Store(link=link, put_link=put_link)
+
+
+@register_store("hsm")
+def _open_hsm(uri: StoreURI) -> ObjectStore:
+    """Composite hierarchical-storage-manager store::
+
+        hsm://?mem=64MB&disk=/scratch/cache:1GB&backing=mem://bucket
+
+    Assembles cache tiers (level order mem, disk, shared) + an `HSMIndex`
+    around the ``backing`` store; `PrefetchFS` adopts the hierarchy. A
+    backing URI carrying its own query string must be percent-encoded
+    (``backing=sims3%3A%2F%2Fb%3Flatency_ms%3D40``), since a bare ``&``
+    would be read as the next hsm param. See `repro.store.hsm.build_hsm`.
+    """
+    from repro.store.hsm import build_hsm
+
+    return build_hsm(uri, open_inner=open_store)

@@ -79,7 +79,19 @@ class ServeEngine:
         fetches with `device_put` (serving cold-start is the paper's
         sequential multi-object stream)."""
         from repro.ckpt.manager import restore_checkpoint
+        from repro.io import IOPolicy
 
+        # Serving cold-start is the latency-critical restore class: under
+        # an HSM hierarchy its blocks admit into (and are protected in)
+        # the top tier, so a concurrent bulk scan cannot flush the weights
+        # a replica re-reads on every restart.
+        if policy is None:
+            # Mirrors restore_checkpoint's own default policy, plus the
+            # serve class.
+            policy = IOPolicy(engine="rolling", blocksize=8 << 20, depth=2,
+                              eviction_interval_s=0.2, io_class="serve")
+        elif policy.io_class == "default":
+            policy = policy.replace(io_class="serve")
         params, _ = restore_checkpoint(store, prefix, template, step=step,
                                        policy=policy)
         return cls(model, params, max_batch=max_batch, pad_id=pad_id)

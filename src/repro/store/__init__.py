@@ -15,6 +15,13 @@ from repro.store.faults import (
     FaultSchedule,
     FaultyStore,
 )
+from repro.store.hsm import (
+    AdmissionPolicy,
+    HSMIndex,
+    HSMStore,
+    TierCostModel,
+    parse_size,
+)
 from repro.store.link import LinkModel
 from repro.store.sim_s3 import SimS3Store
 from repro.store.local import DirStore, MemStore
@@ -51,4 +58,9 @@ __all__ = [
     "CacheTier",
     "MemTier",
     "DirTier",
+    "AdmissionPolicy",
+    "HSMIndex",
+    "HSMStore",
+    "TierCostModel",
+    "parse_size",
 ]

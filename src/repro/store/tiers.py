@@ -73,6 +73,11 @@ class CacheTier(abc.ABC):
         self.read_link = read_link if read_link is not None else LinkModel(name=f"{name}.r")
         self.write_link = write_link if write_link is not None else LinkModel(name=f"{name}.w")
         self.name = name
+        # Position in a storage hierarchy (0 = fastest). A flat tier list
+        # leaves it at 0; the HSM assigns levels and persistent tiers
+        # journal it with each block (the tier-generation field), so a
+        # recovered block is known to have lived at this level.
+        self.level = 0
         self._used = 0       # optimistic accounting: committed + in-flight
         self._inflight = 0   # reserved but not yet written
         self._lock = threading.Lock()
@@ -297,6 +302,7 @@ class DirTier(CacheTier):
         # journal read-only and serves/writes blocks, but never deletes a
         # live sibling's files or rewrites its journal records.
         self._lock_file = None
+        self._owner_marker: str | None = None
         self.owns_root = True
         if fcntl is not None:
             f = open(os.path.join(root, self.LOCK_NAME), "a+b")  # noqa: SIM115
@@ -310,6 +316,30 @@ class DirTier(CacheTier):
                     "%s: cache root %s is owned by another live tier; "
                     "recovery cleanup and journal compaction are disabled "
                     "in this instance", self.name, root,
+                )
+        else:
+            # Non-POSIX fallback: no advisory flock, so ownership is an
+            # O_EXCL marker file — strictly single-owner (first opener
+            # wins; every later opener recovers read-only). Without this,
+            # every opener believed it owned the root and two live tiers
+            # would delete each other's blocks as "orphans". The marker
+            # is removed on close(); a crash leaves it behind, making the
+            # NEXT opener conservatively read-only (delete the marker by
+            # hand to reclaim ownership) — safe, never destructive.
+            marker = os.path.join(root, self.LOCK_NAME + ".owner")
+            try:
+                fd = os.open(marker, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+                with contextlib.suppress(OSError):
+                    os.write(fd, str(os.getpid()).encode("ascii"))
+                os.close(fd)
+                self._owner_marker = marker
+            except FileExistsError:
+                self.owns_root = False
+                log.warning(
+                    "%s: cache root %s has an owner marker (another live "
+                    "tier, or a stale one from a crash); recovery cleanup "
+                    "and journal compaction are disabled in this instance",
+                    self.name, root,
                 )
         self._recover()
         with self._lock:
@@ -326,6 +356,10 @@ class DirTier(CacheTier):
                 with contextlib.suppress(OSError):
                     self._lock_file.close()
                 self._lock_file = None
+            if self._owner_marker is not None:
+                with contextlib.suppress(OSError):
+                    os.remove(self._owner_marker)
+                self._owner_marker = None
 
     # -- paths --------------------------------------------------------------
     def _path(self, block_id: str) -> str:
@@ -469,7 +503,8 @@ class DirTier(CacheTier):
                 rec = {"op": "put", "id": block_id, "len": len(data),
                        "crc": zlib.crc32(data) & 0xFFFFFFFF,
                        "key": meta.key if meta is not None else None,
-                       "off": meta.offset if meta is not None else None}
+                       "off": meta.offset if meta is not None else None,
+                       "lvl": self.level}
                 self._meta[block_id] = rec
                 self._live[block_id] = len(data)
                 self._transient.discard(block_id)
@@ -537,6 +572,15 @@ class DirTier(CacheTier):
         with self._journal_lock:
             return list(self._live.items())
 
+    def journaled_level(self, block_id: str) -> int | None:
+        """Tier-generation of a recovered block: the hierarchy level this
+        tier occupied when the block was journaled (pre-``lvl`` journals
+        return None). The HSM uses it to re-seed heat for blocks that
+        lived at a hotter level before the restart."""
+        with self._journal_lock:
+            rec = self._meta.get(block_id)
+            return rec.get("lvl") if rec is not None else None
+
 
 @dataclass(frozen=True)
 class TierPlacement:
@@ -554,24 +598,27 @@ class CacheFlight:
     Readers that arrive while it is in flight register as waiters and are
     pinned automatically when the leader publishes."""
 
-    __slots__ = ("block_id", "done", "tier", "error", "waiters")
+    __slots__ = ("block_id", "done", "tier", "error", "waiters", "io_class")
 
-    def __init__(self, block_id: str) -> None:
+    def __init__(self, block_id: str, io_class: str = "default") -> None:
         self.block_id = block_id
         self.done = False
         self.tier: CacheTier | None = None
         self.error: Exception | None = None
         self.waiters = 0
+        self.io_class = io_class
 
 
 class _IndexEntry:
-    __slots__ = ("tier", "size", "refs", "evict_requested")
+    __slots__ = ("tier", "size", "refs", "evict_requested", "io_class")
 
-    def __init__(self, tier: CacheTier, size: int, refs: int) -> None:
+    def __init__(self, tier: CacheTier, size: int, refs: int,
+                 io_class: str = "default") -> None:
         self.tier = tier
         self.size = size
         self.refs = refs
         self.evict_requested = False
+        self.io_class = io_class
 
 
 class CacheIndex:
@@ -630,11 +677,15 @@ class CacheIndex:
             self.keep_cached = keep
 
     # -- residency / single flight ------------------------------------------
-    def acquire(self, block_id: str):
+    def acquire(self, block_id: str, io_class: str = "default"):
         """Returns ``("hit", tier)`` with a pin taken, ``("leader",
         flight)`` when the caller must fetch the block (finish with
         `publish` or `abort_fetch`), or ``("wait", flight)`` when another
-        reader's fetch is in flight (finish with `join` or `leave`)."""
+        reader's fetch is in flight (finish with `join` or `leave`).
+
+        ``io_class`` names the workload class (``IOPolicy.io_class``)
+        making the access — ignored here, consumed by the HSM subclass
+        for heat tracking and per-class admission."""
         with self._cond:
             while block_id in self._deleting:
                 self._cond.wait(timeout=0.5)
@@ -643,13 +694,14 @@ class CacheIndex:
                 e.refs += 1
                 self._evictable.pop(block_id, None)
                 self.hits += 1
+                self._note_hit(block_id, e, io_class)
                 return "hit", e.tier
             fl = self._flights.get(block_id)
             if fl is not None:
                 fl.waiters += 1
                 self.joins += 1
                 return "wait", fl
-            fl = CacheFlight(block_id)
+            fl = CacheFlight(block_id, io_class)
             self._flights[block_id] = fl
             self.misses += 1
             return "leader", fl
@@ -659,9 +711,10 @@ class CacheIndex:
         for the leader plus once per registered waiter (each waiter's
         `join` returns an already-pinned hit)."""
         with self._cond:
-            self._entries[flight.block_id] = _IndexEntry(
-                tier, size, refs=1 + flight.waiters
-            )
+            e = _IndexEntry(tier, size, refs=1 + flight.waiters,
+                            io_class=flight.io_class)
+            self._entries[flight.block_id] = e
+            self._on_insert(flight.block_id, e)
             flight.done = True
             flight.tier = tier
             self._flights.pop(flight.block_id, None)
@@ -732,8 +785,7 @@ class CacheIndex:
                 return False
             if self.keep_cached or not e.evict_requested:
                 # Stays resident, LRU-evictable under pressure.
-                self._evictable[block_id] = None
-                self._evictable.move_to_end(block_id)
+                self._note_evictable(block_id, e)
                 return False
             del self._entries[block_id]
             self._evictable.pop(block_id, None)
@@ -751,10 +803,30 @@ class CacheIndex:
                 self._cond.notify_all()
         return True
 
-    def evict_from(self, tier: CacheTier, nbytes: int) -> int:
+    # -- subclass hooks (no-ops in the flat index) ---------------------------
+    def _note_hit(self, block_id: str, e: _IndexEntry, io_class: str) -> None:
+        """A resident block was pinned. Caller holds `_cond`."""
+
+    def _on_insert(self, block_id: str, e: _IndexEntry) -> None:
+        """A fetched block was published. Caller holds `_cond`."""
+
+    def _note_evictable(self, block_id: str, e: _IndexEntry) -> None:
+        """The last pin dropped and the block stays resident: record it as
+        an eviction candidate. The flat index is a plain LRU (most
+        recently unpinned last); the HSM places scan-resistant classes at
+        the FRONT so a bulk sweep evicts its own blocks first. Caller
+        holds `_cond`."""
+        self._evictable[block_id] = None
+        self._evictable.move_to_end(block_id)
+
+    def evict_from(self, tier: CacheTier, nbytes: int,
+                   requester: str | None = None) -> int:
         """Capacity pressure: delete least-recently-unpinned blocks from
         `tier` until at least `nbytes` are freed (or nothing unpinned is
-        left). Pinned blocks are untouchable. Returns bytes freed."""
+        left). Pinned blocks are untouchable. Returns bytes freed.
+        ``requester`` names the workload class applying the pressure —
+        ignored here, consumed by the HSM subclass (demote-not-evict,
+        protected classes)."""
         freed = 0
         with self._cond:
             victims = []
@@ -790,19 +862,22 @@ class CacheIndex:
             tier.release(size)
 
     # -- placement -------------------------------------------------------------
-    def reserve_space(self, nbytes: int) -> CacheTier | None:
+    def reserve_space(self, nbytes: int,
+                      io_class: str = "default") -> CacheTier | None:
         """Priority-ordered tier walk shared by every engine: reconcile
         (`verify_used`) when a tier looks full, reserve, and LRU-evict
         unpinned index blocks under capacity pressure before giving up on
         a tier (Algorithm 1 + shared-cache pressure eviction). Returns the
         tier holding the reservation, or None when every tier is full of
-        pinned/in-flight bytes."""
+        pinned/in-flight bytes. ``io_class`` is ignored here; the HSM
+        subclass applies per-class admission (entry level, cost-ordered
+        candidates)."""
         for cand in self.tiers:
             if cand.available() < nbytes:
                 cand.verify_used()
             if cand.reserve(nbytes):
                 return cand
-            if (self.evict_from(cand, nbytes) > 0
+            if (self.evict_from(cand, nbytes, requester=io_class) > 0
                     and cand.reserve(nbytes)):
                 return cand
         return None

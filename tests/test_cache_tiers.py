@@ -220,6 +220,100 @@ class TestDirTierPersistence:
         assert restarted.owns_root is True
         assert not os.path.exists(owner._path("inflight"))  # now swept
 
+    def test_fcntl_unavailable_fallback_is_single_owner(self, tmp_path,
+                                                        monkeypatch):
+        """Regression (non-POSIX fallback): without fcntl, EVERY opener
+        used to believe it owned the root, and two live tiers would sweep
+        each other's files as orphans. The marker-file fallback makes
+        ownership first-opener-wins; later openers recover read-only."""
+        import repro.store.tiers as tiers_mod
+
+        monkeypatch.setattr(tiers_mod, "fcntl", None)
+        root = str(tmp_path / "cache")
+        owner = DirTier(1 << 20, root=root)
+        assert owner.owns_root is True
+        owner.write("a", payload(100))
+        # A block file the journal doesn't know (mid-flight sibling write).
+        with open(owner._path("inflight"), "wb") as f:
+            f.write(payload(50))
+
+        sibling = DirTier(1 << 20, root=root)
+        assert sibling.owns_root is False              # NOT a second owner
+        assert sibling.recovered_blocks == 1           # journal replayed
+        assert os.path.exists(owner._path("inflight"))  # not swept
+        assert sibling.read("a") == payload(100)
+
+        owner.close()
+        sibling.close()
+        reopened = DirTier(1 << 20, root=root)         # marker released
+        assert reopened.owns_root is True
+        assert not os.path.exists(owner._path("inflight"))  # owner sweeps
+        reopened.close()
+
+    def test_fcntl_unavailable_stale_marker_is_conservative(self, tmp_path,
+                                                            monkeypatch):
+        """A crash leaves the owner marker behind; the next opener must
+        come up read-only (never destructive) until it is removed."""
+        import repro.store.tiers as tiers_mod
+
+        monkeypatch.setattr(tiers_mod, "fcntl", None)
+        root = str(tmp_path / "cache")
+        crashed = DirTier(1 << 20, root=root)
+        crashed.write("a", payload(64))
+        # No close(): simulated crash; the marker file is still there.
+        after = DirTier(1 << 20, root=root)
+        assert after.owns_root is False
+        assert after.read("a") == payload(64)
+        os.remove(os.path.join(root, DirTier.LOCK_NAME + ".owner"))
+        reclaimed = DirTier(1 << 20, root=root)
+        assert reclaimed.owns_root is True
+        reclaimed.close()
+
+    def test_compaction_racing_nonowner_writer_keeps_its_blocks(self,
+                                                                tmp_path):
+        """Satellite: owner journal compaction racing a live read-only
+        sibling's writes. The compaction rewrite replays the journal under
+        the cross-process flock, so records the sibling appended mid-churn
+        survive — a restart recovers BOTH writers' blocks."""
+        root = str(tmp_path / "cache")
+        owner = DirTier(1 << 20, root=root)
+        owner._COMPACT_SLACK = 10       # compact every ~15 records
+        sibling = DirTier(1 << 20, root=root)
+        assert sibling.owns_root is False
+        stop, errs = threading.Event(), []
+
+        def sib_writes():
+            try:
+                i = 0
+                while not stop.is_set():
+                    sibling.write(f"sib{i % 10}", payload(64, seed=i))
+                    i += 1
+            except Exception as e:   # noqa: BLE001 — surfaced below
+                errs.append(e)
+
+        t = threading.Thread(target=sib_writes)
+        t.start()
+        # Owner churn forces repeated compaction while the sibling writes.
+        for round_ in range(20):
+            for i in range(5):
+                owner.write(f"own{i}", payload(64, seed=round_))
+        stop.set()
+        t.join(timeout=30)
+        assert not errs
+        owner.close()
+        sibling.close()
+
+        restarted = DirTier(1 << 20, root=root)
+        resident = dict(restarted.resident_blocks())
+        for i in range(5):
+            assert f"own{i}" in resident
+            assert restarted.read(f"own{i}") == payload(64, seed=19)
+        sib_blocks = [b for b in resident if b.startswith("sib")]
+        assert sib_blocks, "sibling's journal records lost in compaction"
+        for bid in sib_blocks:
+            assert len(restarted.read(bid)) == 64
+        restarted.close()
+
     def test_journal_compaction_preserves_state(self, tmp_path):
         root = str(tmp_path / "cache")
         tier = DirTier(1 << 20, root=root)

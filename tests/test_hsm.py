@@ -1,0 +1,461 @@
+"""User-space HSM over the cache tiers (PR tentpole).
+
+Covers: size parsing, the per-tier cost model (seeding + online
+refinement), workload-class admission (entry level, protection, scan
+resistance), demote-not-evict pressure handling, heat-driven promotion
+through `mover_tick`, recovered-heat seeding from the journal's
+tier-generation field, the ``hsm://`` composite store URI, and
+`PrefetchFS` adoption of the assembled hierarchy (FSStats.hsm).
+"""
+
+from __future__ import annotations
+
+import urllib.parse
+
+import pytest
+
+from repro.io import IOPolicy, PrefetchFS, clear_store_cache, open_store
+from repro.store import (
+    AdmissionPolicy,
+    DirTier,
+    HSMIndex,
+    HSMStore,
+    LinkModel,
+    MemTier,
+    TierCostModel,
+    parse_size,
+)
+from repro.store.hsm import DEFAULT_ADMISSION
+
+
+@pytest.fixture(autouse=True)
+def _fresh_store_cache():
+    clear_store_cache()
+    yield
+    clear_store_cache()
+
+
+def payload(n: int, seed: int = 0) -> bytes:
+    return bytes((i * 31 + seed * 7) % 256 for i in range(n))
+
+
+def fast_slow_tiers(mem_cap: int = 2048, disk_cap: int = 1 << 20):
+    """Two MemTiers standing in for mem + disk, with a real cost gap so
+    promotion/demotion decisions are deterministic."""
+    fast = MemTier(mem_cap, read_link=LinkModel(latency_s=1e-6, name="fast.r"),
+                   name="fast")
+    slow = MemTier(disk_cap, read_link=LinkModel(latency_s=1e-3, name="slow.r"),
+                   name="slow")
+    return fast, slow
+
+
+def install(idx: HSMIndex, bid: str, data: bytes,
+            io_class: str = "default") -> None:
+    """Drive the engine protocol: acquire-leader, place, publish, unpin."""
+    kind, flight = idx.acquire(bid, io_class)
+    assert kind == "leader", (bid, kind)
+    tier = idx.reserve_space(len(data), io_class)
+    assert tier is not None, f"no tier could place {bid}"
+    tier.write(bid, data)
+    tier.commit(len(data))
+    idx.publish(flight, tier, len(data))
+    idx.unpin(bid)
+
+
+def touch(idx: HSMIndex, bid: str, n: int = 1,
+          io_class: str = "default") -> None:
+    for _ in range(n):
+        kind, _tier = idx.acquire(bid, io_class)
+        assert kind == "hit", (bid, kind)
+        idx.unpin(bid)
+
+
+# --------------------------------------------------------------------------- #
+# sizes
+# --------------------------------------------------------------------------- #
+class TestParseSize:
+    @pytest.mark.parametrize("text,expect", [
+        ("4096", 4096),
+        ("64KB", 64 << 10),
+        ("64KiB", 64 << 10),
+        ("1.5MB", 3 << 19),
+        ("2G", 2 << 30),
+        ("1GiB", 1 << 30),
+        ("7B", 7),
+        (123, 123),
+    ])
+    def test_values(self, text, expect):
+        assert parse_size(text) == expect
+
+    @pytest.mark.parametrize("bad", ["", "MB", "12XB", "1 2", "-4KB"])
+    def test_rejects(self, bad):
+        with pytest.raises(ValueError, match="not a size"):
+            parse_size(bad)
+
+
+# --------------------------------------------------------------------------- #
+# cost model
+# --------------------------------------------------------------------------- #
+class TestTierCostModel:
+    def test_seeded_from_tier_link(self):
+        tier = MemTier(1 << 20, read_link=LinkModel(
+            latency_s=2e-3, bandwidth_Bps=100e6, name="t.r"))
+        cm = TierCostModel.from_tier(tier)
+        assert cm.latency_s == pytest.approx(2e-3)
+        assert cm.cost(100 << 20) == pytest.approx(2e-3 + (100 << 20) / 100e6)
+
+    def test_cost_ordering_drives_placement(self):
+        fast, slow = fast_slow_tiers()
+        idx = HSMIndex([fast, slow], mover_interval_s=None)
+        assert idx.costs[0].cost(1024) < idx.costs[1].cost(1024)
+        install(idx, "b", payload(512))
+        assert idx.level_of("b") == 0     # cheapest admissible tier wins
+        idx.close()
+
+    def test_observe_refines_toward_telemetry(self):
+        tier = MemTier(1 << 20, read_link=LinkModel(latency_s=0.0, name="t.r"))
+        cm = TierCostModel(latency_s=5e-3, bandwidth_Bps=float("inf"))
+        cm.observe(tier)
+        assert cm.refined == 0            # no traffic yet: estimates hold
+        tier.reserve(256)
+        tier.write("b", payload(256))
+        tier.commit(256)
+        tier.read("b")                    # real request through the link
+        before = cm.latency_s
+        cm.observe(tier)
+        assert cm.refined == 1
+        # EWMA pulls toward the observed (~0) latency.
+        assert cm.latency_s < before
+
+    def test_hsm_snapshot_reports_refinement(self):
+        fast, slow = fast_slow_tiers()
+        idx = HSMIndex([fast, slow], mover_interval_s=None)
+        install(idx, "b", payload(128))
+        fast.read("b")            # real request through the tier link
+        idx.mover_tick()
+        snap = idx.hsm_snapshot()
+        assert snap["costs"]["fast"]["refined"] >= 1
+        idx.close()
+
+
+# --------------------------------------------------------------------------- #
+# admission: entry level, protection, scan resistance
+# --------------------------------------------------------------------------- #
+class TestAdmission:
+    def test_class_entry_levels(self):
+        fast, slow = fast_slow_tiers()
+        idx = HSMIndex([fast, slow], mover_interval_s=None)
+        install(idx, "s", payload(256), io_class="serve")
+        install(idx, "c", payload(256), io_class="ckpt")
+        install(idx, "l", payload(256), io_class="loader")
+        assert idx.level_of("s") == 0
+        assert idx.level_of("c") == 0
+        assert idx.level_of("l") == 1     # bulk scans enter at disk level
+        idx.close()
+
+    def test_entry_level_clamped_to_hierarchy(self):
+        only = MemTier(1 << 20, name="only")
+        idx = HSMIndex([only], mover_interval_s=None)
+        install(idx, "l", payload(128), io_class="loader")
+        assert idx.level_of("l") == 0     # single tier: nothing below
+        idx.close()
+
+    def test_unknown_class_uses_default(self):
+        fast, slow = fast_slow_tiers()
+        idx = HSMIndex([fast, slow], mover_interval_s=None)
+        assert idx._admission("mystery") == DEFAULT_ADMISSION["default"]
+        idx.close()
+
+    def test_serve_blocks_survive_unprotected_pressure(self):
+        """A full top tier of protected serve blocks: ckpt pressure must
+        not displace them — the newcomer overflows to the next level."""
+        fast, slow = fast_slow_tiers(mem_cap=2048)
+        idx = HSMIndex([fast, slow], mover_interval_s=None)
+        install(idx, "s1", payload(1024), io_class="serve")
+        install(idx, "s2", payload(1024), io_class="serve")
+        install(idx, "k1", payload(1024), io_class="ckpt")
+        assert idx.level_of("s1") == 0 and idx.level_of("s2") == 0
+        assert idx.level_of("k1") == 1    # spilled, did not displace
+        assert idx.hsm_snapshot()["demotions"] == 0
+        idx.close()
+
+    def test_protected_class_can_displace_protected(self):
+        fast, slow = fast_slow_tiers(mem_cap=2048)
+        idx = HSMIndex([fast, slow], mover_interval_s=None)
+        install(idx, "s1", payload(1024), io_class="serve")
+        install(idx, "s2", payload(1024), io_class="serve")
+        install(idx, "s3", payload(1024), io_class="serve")
+        assert idx.level_of("s3") == 0            # newest serve block fits
+        assert idx.level_of("s1") == 1            # oldest demoted, not lost
+        assert idx.hsm_snapshot()["demotions"] == 1
+        assert slow.read("s1") == payload(1024)
+        idx.close()
+
+    def test_scan_resistance_recycles_loader_footprint_first(self):
+        """Loader blocks queue at the FRONT of the eviction order: a sweep
+        bigger than the tier recycles its own blocks and cannot flush the
+        default-class hot set behind it."""
+        only = MemTier(4096, name="only")
+        idx = HSMIndex([only], mover_interval_s=None)
+        install(idx, "keep", payload(1024))               # default class
+        for i in range(8):                                # 8KB of scan
+            install(idx, f"l{i}", payload(1024), io_class="loader")
+        assert idx.level_of("keep") == 0                  # hot set intact
+        assert only.contains("keep")
+        resident_loader = [f"l{i}" for i in range(8)
+                           if idx.level_of(f"l{i}") is not None]
+        assert len(resident_loader) == 3                  # 4KB - keep
+        idx.close()
+
+    def test_custom_admission_overrides_default(self):
+        fast, slow = fast_slow_tiers()
+        idx = HSMIndex(
+            [fast, slow],
+            admission={"loader": AdmissionPolicy(entry_level=0)},
+            mover_interval_s=None,
+        )
+        install(idx, "l", payload(128), io_class="loader")
+        assert idx.level_of("l") == 0
+        idx.close()
+
+
+# --------------------------------------------------------------------------- #
+# pressure: demote-not-evict
+# --------------------------------------------------------------------------- #
+class TestDemotion:
+    def test_pressure_on_top_tier_demotes_with_data_intact(self):
+        fast, slow = fast_slow_tiers(mem_cap=2048)
+        idx = HSMIndex([fast, slow], mover_interval_s=None)
+        install(idx, "a", payload(1024, seed=1))
+        install(idx, "b", payload(1024, seed=2))
+        install(idx, "c", payload(1024, seed=3))          # displaces "a"
+        snap = idx.hsm_snapshot()
+        assert snap["demotions"] == 1
+        assert snap["evictions"] == 0                     # moved, not lost
+        assert idx.level_of("a") == 1
+        assert slow.read("a") == payload(1024, seed=1)
+        # And the demoted block is still a HIT, served from below.
+        kind, tier = idx.acquire("a")
+        assert kind == "hit" and tier is slow
+        idx.unpin("a")
+        idx.close()
+
+    def test_bottom_tier_pressure_truly_evicts(self):
+        only = MemTier(2048, name="only")
+        idx = HSMIndex([only], mover_interval_s=None)
+        install(idx, "a", payload(1024))
+        install(idx, "b", payload(1024))
+        install(idx, "c", payload(1024))
+        snap = idx.hsm_snapshot()
+        assert snap["evictions"] == 1
+        assert snap["demotions"] == 0
+        assert idx.level_of("a") is None
+        assert not only.contains("a")
+        idx.close()
+
+    def test_cascading_demotion_spills_through_middle_tier(self):
+        mid_cap = 2048
+        t0 = MemTier(2048, read_link=LinkModel(latency_s=1e-6), name="t0")
+        t1 = MemTier(mid_cap, read_link=LinkModel(latency_s=1e-4), name="t1")
+        t2 = MemTier(1 << 20, read_link=LinkModel(latency_s=1e-3), name="t2")
+        idx = HSMIndex([t0, t1, t2], mover_interval_s=None)
+        for i in range(6):        # 6KB through a 2KB+2KB+1MB hierarchy
+            install(idx, f"b{i}", payload(1024, seed=i))
+        snap = idx.hsm_snapshot()
+        assert snap["evictions"] == 0                 # nothing deleted
+        assert snap["demotions"] >= 2                 # spilled downward
+        for i in range(6):                            # every block resident
+            lv = idx.level_of(f"b{i}")
+            assert lv is not None
+            assert idx.tiers[lv].read(f"b{i}") == payload(1024, seed=i)
+        idx.close()
+
+    def test_pinned_blocks_never_move(self):
+        fast, slow = fast_slow_tiers(mem_cap=2048)
+        idx = HSMIndex([fast, slow], mover_interval_s=None)
+        kind, flight = idx.acquire("pinned")
+        tier = idx.reserve_space(1024)
+        tier.write("pinned", payload(1024))
+        tier.commit(1024)
+        idx.publish(flight, tier, 1024)               # still pinned
+        install(idx, "x", payload(1024))
+        install(idx, "y", payload(1024))              # pressure
+        assert idx.level_of("pinned") == 0            # pin held it in place
+        idx.unpin("pinned")
+        idx.close()
+
+
+# --------------------------------------------------------------------------- #
+# the mover: promotion + watermark demotion
+# --------------------------------------------------------------------------- #
+class TestMover:
+    def test_hot_block_promoted_back_up(self):
+        fast, slow = fast_slow_tiers(mem_cap=2048)
+        idx = HSMIndex([fast, slow], mover_interval_s=None)
+        install(idx, "a", payload(1024))
+        install(idx, "b", payload(1024))
+        install(idx, "c", payload(1024))              # "a" demoted to slow
+        assert idx.level_of("a") == 1
+        touch(idx, "a", n=3)                          # re-heat it
+        assert idx.heat_of("a") >= idx.promote_threshold
+        idx.mover_tick()
+        assert idx.level_of("a") == 0                 # promoted
+        assert idx.hsm_snapshot()["promotions"] == 1
+        assert fast.read("a") == payload(1024)
+        idx.close()
+
+    def test_cold_block_not_promoted(self):
+        fast, slow = fast_slow_tiers(mem_cap=2048)
+        idx = HSMIndex([fast, slow], mover_interval_s=None)
+        install(idx, "a", payload(1024))
+        install(idx, "b", payload(1024))
+        install(idx, "c", payload(1024))
+        assert idx.level_of("a") == 1
+        idx.mover_tick()                              # heat ~1 < threshold
+        assert idx.level_of("a") == 1
+        assert idx.hsm_snapshot()["promotions"] == 0
+        idx.close()
+
+    def test_promotion_never_lifts_loader_above_its_ceiling(self):
+        fast, slow = fast_slow_tiers()
+        idx = HSMIndex([fast, slow], mover_interval_s=None)
+        install(idx, "l", payload(512), io_class="loader")
+        touch(idx, "l", n=10, io_class="loader")      # very hot
+        idx.mover_tick()
+        assert idx.level_of("l") == 1                 # still at disk level
+        idx.close()
+
+    def test_watermark_demotion_drains_idle_top_tier(self):
+        fast, slow = fast_slow_tiers(mem_cap=4096)
+        idx = HSMIndex([fast, slow], demote_watermark=0.5,
+                       mover_interval_s=None)
+        for i in range(4):
+            install(idx, f"b{i}", payload(1024, seed=i))
+        assert fast.used == 4096                      # over the 50% mark
+        idx.mover_tick()
+        assert fast.used <= 2048                      # drained to watermark
+        for i in range(4):                            # nothing lost
+            assert idx.level_of(f"b{i}") is not None
+        assert idx.hsm_snapshot()["evictions"] == 0
+        idx.close()
+
+    def test_background_mover_thread_runs_and_stops(self):
+        fast, slow = fast_slow_tiers()
+        idx = HSMIndex([fast, slow], mover_interval_s=0.01)
+        assert idx._mover is not None and idx._mover.is_alive()
+        idx.close()
+        assert idx._mover is None
+
+    def test_recovered_heat_restores_precrash_placement(self, tmp_path):
+        """A DirTier journal carries the tier-generation (``lvl``) field:
+        blocks that lived HOTTER before a restart (here: the disk root
+        previously ran as level 0) are seeded promotable heat, and the
+        first mover pass lifts them back up."""
+        root = str(tmp_path / "cache")
+        solo = DirTier(1 << 20, root=root)            # level 0 by default
+        solo.write("w", payload(512))
+        solo.close()
+
+        fast = MemTier(1 << 20, read_link=LinkModel(latency_s=1e-6),
+                       name="fast")
+        disk = DirTier(1 << 20, root=root,
+                       read_link=LinkModel(latency_s=1e-3), name="disk")
+        idx = HSMIndex([fast, disk], mover_interval_s=None)
+        assert idx.recovered == 1
+        assert idx.level_of("w") == 1                 # recovered into disk
+        assert idx.heat_of("w") >= idx.promote_threshold   # seeded hot
+        idx.mover_tick()
+        assert idx.level_of("w") == 0                 # placement restored
+        assert fast.read("w") == payload(512)
+        idx.close()
+        disk.close()
+
+    def test_keep_cached_cannot_be_disabled(self):
+        fast, slow = fast_slow_tiers()
+        idx = HSMIndex([fast, slow], mover_interval_s=None)
+        idx.set_keep_cached(False)                    # no-op by design
+        install(idx, "b", payload(256))
+        assert idx.level_of("b") == 0                 # retained
+        idx.close()
+
+
+# --------------------------------------------------------------------------- #
+# hsm:// composite store + PrefetchFS adoption
+# --------------------------------------------------------------------------- #
+class TestHSMStoreURI:
+    def _uri(self, tmp_path, name: str, **extra) -> str:
+        backing = urllib.parse.quote(f"mem://{name}", safe="")
+        params = {"mem": "64KB", "disk": f"{tmp_path}/cache:1MB",
+                  "backing": backing, "mover_ms": "0", **extra}
+        return "hsm://?" + "&".join(f"{k}={v}" for k, v in params.items())
+
+    def test_uri_assembles_hierarchy(self, tmp_path):
+        store = open_store(self._uri(tmp_path, "u1"))
+        assert isinstance(store, HSMStore)
+        assert [t.name for t in store.tiers] == ["hsm.mem", "hsm.disk"]
+        assert [t.level for t in store.tiers] == [0, 1]
+        assert store.tiers[0].capacity == 64 << 10
+        assert isinstance(store.index, HSMIndex)
+        assert store.index._mover is None              # mover_ms=0
+        assert open_store(self._uri(tmp_path, "u1")) is store  # cached
+        store.close()
+
+    def test_uri_validation(self, tmp_path):
+        with pytest.raises(ValueError, match="backing"):
+            open_store("hsm://?mem=64KB")
+        with pytest.raises(ValueError, match="at least one tier"):
+            open_store("hsm://?backing=mem%3A%2F%2Fx")
+        with pytest.raises(ValueError, match="path:size"):
+            open_store("hsm://?disk=1GB&backing=mem%3A%2F%2Fx")
+        with pytest.raises(ValueError, match="unknown store URI params"):
+            open_store("hsm://?mem=1MB&backing=mem%3A%2F%2Fx&bogus=1")
+
+    def test_prefetchfs_adopts_hierarchy_end_to_end(self, tmp_path):
+        backing = open_store("mem://u2")
+        data = payload(256 << 10)
+        backing.put("obj/a", data)
+        store = open_store(self._uri(tmp_path, "u2"))
+
+        fs = PrefetchFS(store, policy=IOPolicy(
+            engine="sequential", blocksize=32 << 10, io_class="serve"))
+        assert fs.store is store.inner                # unwrapped for reads
+        with fs.open("obj/a") as f:
+            assert f.read() == data
+        snap = fs.stats().snapshot()
+        assert snap["hsm"], "FSStats.hsm not populated"
+        assert snap["hsm"]["resident_per_tier"]       # blocks placed
+        store.close()
+
+    def test_serve_hot_set_survives_loader_sweep_through_fs(self, tmp_path):
+        """The acceptance scenario end-to-end: a serve-class restore pins
+        its working set in mem; a loader-class epoch sweep lands at the
+        disk level and cannot flush it."""
+        backing = open_store("mem://u3")
+        hot = payload(48 << 10, seed=1)               # fits in 64KB mem
+        backing.put("w/hot", hot)
+        sweep = {f"d/{i}": payload(64 << 10, seed=i) for i in range(8)}
+        for k, v in sweep.items():
+            backing.put(k, v)
+        store = open_store(self._uri(tmp_path, "u3"))
+
+        serve_fs = PrefetchFS(store, policy=IOPolicy(
+            engine="sequential", blocksize=16 << 10, io_class="serve"))
+        with serve_fs.open("w/hot") as f:
+            assert f.read() == hot
+        idx = store.index
+        hot_blocks = [bid for bid in list(idx._entries) if "w/hot" in bid]
+        assert hot_blocks and all(idx.level_of(b) == 0 for b in hot_blocks)
+
+        loader_fs = PrefetchFS(store, policy=IOPolicy(
+            engine="sequential", blocksize=16 << 10, io_class="loader"))
+        for k, v in sweep.items():
+            with loader_fs.open(k) as f:
+                assert f.read() == v
+        # 512KB swept through; the protected serve set never moved.
+        assert all(idx.level_of(b) == 0 for b in hot_blocks)
+        # And a re-read of the hot set is pure top-tier hits.
+        with serve_fs.open("w/hot") as f:
+            assert f.read() == hot
+        snap = idx.hsm_snapshot()
+        assert snap["class_hits"].get("serve:hsm.mem", 0) >= len(hot_blocks)
+        store.close()

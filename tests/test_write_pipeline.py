@@ -81,6 +81,38 @@ class TestStoreRegistry:
         s = MemStore()
         assert open_store(s) is s
 
+    def test_param_order_shares_one_instance(self):
+        """canonical() sorts params: two spellings of the same bucket must
+        map to ONE cached instance (one LinkModel, one state)."""
+        a = open_store("sims3://b?latency_ms=40&bw_mbps=200")
+        b = open_store("sims3://b?bw_mbps=200&latency_ms=40")
+        assert a is b
+
+    def test_percent_encoded_params_do_not_collide(self):
+        """Regression: parse_qsl decodes escapes, so a canonical form that
+        re-joined raw values collapsed ``?a=1&b=2`` with ``?a=1%26b%3D2``
+        (ONE param whose value is "1&b=2") — two different stores shared
+        one cached instance."""
+        u1 = parse_store_uri("x://b?a=1&b=2")
+        u2 = parse_store_uri("x://b?a=1%26b%3D2")
+        assert u1.params != u2.params
+        assert u1.canonical() != u2.canonical()
+        # And through the cache: distinct params -> distinct instances.
+        made = []
+
+        @register_store("canon-test")
+        def _factory(uri):
+            made.append(dict(uri.params))
+            return MemStore()
+
+        try:
+            a = open_store("canon-test://b?a=1&b=2")
+            b = open_store("canon-test://b?a=1%26b%3D2")
+            assert a is not b
+            assert made == [{"a": "1", "b": "2"}, {"a": "1&b=2"}]
+        finally:
+            io_stores._REGISTRY.pop("canon-test")
+
     def test_unknown_scheme_and_params_raise(self):
         with pytest.raises(ValueError, match="unknown store scheme"):
             open_store("bogus://x")
