@@ -1,0 +1,340 @@
+"""Distributed-prefetch A/B: store-GET amplification and aggregate
+restore bandwidth versus host count over an in-process `SimCluster`.
+
+Three experiments against the scaled Table-I WAN link (the contended
+resource — all simulated hosts share ONE backing `LinkModel`, so N
+hosts that each fetch everything divide one link by N):
+
+  * **amplification** — N hosts each stream the WHOLE dataset. With the
+    peer layer, each block's home host performs the one WAN GET and
+    siblings pull over the LAN: backing GETs ~= 1x the unique blocks
+    (asserted <= 1.2x). The control arm (N independent single-member
+    groups) pays ~Nx.
+  * **sharded restore** — every host of an n-host mesh restores the full
+    checkpoint with ``restore_checkpoint(shard=(h, n))``: each host
+    warms only its rendezvous-owned slice from the WAN and fills the
+    rest from siblings. Aggregate restore bandwidth (n x state bytes /
+    wall) must scale >= 2x from 1 -> 4 hosts (asserted).
+  * **kill one peer** — a host dies mid-run; survivors degrade its
+    blocks to direct GETs with ZERO read errors (asserted).
+
+Emits ``name,us_per_call,derived`` CSV rows and writes
+``BENCH_peer.json``.
+
+  PYTHONPATH=src python -m benchmarks.bench_peer [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import S3_BW, S3_LATENCY, emit
+from repro.ckpt.manager import restore_checkpoint, save_checkpoint
+from repro.io import IOPolicy
+from repro.peer.sim import SimCluster
+from repro.store import LinkModel, MemStore, SimS3Store
+
+
+def payload(n: int, seed: int = 0) -> bytes:
+    return bytes((i * 31 + seed * 7) % 256 for i in range(n))
+
+
+def make_backing(objects: dict[str, bytes]) -> SimS3Store:
+    store = SimS3Store(
+        link=LinkModel(latency_s=S3_LATENCY, bandwidth_Bps=S3_BW,
+                       name="bench-peer-wan"))
+    for k, v in objects.items():
+        store.backing.put(k, v)
+    return store
+
+
+def _stream_all(cluster: SimCluster, hosts, blocksize: int,
+                want: bytes) -> float:
+    """Every listed host reads the full dataset; returns wall seconds
+    (first start to last finish). Raises on any error or byte mismatch."""
+    errors: list = []
+    start = threading.Barrier(len(list(hosts)) + 1)
+
+    def run(h):
+        try:
+            host = cluster.host(h)
+            fs = host.open_fs(IOPolicy(
+                engine="rolling", blocksize=blocksize, depth=4,
+                keep_cached=True, eviction_interval_s=0.05))
+            files = sorted(host.store.list_objects(), key=lambda m: m.key)
+            start.wait(timeout=60)
+            f = fs.open_many(files)
+            try:
+                got = f.read()
+            finally:
+                f.close()
+            assert got == want, f"host {h} bytes diverged"
+        except BaseException as e:  # noqa: BLE001
+            errors.append((h, e))
+
+    threads = [threading.Thread(target=run, args=(h,)) for h in hosts]
+    for t in threads:
+        t.start()
+    start.wait(timeout=60)
+    t0 = time.perf_counter()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    assert not errors, errors
+    return wall
+
+
+def bench_amplification(n_hosts: int, n_files: int, file_bytes: int,
+                        blocksize: int) -> dict:
+    objects = {f"shard{i:03d}": payload(file_bytes, seed=i)
+               for i in range(n_files)}
+    want = b"".join(objects[k] for k in sorted(objects))
+    n_blocks = sum(-(-len(v) // blocksize) for v in objects.values())
+
+    # Peer arm: one group, N hosts, every host reads everything.
+    cluster = SimCluster(n_hosts, make_backing(objects))
+    try:
+        peer_wall = _stream_all(cluster, range(n_hosts), blocksize, want)
+        peer_fetches = cluster.backing_fetches
+        peer_hits = sum(cluster.host(h).store.peer_snapshot()["peer_hits"]
+                        for h in range(n_hosts))
+    finally:
+        cluster.close()
+
+    # Control arm: N single-member groups over ONE shared WAN link —
+    # every host fetches everything itself.
+    backing = make_backing(objects)
+    solos = [SimCluster(1, backing) for _ in range(n_hosts)]
+    try:
+        errors: list = []
+        start = threading.Barrier(n_hosts + 1)
+
+        def run(c):
+            try:
+                start.wait(timeout=60)
+                _stream_all(c, [0], blocksize, want)
+            except BaseException as e:  # noqa: BLE001
+                errors.append(e)
+
+        threads = [threading.Thread(target=run, args=(c,)) for c in solos]
+        for t in threads:
+            t.start()
+        start.wait(timeout=60)
+        t0 = time.perf_counter()
+        for t in threads:
+            t.join()
+        solo_wall = time.perf_counter() - t0
+        assert not errors, errors
+        solo_fetches = sum(c.backing_fetches for c in solos)
+    finally:
+        for c in solos:
+            c.close()
+
+    peer_amp = peer_fetches / n_blocks
+    solo_amp = solo_fetches / n_blocks
+    # The headline acceptance: ~1x with peers, ~Nx without.
+    assert peer_amp <= 1.2, (
+        f"peer-routed amplification {peer_amp:.2f}x exceeds 1.2x "
+        f"({peer_fetches} GETs for {n_blocks} blocks, {n_hosts} hosts)"
+    )
+    assert solo_amp >= 0.9 * n_hosts, (
+        f"control arm amplification {solo_amp:.2f}x is not ~{n_hosts}x — "
+        f"the A/B is not measuring contention"
+    )
+    emit("peer_amplification", peer_wall * 1e6,
+         f"gets={peer_fetches};blocks={n_blocks};amp={peer_amp:.2f}x;"
+         f"hosts={n_hosts};peer_hits={peer_hits}")
+    emit("solo_amplification", solo_wall * 1e6,
+         f"gets={solo_fetches};blocks={n_blocks};amp={solo_amp:.2f}x;"
+         f"hosts={n_hosts}")
+    return dict(
+        n_hosts=n_hosts, n_blocks=n_blocks,
+        peer=dict(backing_gets=peer_fetches, amplification=peer_amp,
+                  wall_s=peer_wall, peer_hits=peer_hits),
+        solo=dict(backing_gets=solo_fetches, amplification=solo_amp,
+                  wall_s=solo_wall),
+    )
+
+
+def _make_checkpoint(leaf_kb: int, n_leaves: int):
+    rng = np.random.default_rng(0)
+    state = {f"layer{i}": rng.standard_normal(
+        (leaf_kb * 256,)).astype(np.float32) for i in range(n_leaves)}
+    staging = MemStore()
+    save_checkpoint(staging, "ckpt", 1, state,
+                    policy=IOPolicy(blocksize=64 << 10))
+    objects = {m.key: staging.get(m.key) for m in staging.list_objects()}
+    total = sum(len(v) for k, v in objects.items() if k.endswith(".raw"))
+    return state, objects, total
+
+
+def _restore_all(cluster: SimCluster, n_hosts: int, state,
+                 blocksize: int) -> float:
+    """Every host restores the full checkpoint, sharded; returns wall
+    seconds from common start to last finish."""
+    errors: list = []
+    start = threading.Barrier(n_hosts + 1)
+    pol = IOPolicy(engine="rolling", blocksize=blocksize, depth=4,
+                   eviction_interval_s=0.05)
+
+    def run(h):
+        try:
+            host = cluster.host(h)
+            start.wait(timeout=120)
+            restored, manifest = restore_checkpoint(
+                host.store, "ckpt", state, policy=pol, tiers=host.tiers,
+                shard=(h, n_hosts) if n_hosts > 1 else None)
+            assert manifest["step"] == 1
+            for k in state:
+                np.testing.assert_array_equal(np.asarray(restored[k]),
+                                              state[k])
+        except BaseException as e:  # noqa: BLE001
+            errors.append((h, e))
+
+    threads = [threading.Thread(target=run, args=(h,))
+               for h in range(n_hosts)]
+    for t in threads:
+        t.start()
+    start.wait(timeout=120)
+    t0 = time.perf_counter()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    assert not errors, errors
+    return wall
+
+
+def bench_sharded_restore(hosts_sweep, leaf_kb: int, n_leaves: int,
+                          blocksize: int) -> dict:
+    state, objects, total_bytes = _make_checkpoint(leaf_kb, n_leaves)
+    points = {}
+    for n in hosts_sweep:
+        cluster = SimCluster(n, make_backing(objects))
+        try:
+            wall = _restore_all(cluster, n, state, blocksize)
+            gets = cluster.backing_fetches
+        finally:
+            cluster.close()
+        agg_bw = n * total_bytes / wall
+        points[n] = dict(wall_s=wall, aggregate_Bps=agg_bw,
+                         backing_gets=gets)
+        emit(f"sharded_restore_{n}hosts", wall * 1e6,
+             f"agg_bw_MBps={agg_bw / 1e6:.1f};gets={gets};"
+             f"state_MB={total_bytes / 1e6:.1f}")
+    lo, hi = min(hosts_sweep), max(hosts_sweep)
+    scaling = points[hi]["aggregate_Bps"] / points[lo]["aggregate_Bps"]
+    assert scaling >= 2.0, (
+        f"aggregate restore bandwidth scaled {scaling:.2f}x from {lo} to "
+        f"{hi} hosts (needs >= 2x): every host re-reading the WAN?"
+    )
+    emit("sharded_restore_scaling", 0.0,
+         f"scaling={scaling:.2f}x;from={lo};to={hi}")
+    return dict(state_bytes=total_bytes, points=points, scaling=scaling)
+
+
+def bench_kill_one(n_hosts: int, n_files: int, file_bytes: int,
+                   blocksize: int) -> dict:
+    """A host dies halfway through the epoch; every survivor must finish
+    byte-identical with zero read errors."""
+    objects = {f"shard{i:03d}": payload(file_bytes, seed=i)
+               for i in range(n_files)}
+    want = b"".join(objects[k] for k in sorted(objects))
+    half = len(want) // 2
+    cluster = SimCluster(n_hosts, make_backing(objects), miss_limit=1)
+    survivors = list(range(n_hosts - 1))
+    errors: list = []
+    reached_half = threading.Barrier(len(survivors) + 1)
+    killed = threading.Barrier(len(survivors) + 1)
+
+    def run(h):
+        try:
+            host = cluster.host(h)
+            fs = host.open_fs(IOPolicy(
+                engine="sequential", blocksize=blocksize, keep_cached=True))
+            files = sorted(host.store.list_objects(), key=lambda m: m.key)
+            f = fs.open_many(files)
+            try:
+                first = f.read(half)
+                reached_half.wait(timeout=120)
+                killed.wait(timeout=120)
+                rest = f.read()
+            finally:
+                f.close()
+            assert first + rest == want, f"survivor {h} bytes diverged"
+        except BaseException as e:  # noqa: BLE001
+            errors.append((h, e))
+
+    threads = [threading.Thread(target=run, args=(h,)) for h in survivors]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    reached_half.wait(timeout=120)
+    cluster.kill(n_hosts - 1)
+    killed.wait(timeout=120)
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    try:
+        assert not errors, f"reads errored after peer death: {errors}"
+        fallbacks = sum(
+            cluster.host(h).store.peer_snapshot()["dead_peer_fallbacks"]
+            for h in survivors)
+        deaths = sum(
+            cluster.host(h).store.peer_snapshot()["group"]["deaths"]
+            for h in survivors)
+        emit("peer_kill_one", wall * 1e6,
+             f"read_errors=0;dead_peer_fallbacks={fallbacks};"
+             f"deaths_observed={deaths};survivors={len(survivors)}")
+        return dict(wall_s=wall, read_errors=0,
+                    dead_peer_fallbacks=fallbacks, deaths_observed=deaths)
+    finally:
+        cluster.close()
+
+
+def main(quick: bool = False, out: str = "BENCH_peer.json") -> None:
+    if quick:
+        amp = bench_amplification(n_hosts=4, n_files=4, file_bytes=64 << 10,
+                                  blocksize=16 << 10)
+        restore = bench_sharded_restore((1, 4), leaf_kb=64, n_leaves=4,
+                                        blocksize=32 << 10)
+        kill = bench_kill_one(n_hosts=4, n_files=4, file_bytes=64 << 10,
+                              blocksize=16 << 10)
+    else:
+        amp = bench_amplification(n_hosts=4, n_files=8, file_bytes=256 << 10,
+                                  blocksize=32 << 10)
+        restore = bench_sharded_restore((1, 2, 4), leaf_kb=256, n_leaves=4,
+                                        blocksize=64 << 10)
+        kill = bench_kill_one(n_hosts=4, n_files=8, file_bytes=256 << 10,
+                              blocksize=32 << 10)
+    record = dict(
+        amplification=amp,
+        sharded_restore=restore,
+        kill_one=kill,
+        link=dict(latency_s=S3_LATENCY, bandwidth_Bps=S3_BW),
+        smoke=bool(quick),
+    )
+    with open(out, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"wrote {out}: amplification {amp['peer']['amplification']:.2f}x "
+          f"with {amp['n_hosts']} hosts (control "
+          f"{amp['solo']['amplification']:.2f}x), restore bandwidth scaling "
+          f"{restore['scaling']:.2f}x, kill-one read errors "
+          f"{kill['read_errors']}")
+
+
+def _cli() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI (seconds, not minutes)")
+    ap.add_argument("--out", default="BENCH_peer.json")
+    args = ap.parse_args()
+    main(quick=args.smoke, out=args.out)
+
+
+if __name__ == "__main__":
+    _cli()

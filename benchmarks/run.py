@@ -22,6 +22,7 @@ BENCHES = {
     "write_pipeline": "benchmarks.bench_write_pipeline",
     "cache_reuse": "benchmarks.bench_cache_reuse",
     "hsm": "benchmarks.bench_hsm",
+    "peer": "benchmarks.bench_peer",
     "resilience": "benchmarks.bench_resilience",
     "roofline": "benchmarks.bench_roofline",
 }

@@ -174,6 +174,33 @@ def _load_manifest(store: ObjectStore, prefix: str, step: int) -> dict:
     )
 
 
+def _warm_shard(fs: PrefetchFS, files: list[ObjectMeta],
+                policy: IOPolicy, shard: tuple[int, int]) -> None:
+    """Pre-read this host's rendezvous-owned blocks of the restore stream
+    into the (shared, keep_cached) cache. The warm reader uses the SAME
+    blocksize as the main stream, so the published block ids are exactly
+    the content-addressed ids sibling hosts' peer fetches arrive with."""
+    from repro.core.plan import BlockPlan
+
+    host_id, num_hosts = shard
+    if num_hosts <= 1:
+        return   # a 1-host "mesh" owns everything; the stream warms itself
+    mine = BlockPlan(files, policy.blocksize).shard(host_id, num_hosts)
+    if not mine:
+        return
+    warm = fs.open_many(files, engine="sequential", depth=1,
+                        keep_cached=True)
+    try:
+        for b in mine:
+            warm.seek(b.global_start)
+            warm.read(b.size)
+    finally:
+        warm.close()
+    log.info("restore shard %d/%d warmed %d blocks (%.1f MiB)",
+             host_id, num_hosts, len(mine),
+             sum(b.size for b in mine) / (1 << 20))
+
+
 def restore_checkpoint(
     store: ObjectStore | str,
     prefix: str,
@@ -187,6 +214,7 @@ def restore_checkpoint(
     cache_capacity: int | None = None,
     blocksize: int = 8 << 20,
     prefetch_depth: int = 2,
+    shard: tuple[int, int] | None = None,
 ):
     """Restore into the structure (and shardings, if any) of `template`.
     Returns (state, manifest). `template` leaves may be arrays or
@@ -205,6 +233,16 @@ def restore_checkpoint(
     checksums discard torn blocks from a mid-write crash.
     ``cache_capacity`` bounds the directory (default: 4x blocksize or
     256 MiB, whichever is larger).
+
+    ``shard=(host_id, num_hosts)`` makes the restore mesh-aware: before
+    the full stream, the host warms ONLY its rendezvous-owned sub-plan
+    (`BlockPlan.shard`) into the cache — the exact blocks its siblings'
+    peer layers will route to it — and ``keep_cached`` is forced so the
+    warmed blocks stay servable. Over a ``peer://`` store, every host
+    then restores the full state while the backing store is read ~once
+    in aggregate: each block's WAN fetch happens on its one home host,
+    everything else moves over the LAN. Without a peer store the shard
+    warm pass is still correct, just not shared.
     """
     store = open_store(store)
     warm_cache = cache_dir is not None and tiers is None
@@ -240,7 +278,9 @@ def restore_checkpoint(
             # HSM admission); an explicit io_class — e.g. "serve" from
             # `ServeEngine.from_store` — wins.
             policy = policy.replace(io_class="ckpt")
-        if warm_cache and not policy.keep_cached:
+        if (warm_cache or shard is not None) and not policy.keep_cached:
+            # Sharded restore serves warmed blocks to siblings: they must
+            # outlive their own consumption.
             policy = policy.replace(keep_cached=True)
         if step is None:
             step = latest_step(store, prefix)
@@ -260,6 +300,8 @@ def restore_checkpoint(
         ]
         out = []
         with PrefetchFS(store, policy=policy, tiers=tiers) as fs:
+            if shard is not None:
+                _warm_shard(fs, files, policy, shard)
             stream = fs.open_many(files)
             read = getattr(stream, "readview", stream.read)
             for meta, entry, tmpl in zip(files, entries, t_leaves):

@@ -12,6 +12,7 @@ import bisect
 from dataclasses import dataclass
 
 from repro.store.base import ObjectMeta
+from repro.utils.hashing import rendezvous_owner
 
 
 @dataclass(frozen=True)
@@ -93,6 +94,31 @@ class BlockPlan:
         start = self._file_global_start[file_index]
         size = self.files[file_index].size
         return start, start + size
+
+    def shard(self, host_id: int, num_hosts: int) -> list[Block]:
+        """The sub-plan host `host_id` of `num_hosts` owns — the unit one
+        host of a mesh prefetches, with the rest of the stream filled
+        from its peers.
+
+        Ownership is rendezvous-hashed on the content-addressed block id,
+        NOT striped by block index: it is the same function
+        `repro.peer.PeerGroup` routes remote reads with, so when every
+        host warms its own shard, each block is already resident on
+        exactly the host its siblings will ask for it — N hosts reading
+        one dataset pay ~1x (not Nx) backing-store GETs. Hash ownership
+        also survives membership changes the way striping cannot: a dead
+        host's blocks redistribute uniformly over the survivors while
+        every other block keeps its owner.
+        """
+        if num_hosts <= 0:
+            raise ValueError(f"num_hosts must be positive, got {num_hosts}")
+        if not 0 <= host_id < num_hosts:
+            raise ValueError(
+                f"host_id must be in [0, {num_hosts}), got {host_id}"
+            )
+        hosts = range(num_hosts)
+        return [b for b in self.blocks
+                if rendezvous_owner(b.block_id, hosts) == host_id]
 
     def run_from(self, index: int, max_width: int,
                  limit: int | None = None) -> list[Block]:

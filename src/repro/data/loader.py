@@ -53,6 +53,13 @@ class LoaderConfig:
     # tiers (LRU under capacity pressure) so the per-epoch stream reopen
     # starts warm — with a persistent DirTier, so does a restarted job.
     keep_cached: bool = False
+    # Partition the file list per host (host h streams files h::H). Set
+    # False when every host must see the FULL dataset in the same order
+    # (e.g. evaluation sweeps, or data-parallel recipes that shard at the
+    # batch level): over a `peer://` store the N-fold read does NOT
+    # become N-fold WAN traffic — each block's home host performs the one
+    # backing GET and siblings pull it over the LAN.
+    shard_files: bool = True
     policy: IOPolicy | None = None   # reader policy (preferred over mode/...)
 
     def reader_policy(self) -> IOPolicy:
@@ -108,7 +115,8 @@ class PrefetchingDataLoader:
         self.store = store
         self.cfg = cfg
         self.tiers = tiers
-        self.my_files = files[cfg.host_id :: cfg.num_hosts]
+        self.my_files = (files[cfg.host_id :: cfg.num_hosts]
+                         if cfg.shard_files else list(files))
         if not self.my_files:
             raise ValueError(f"host {cfg.host_id}: no files assigned")
         self.cursor = cursor or DataCursor()

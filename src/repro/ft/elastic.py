@@ -52,3 +52,35 @@ def snapshot_resharded(
     resharded = reshard_tree(tree, shardings)
     return save_checkpoint(store, prefix, step, resharded,
                            extra=extra, policy=policy)
+
+
+def restore_resharded(
+    store,
+    prefix: str,
+    template,
+    *,
+    host_id: int,
+    num_hosts: int,
+    step: int | None = None,
+    policy: IOPolicy | None = None,
+    **kw,
+):
+    """Mesh-sharded restore for an elastic topology change: delegates to
+    ``restore_checkpoint(shard=(host_id, num_hosts))``, so each host of
+    the NEW mesh warms only its rendezvous-owned slice of the checkpoint
+    stream and fills the rest from siblings when `store` routes through a
+    ``peer://`` group.
+
+    This is how a replacement host after a failure warms cheaply: the
+    survivors still hold (and serve) their shards from the previous
+    restore, so the newcomer's full-stream read costs ~its own shard in
+    backing-store traffic — everything else arrives over the LAN. The
+    ``shard`` ids must be the mesh's ``(process_index, process_count)``
+    (see ``repro.launch.mesh.mesh_host_shard``) so the warmed blocks line
+    up with where the peer group routes requests for them.
+    """
+    from repro.ckpt.manager import restore_checkpoint
+
+    return restore_checkpoint(store, prefix, template, step=step,
+                              policy=policy, shard=(host_id, num_hosts),
+                              **kw)

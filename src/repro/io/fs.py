@@ -79,6 +79,10 @@ class FSStats:
     # per-class hits, residency per tier, cost-model estimates); None
     # unless the fs index is an `HSMIndex`.
     hsm: dict | None = None
+    # Distributed-prefetch counters (peer hits/misses, bytes from peers,
+    # dead-peer fallbacks, plus nested group/server views); None unless
+    # the fs store is a `PeerAwareStore`.
+    peer: dict | None = None
 
     def snapshot(self) -> dict:
         return {
@@ -88,6 +92,7 @@ class FSStats:
             "tuner": dict(self.tuner) if self.tuner is not None else None,
             "cache": dict(self.cache) if self.cache is not None else None,
             "hsm": dict(self.hsm) if self.hsm is not None else None,
+            "peer": dict(self.peer) if self.peer is not None else None,
         }
 
 
@@ -115,6 +120,21 @@ class PrefetchFS:
             if index is None:
                 index = self.store.index
             self.store = self.store.inner
+        # A `peer://` composite store likewise carries a hierarchy —
+        # adopt it — but unlike HSM the store itself stays in place:
+        # ownership routing (home-host fetch vs direct GET) lives in the
+        # wrapper's get_range/get_ranges, so engines must keep reading
+        # through it. Imported lazily: repro.peer depends on
+        # repro.io.retry, so an eager import here would close the cycle
+        # for whichever package is imported first.
+        from repro.peer.store import PeerAwareStore
+        self._peer_store: PeerAwareStore | None = None
+        if isinstance(self.store, PeerAwareStore):
+            self._peer_store = self.store
+            if tiers is None and self.store.tiers:
+                tiers = self.store.tiers
+            if index is None and self.store.index is not None:
+                index = self.store.index
         self.policy = policy if policy is not None else IOPolicy()
         self._tiers: list[CacheTier] | None = (
             list(tiers) if tiers is not None else None
@@ -376,6 +396,8 @@ class PrefetchFS:
             hsm_snap = getattr(index, "hsm_snapshot", None)
             if hsm_snap is not None:
                 out.hsm = hsm_snap()
+        if self._peer_store is not None:
+            out.peer = self._peer_store.peer_snapshot()
         for bucket in per_engine.values():
             out.opens += bucket.get("opens", 0)
             for k, v in bucket.items():

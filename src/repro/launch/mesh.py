@@ -33,3 +33,12 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
 def make_debug_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
     """Small mesh over however many devices exist (CPU tests)."""
     return make_mesh_compat((data, model), ("data", "model"))
+
+
+def mesh_host_shard() -> tuple[int, int]:
+    """``(host_id, num_hosts)`` of this process in the launch mesh — the
+    pair `BlockPlan.shard` and ``restore_checkpoint(shard=...)``
+    partition prefetch work by, and the host id a `repro.peer.PeerGroup`
+    must be constructed with so rendezvous block ownership agrees with
+    plan sharding across the fleet. Single-process runs get ``(0, 1)``."""
+    return jax.process_index(), jax.process_count()

@@ -23,6 +23,7 @@ from repro.configs import get_config
 from repro.data import DataCursor, LoaderConfig, PrefetchingDataLoader, synth_token_shard
 from repro.data.loader import DeviceFeeder
 from repro.io import IOPolicy, open_store
+from repro.launch.mesh import mesh_host_shard
 from repro.models import make_model
 from repro.store import LinkModel, MemTier, SimS3Store
 from repro.train import (
@@ -115,7 +116,15 @@ def main() -> None:
     start_step, cursor = 0, DataCursor()
     resume = latest_step(ckpt_store, "ckpt")
     if resume is not None:
-        state, manifest = restore_checkpoint(ckpt_store, "ckpt", state)
+        # Multi-process mesh: each host prefetch-warms only its
+        # rendezvous-owned slice of the checkpoint stream (a peer://
+        # ckpt store serves the rest over the LAN). Single process:
+        # shard=None, the plain full restore.
+        host_id, num_hosts = mesh_host_shard()
+        state, manifest = restore_checkpoint(
+            ckpt_store, "ckpt", state,
+            shard=(host_id, num_hosts) if num_hosts > 1 else None,
+        )
         start_step = manifest["step"]
         cursor = DataCursor.from_dict(manifest["extra"].get("cursor", cursor.to_dict()))
         log.warning("resumed from step %d", start_step)

@@ -22,7 +22,7 @@ from repro.store.hsm import (
     TierCostModel,
     parse_size,
 )
-from repro.store.link import LinkModel
+from repro.store.link import LinkModel, PeerLinkModel
 from repro.store.sim_s3 import SimS3Store
 from repro.store.local import DirStore, MemStore
 from repro.store.tiers import (
@@ -52,6 +52,7 @@ __all__ = [
     "ThrottleError",
     "TransientStoreError",
     "LinkModel",
+    "PeerLinkModel",
     "SimS3Store",
     "DirStore",
     "MemStore",

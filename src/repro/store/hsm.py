@@ -165,6 +165,10 @@ DEFAULT_ADMISSION: dict[str, AdmissionPolicy] = {
     "serve": AdmissionPolicy(entry_level=0, protected=True),
     "ckpt": AdmissionPolicy(entry_level=0),
     "loader": AdmissionPolicy(entry_level=1, scan_resistant=True),
+    # Blocks a peer BlockServer fetches on a sibling host's behalf: the
+    # local replica may never read them itself, so they stay out of the
+    # top tier and recycle their own footprint under pressure.
+    "peer": AdmissionPolicy(entry_level=1, scan_resistant=True),
 }
 
 
@@ -227,6 +231,7 @@ class HSMIndex(CacheIndex):
         mover_interval_s: float | None = 0.5,
         promote_batch: int = 8,
         keep_cached: bool = True,
+        flight_ttl_s: float | None = CacheIndex.FLIGHT_TTL_S,
     ) -> None:
         # State the base constructor's priming may touch must exist first.
         self._heat: dict[str, _Heat] = {}
@@ -243,7 +248,7 @@ class HSMIndex(CacheIndex):
         self.moves_failed = 0
         self.tier_hits: dict[str, int] = {}
         self.class_hits: dict[str, int] = {}
-        super().__init__(tiers, keep_cached=True)
+        super().__init__(tiers, keep_cached=True, flight_ttl_s=flight_ttl_s)
         for level, tier in enumerate(self.tiers):
             tier.level = level
         self.costs = [TierCostModel.from_tier(t) for t in self.tiers]

@@ -179,6 +179,28 @@ class LinkModel:
             return self.latency_paid_s / self.requests
 
 
+@dataclass
+class PeerLinkModel(LinkModel):
+    """The LAN/loopback hop between sibling hosts of one job.
+
+    A distinct class (not just different numbers) so peer transfers are
+    billed to their own link — never to the backing-store WAN link — and
+    so call sites can tell the two apart (`repro.peer` charges every
+    block served from a sibling here, and the peer tier's `TierCostModel`
+    seeds from these constants). Defaults model a ~10 GbE intra-cluster
+    hop: sub-millisecond latency, two orders of magnitude above the
+    scaled S3 bandwidth; all knobs stay URI-tunable through ``peer://``
+    (``peer_latency_ms`` / ``peer_bw_mbps`` / ``peer_rps``) so
+    ``bench_peer.py`` can sweep realistic LAN-vs-WAN ratios.
+    """
+
+    latency_s: float = 2e-4
+    bandwidth_Bps: float = 1.25e9
+    name: str = "peer"
+
+
 # Paper Table I constants (t2.xlarge, us-west-2), in SI bytes/sec.
 PAPER_S3 = dict(latency_s=0.1, bandwidth_Bps=91e6)
 PAPER_MEM = dict(latency_s=1.6e-6, bandwidth_Bps=2221e6)
+# Default intra-cluster peer hop (see `PeerLinkModel`).
+PEER_LAN = dict(latency_s=2e-4, bandwidth_Bps=1.25e9)

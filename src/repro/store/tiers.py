@@ -33,6 +33,7 @@ import contextlib
 import json
 import os
 import threading
+import time
 import zlib
 from collections import OrderedDict
 from dataclasses import dataclass
@@ -596,9 +597,17 @@ class TierPlacement:
 class CacheFlight:
     """One in-progress fetch of a block, owned by exactly one leader.
     Readers that arrive while it is in flight register as waiters and are
-    pinned automatically when the leader publishes."""
+    pinned automatically when the leader publishes.
 
-    __slots__ = ("block_id", "done", "tier", "error", "waiters", "io_class")
+    ``started_t`` (monotonic creation time) drives the index's stale-flight
+    reclamation: a leader that dies without `publish`/`abort_fetch` leaves
+    the flight registered forever, and every later reader of the block
+    would wedge on it. Past ``CacheIndex.flight_ttl_s`` the index expires
+    the flight (``reclaimed``), fails its waiters, and lets the next
+    `acquire()` elect a new leader."""
+
+    __slots__ = ("block_id", "done", "tier", "error", "waiters", "io_class",
+                 "started_t", "reclaimed")
 
     def __init__(self, block_id: str, io_class: str = "default") -> None:
         self.block_id = block_id
@@ -607,6 +616,8 @@ class CacheFlight:
         self.error: Exception | None = None
         self.waiters = 0
         self.io_class = io_class
+        self.started_t = time.monotonic()
+        self.reclaimed = False
 
 
 class _IndexEntry:
@@ -645,9 +656,16 @@ class CacheIndex:
     never calls back into an engine).
     """
 
-    def __init__(self, tiers: list[CacheTier], *, keep_cached: bool = False) -> None:
+    #: Default stale-flight TTL (seconds). Generous: it only has to beat
+    #: a *dead* leader, and live leaders finish or abort far sooner (the
+    #: engines' own per-fetch retry deadlines are single-digit seconds).
+    FLIGHT_TTL_S = 30.0
+
+    def __init__(self, tiers: list[CacheTier], *, keep_cached: bool = False,
+                 flight_ttl_s: float | None = FLIGHT_TTL_S) -> None:
         self.tiers = list(tiers)
         self.keep_cached = keep_cached
+        self.flight_ttl_s = flight_ttl_s
         self._cond = threading.Condition()
         self._entries: dict[str, _IndexEntry] = {}
         self._flights: dict[str, CacheFlight] = {}
@@ -662,6 +680,7 @@ class CacheIndex:
         self.joins = 0           # acquires that joined another reader's fetch
         self.evictions = 0       # blocks actually deleted from a tier
         self.recovered = 0       # blocks primed from persistent tiers
+        self.reclaims = 0        # stale flights expired (leader presumed dead)
         for tier in self.tiers:
             for block_id, size in tier.resident_blocks():
                 if block_id not in self._entries:
@@ -697,7 +716,7 @@ class CacheIndex:
                 self._note_hit(block_id, e, io_class)
                 return "hit", e.tier
             fl = self._flights.get(block_id)
-            if fl is not None:
+            if fl is not None and not self._maybe_reclaim(fl):
                 fl.waiters += 1
                 self.joins += 1
                 return "wait", fl
@@ -706,36 +725,79 @@ class CacheIndex:
             self.misses += 1
             return "leader", fl
 
+    def _maybe_reclaim(self, fl: CacheFlight) -> bool:
+        """Expire a flight whose leader has been silent past the TTL
+        (died without `publish`/`abort_fetch`). Its waiters observe a
+        ``("failed", ...)`` join and re-acquire — the next acquire elects
+        a new leader — so neither the engines nor the cross-host peer
+        path can wedge on a dead leader. Caller holds `_cond`. Returns
+        True when the flight was reclaimed (it is no longer registered)."""
+        if (self.flight_ttl_s is None or fl.done
+                or time.monotonic() - fl.started_t < self.flight_ttl_s):
+            return False
+        fl.reclaimed = True
+        fl.done = True
+        fl.error = StoreError(
+            f"fetch of {fl.block_id} reclaimed after {self.flight_ttl_s:g}s "
+            f"(leader presumed dead)"
+        )
+        if self._flights.get(fl.block_id) is fl:
+            del self._flights[fl.block_id]
+        self.reclaims += 1
+        self._cond.notify_all()
+        return True
+
     def publish(self, flight: CacheFlight, tier: CacheTier, size: int) -> None:
         """Leader: the block is written to `tier`. The entry is pinned once
         for the leader plus once per registered waiter (each waiter's
-        `join` returns an already-pinned hit)."""
+        `join` returns an already-pinned hit).
+
+        A slow-but-alive leader whose flight was already reclaimed does
+        NOT register an entry — a new leader owns the block id now, and
+        overwriting its entry would corrupt refcounts. Its bytes are in
+        the tier regardless (same content-addressed id, same bytes), so
+        the waiters observe the reclamation's "failed" join (never an
+        unpinned hit), re-acquire, and find the new leader's entry; at
+        worst the duplicate copy is reconciled by the next `verify_used()`
+        walk."""
         with self._cond:
+            if flight.reclaimed:
+                flight.done = True
+                self._cond.notify_all()
+                return
             e = _IndexEntry(tier, size, refs=1 + flight.waiters,
                             io_class=flight.io_class)
             self._entries[flight.block_id] = e
             self._on_insert(flight.block_id, e)
             flight.done = True
             flight.tier = tier
-            self._flights.pop(flight.block_id, None)
+            if self._flights.get(flight.block_id) is flight:
+                del self._flights[flight.block_id]
             self._cond.notify_all()
 
     def abort_fetch(self, flight: CacheFlight, error: Exception | None = None) -> None:
         """Leader: the fetch failed or was abandoned; waiters observe the
-        error (or a bare retry signal) and re-acquire."""
+        error (or a bare retry signal) and re-acquire. The identity check
+        on the registry pop matters after a reclamation: a zombie leader's
+        late abort must not unregister the NEW leader's flight."""
         with self._cond:
             flight.done = True
             flight.error = error
-            self._flights.pop(flight.block_id, None)
+            if self._flights.get(flight.block_id) is flight:
+                del self._flights[flight.block_id]
             self._cond.notify_all()
 
     def join(self, flight: CacheFlight, timeout: float | None = None):
         """Waiter: wait for the leader. ``("hit", tier)`` (pin already
         taken by `publish`), ``("failed", error)``, or ``("timeout",
-        None)`` — keep join()ing or `leave()`."""
+        None)`` — keep join()ing or `leave()`. A join that times out past
+        the flight TTL reclaims the stale flight itself (waiters must not
+        depend on some future `acquire()` to notice the dead leader)."""
         with self._cond:
             self._cond.wait_for(lambda: flight.done, timeout)
             if not flight.done:
+                if self._maybe_reclaim(flight):
+                    return "failed", flight.error
                 return "timeout", None
             if flight.tier is not None:
                 return "hit", flight.tier
@@ -903,6 +965,7 @@ class CacheIndex:
                 joins=self.joins,
                 evictions=self.evictions,
                 recovered=self.recovered,
+                reclaims=self.reclaims,
                 resident_blocks=len(self._entries),
                 resident_bytes=sum(e.size for e in self._entries.values()),
                 inflight=len(self._flights),

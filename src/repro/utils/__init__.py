@@ -1,4 +1,5 @@
+from repro.utils.hashing import rendezvous_owner
 from repro.utils.logging import get_logger
 from repro.utils.timing import Timer, Stopwatch
 
-__all__ = ["get_logger", "Timer", "Stopwatch"]
+__all__ = ["get_logger", "Timer", "Stopwatch", "rendezvous_owner"]

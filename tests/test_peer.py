@@ -1,0 +1,777 @@
+"""Distributed-prefetch peer layer: wire protocol, rendezvous ownership,
+BlockServer/PeerClient over real loopback sockets, cross-host
+single-flight, PeerGroup liveness, PeerTier semantics, the ``peer://``
+composite URI, stale-flight reclamation, and sharded checkpoint restore."""
+
+from __future__ import annotations
+
+import socket
+import threading
+import time
+from urllib.parse import quote
+
+import pytest
+
+from repro.core.plan import BlockPlan
+from repro.io import IOPolicy, PrefetchFS, open_store
+from repro.peer import (
+    BlockServer,
+    PeerAwareStore,
+    PeerClient,
+    PeerError,
+    PeerGroup,
+    PeerSpec,
+    PeerTier,
+    parse_block_id,
+    span_block_id,
+)
+from repro.peer.protocol import recv_msg, send_msg
+from repro.peer.sim import CountingStore, SimCluster
+from repro.store import CacheIndex, HSMIndex, MemStore, MemTier, PeerLinkModel
+from repro.store.base import ObjectMeta, StoreError
+from repro.store.tiers import BlockMeta
+from repro.utils import rendezvous_owner
+
+
+def payload(n: int, seed: int = 0) -> bytes:
+    return bytes((i * 31 + seed * 7) % 256 for i in range(n))
+
+
+def make_backing(objects: dict[str, bytes]) -> CountingStore:
+    inner = MemStore()
+    for k, v in objects.items():
+        inner.put(k, v)
+    return CountingStore(inner)
+
+
+def make_host(store, host_id: int = 0, mem: int = 64 << 20):
+    """One host's hierarchy + server (no group): tiers, index, server."""
+    tiers = [MemTier(mem)]
+    index = CacheIndex(tiers, keep_cached=True)
+    server = BlockServer(index, store, host="127.0.0.1", port=0,
+                         host_id=host_id)
+    return tiers, index, server
+
+
+# --------------------------------------------------------------------------- #
+# protocol
+# --------------------------------------------------------------------------- #
+class TestProtocol:
+    def test_frame_roundtrip(self):
+        a, b = socket.socketpair()
+        try:
+            send_msg(a, {"op": "fetch", "key": "k"}, b"\x00\x01payload")
+            header, data = recv_msg(b)
+            assert header == {"op": "fetch", "key": "k"}
+            assert data == b"\x00\x01payload"
+            send_msg(b, {"ok": True, "status": "hit"})
+            header, data = recv_msg(a)
+            assert header["status"] == "hit" and data == b""
+        finally:
+            a.close()
+            b.close()
+
+    def test_closed_socket_raises_peer_error(self):
+        a, b = socket.socketpair()
+        a.close()
+        try:
+            with pytest.raises(PeerError, match="closed"):
+                recv_msg(b)
+        finally:
+            b.close()
+
+    def test_span_block_id_matches_plan_block_id(self):
+        files = [ObjectMeta(key="dir/f@2.trk", size=10_000)]
+        plan = BlockPlan(files, blocksize=4096)
+        for blk in plan.blocks:
+            assert span_block_id(blk.key, blk.start, blk.end) == blk.block_id
+
+    def test_parse_block_id_inverse(self):
+        bid = span_block_id("weird@key@x", 123, 4567)
+        assert parse_block_id(bid) == ("weird@key@x", 123, 4567)
+        with pytest.raises(ValueError):
+            parse_block_id("no-delimiter")
+
+
+# --------------------------------------------------------------------------- #
+# rendezvous ownership + plan sharding
+# --------------------------------------------------------------------------- #
+class TestRendezvous:
+    def test_deterministic(self):
+        ids = [rendezvous_owner(f"k{i}@0-1", range(8)) for i in range(200)]
+        assert ids == [rendezvous_owner(f"k{i}@0-1", range(8))
+                       for i in range(200)]
+
+    def test_spread_is_roughly_uniform(self):
+        counts = [0] * 4
+        for i in range(400):
+            counts[rendezvous_owner(f"blk{i}", range(4))] += 1
+        assert min(counts) > 40    # no starved candidate
+
+    def test_removal_reassigns_only_the_removed(self):
+        items = [f"k{i}@{i:015d}-{i + 1:015d}" for i in range(300)]
+        before = {it: rendezvous_owner(it, range(4)) for it in items}
+        survivors = [0, 1, 3]
+        for it in items:
+            after = rendezvous_owner(it, survivors)
+            if before[it] != 2:
+                assert after == before[it]   # untouched owner kept
+            else:
+                assert after in survivors
+
+    def test_empty_candidates_raise(self):
+        with pytest.raises(ValueError):
+            rendezvous_owner("x", [])
+
+    def test_plan_shard_partitions_blocks(self):
+        files = [ObjectMeta(key=f"f{i}", size=50_000) for i in range(3)]
+        plan = BlockPlan(files, blocksize=4096)
+        shards = [plan.shard(h, 4) for h in range(4)]
+        seen = [b.block_id for s in shards for b in s]
+        assert sorted(seen) == sorted(b.block_id for b in plan.blocks)
+        assert len(set(seen)) == len(seen)
+
+    def test_plan_shard_agrees_with_group_owner(self):
+        """The block a host warms IS the block its siblings route to it."""
+        files = [ObjectMeta(key="f", size=100_000)]
+        plan = BlockPlan(files, blocksize=8192)
+        specs = [PeerSpec(i, "127.0.0.1", 1) for i in range(4)]
+        groups = [PeerGroup(i, specs) for i in range(4)]
+        try:
+            for h in range(4):
+                for blk in plan.shard(h, 4):
+                    assert groups[0].owner_of(blk.block_id) == h
+        finally:
+            for g in groups:
+                g.close()
+
+    def test_plan_shard_validation(self):
+        plan = BlockPlan([ObjectMeta(key="f", size=10)], blocksize=4)
+        with pytest.raises(ValueError):
+            plan.shard(0, 0)
+        with pytest.raises(ValueError):
+            plan.shard(4, 4)
+
+
+# --------------------------------------------------------------------------- #
+# BlockServer / PeerClient over loopback
+# --------------------------------------------------------------------------- #
+class TestServerClient:
+    def setup_method(self):
+        self.data = payload(40_000, seed=3)
+        self.store = make_backing({"obj": self.data})
+        self.tiers, self.index, self.server = make_host(self.store)
+        self.client = PeerClient(self.server.address, peer_id=0)
+
+    def teardown_method(self):
+        self.client.close()
+        self.server.close()
+
+    def test_ping(self):
+        assert self.client.ping()
+
+    def test_owner_fetch_miss_does_the_one_backing_get(self):
+        got = self.client.fetch("obj", 0, 4096, owner=True)
+        assert got == self.data[:4096]
+        assert self.store.fetches == 1
+        snap = self.server.snapshot()
+        assert snap["ownership_fetches"] == 1
+        # Now resident: the second fetch is a cache hit, no new GET.
+        assert self.client.fetch("obj", 0, 4096, owner=True) == self.data[:4096]
+        assert self.store.fetches == 1
+        assert self.server.snapshot()["hits"] == 1
+
+    def test_non_owner_probe_never_touches_the_store(self):
+        assert self.client.fetch("obj", 0, 4096, owner=False) is None
+        assert self.store.fetches == 0
+        assert self.server.snapshot()["misses"] == 1
+
+    def test_put_then_probe_serves_pushed_bytes(self):
+        blob = self.data[8192:12288]
+        assert self.client.put("obj", 8192, 12288, blob)
+        assert self.server.snapshot()["stores"] == 1
+        assert self.client.has("obj", 8192, 12288)
+        assert self.client.fetch("obj", 8192, 12288, owner=False) == blob
+        assert self.store.fetches == 0
+
+    def test_concurrent_owner_fetches_collapse_to_one_get(self):
+        """Cross-host single-flight: N siblings + racing requests on one
+        block = ONE backing GET."""
+        n = 8
+        results: list[bytes] = []
+        errors: list[BaseException] = []
+        clients = [PeerClient(self.server.address, peer_id=0)
+                   for _ in range(n)]
+        barrier = threading.Barrier(n)
+
+        def hammer(c):
+            try:
+                barrier.wait()
+                results.append(c.fetch("obj", 16384, 20480, owner=True))
+            except BaseException as e:  # noqa: BLE001
+                errors.append(e)
+
+        threads = [threading.Thread(target=hammer, args=(c,))
+                   for c in clients]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for c in clients:
+            c.close()
+        assert not errors, errors
+        assert all(r == self.data[16384:20480] for r in results)
+        assert self.store.fetches == 1
+
+    def test_dead_server_raises_store_error(self):
+        self.server.close()
+        assert not self.client.ping()
+        # Retry exhaustion wraps the PeerError in a StoreError — the type
+        # the peer store's fallback path degrades on.
+        with pytest.raises(StoreError) as ei:
+            self.client.fetch("obj", 0, 4096, owner=True)
+        assert isinstance(ei.value.__cause__, PeerError)
+
+    def test_unknown_op_is_remote_error(self):
+        with pytest.raises(StoreError) as ei:
+            self.client._rpc("peer_fetch", {"op": "bogus"})
+        assert "unknown op" in str(ei.value.__cause__)
+
+
+# --------------------------------------------------------------------------- #
+# PeerGroup membership + liveness
+# --------------------------------------------------------------------------- #
+class TestPeerGroup:
+    def test_spec_parse(self):
+        s = PeerSpec.parse("3@hostname.local:9100")
+        assert s == PeerSpec(3, "hostname.local", 9100)
+        for bad in ("nope", "1@noport", "@h:1", "1@:9"):
+            with pytest.raises(ValueError):
+                PeerSpec.parse(bad)
+
+    def test_duplicate_ids_rejected(self):
+        with pytest.raises(ValueError, match="duplicate"):
+            PeerGroup(0, [PeerSpec(1, "h", 1), PeerSpec(1, "h", 2)])
+
+    def test_owner_routing_and_death(self):
+        g = PeerGroup(0, [PeerSpec(i, "127.0.0.1", 1) for i in range(4)],
+                      miss_limit=2)
+        try:
+            assert g.alive_ids() == [0, 1, 2, 3]
+            assert g.client_for(0) is None          # self
+            assert g.client_for(99) is None         # unknown
+            assert g.client_for(2) is not None
+            before = {f"b{i}": g.owner_of(f"b{i}") for i in range(100)}
+            g.note_failure(2)
+            assert g.is_alive(2)                    # one strike
+            g.note_failure(2)
+            assert not g.is_alive(2)                # miss_limit reached
+            assert g.client_for(2) is None
+            assert g.snapshot()["deaths"] == 1
+            for bid, owner in before.items():
+                after = g.owner_of(bid)
+                assert after != 2
+                if owner != 2:
+                    assert after == owner           # only 2's blocks moved
+        finally:
+            g.close()
+
+    def test_self_never_dies(self):
+        g = PeerGroup(0, [PeerSpec(0, "", 0), PeerSpec(1, "h", 1)])
+        try:
+            g.mark_dead(0)
+            g.note_failure(0)
+            g.note_failure(0)
+            assert g.is_alive(0)
+        finally:
+            g.close()
+
+    def test_heartbeat_detects_death_and_revival(self):
+        store = make_backing({})
+        tiers, index, server = make_host(store, host_id=1)
+        host, port = server.address
+        g = PeerGroup(0, [PeerSpec(0, "", 0), PeerSpec(1, host, port)],
+                      heartbeat_interval_s=0.05, miss_limit=2)
+        try:
+            deadline = time.time() + 2.0
+            while g.snapshot()["heartbeats"] < 2 and time.time() < deadline:
+                time.sleep(0.01)
+            assert g.is_alive(1)
+            server.close()
+            deadline = time.time() + 5.0
+            while g.is_alive(1) and time.time() < deadline:
+                time.sleep(0.02)
+            assert not g.is_alive(1)
+            # The host comes back on the same address: one good ping revives.
+            tiers2, index2, server2 = None, None, None
+            try:
+                tiers2 = [MemTier(1 << 20)]
+                index2 = CacheIndex(tiers2, keep_cached=True)
+                server2 = BlockServer(index2, store, host=host, port=port,
+                                      host_id=1)
+                deadline = time.time() + 5.0
+                while not g.is_alive(1) and time.time() < deadline:
+                    time.sleep(0.02)
+                assert g.is_alive(1)
+                assert g.snapshot()["revivals"] >= 1
+            finally:
+                if server2 is not None:
+                    server2.close()
+        finally:
+            g.close()
+            server.close()
+
+
+# --------------------------------------------------------------------------- #
+# PeerTier
+# --------------------------------------------------------------------------- #
+class TestPeerTier:
+    def _two_hosts(self, objects=None):
+        """Host 1 runs a server; host 0's PeerTier pushes/reads through
+        its group. Returns (tier, group0, server1, store)."""
+        store = make_backing(objects or {})
+        tiers1, index1, server1 = make_host(store, host_id=1)
+        specs = [PeerSpec(0, "", 0), PeerSpec(1, *server1.address)]
+        group0 = PeerGroup(0, specs, miss_limit=1)
+        tier = PeerTier(group0)
+        return tier, group0, server1, store, index1
+
+    def _block_owned_by(self, owner: int, candidates=(0, 1)) -> str:
+        for i in range(1000):
+            bid = span_block_id(f"k{i}", 0, 512)
+            if rendezvous_owner(bid, candidates) == owner:
+                return bid
+        raise AssertionError("no block found")
+
+    def test_write_read_roundtrip_via_sibling(self):
+        tier, group, server, store, _ = self._two_hosts()
+        try:
+            bid = self._block_owned_by(1)
+            key, lo, hi = parse_block_id(bid)
+            blob = payload(hi - lo, seed=5)
+            tier.write(bid, blob, meta=BlockMeta(key=key, offset=lo))
+            assert tier.contains(bid)
+            assert tier.read(bid) == blob
+            assert tier.read(bid, 10, 20) == blob[10:20]
+            assert tier.remote_writes == 1 and tier.remote_reads >= 1
+            assert store.fetches == 0    # pure LAN traffic
+        finally:
+            tier.close()
+            group.close()
+            server.close()
+
+    def test_self_owned_block_has_no_peer_home(self):
+        tier, group, server, store, _ = self._two_hosts()
+        try:
+            bid = self._block_owned_by(0)
+            with pytest.raises(StoreError, match="no live home"):
+                tier.write(bid, payload(512))
+            with pytest.raises(StoreError, match="no live home"):
+                tier.read(bid)
+        finally:
+            tier.close()
+            group.close()
+            server.close()
+
+    def test_delete_forgets_locally_but_sibling_keeps_copy(self):
+        tier, group, server, store, index1 = self._two_hosts()
+        try:
+            bid = self._block_owned_by(1)
+            key, lo, hi = parse_block_id(bid)
+            tier.write(bid, payload(hi - lo), meta=BlockMeta(key=key, offset=lo))
+            assert tier.delete(bid) == hi - lo
+            assert not tier.contains(bid)
+            assert index1.contains(bid)   # the home host still serves it
+        finally:
+            tier.close()
+            group.close()
+            server.close()
+
+    def test_sibling_eviction_is_a_store_error_not_corruption(self):
+        tier, group, server, store, index1 = self._two_hosts()
+        try:
+            bid = self._block_owned_by(1)
+            key, lo, hi = parse_block_id(bid)
+            tier.write(bid, payload(hi - lo), meta=BlockMeta(key=key, offset=lo))
+            # The sibling evicts behind our back.
+            index1.invalidate(bid)
+            with pytest.raises(StoreError, match="evicted by sibling"):
+                tier.read(bid)
+            assert tier.lost_blocks == 1
+            assert not tier.contains(bid)   # local view dropped
+        finally:
+            tier.close()
+            group.close()
+            server.close()
+
+    def test_resident_blocks_never_primes_an_index(self):
+        tier, group, server, store, _ = self._two_hosts()
+        try:
+            bid = self._block_owned_by(1)
+            key, lo, hi = parse_block_id(bid)
+            tier.write(bid, payload(hi - lo), meta=BlockMeta(key=key, offset=lo))
+            assert tier.resident_blocks() == []
+            fresh = CacheIndex([tier], keep_cached=True)
+            assert fresh.resident_count() == 0
+        finally:
+            tier.close()
+            group.close()
+            server.close()
+
+
+# --------------------------------------------------------------------------- #
+# PeerAwareStore routing + peer:// URI
+# --------------------------------------------------------------------------- #
+class TestPeerStore:
+    def test_wrapping_a_peer_store_is_rejected(self):
+        g = PeerGroup(0, [])
+        try:
+            s = PeerAwareStore(MemStore(), g)
+            with pytest.raises(ValueError):
+                PeerAwareStore(s, g)
+        finally:
+            g.close()
+
+    def test_single_member_group_reads_direct(self):
+        data = payload(10_000)
+        backing = make_backing({"k": data})
+        g = PeerGroup(0, [])
+        s = PeerAwareStore(backing, g)
+        try:
+            assert s.get_range("k", 0, 4096) == data[:4096]
+            assert s.get_ranges("k", [(0, 100), (100, 300)]) == [
+                data[:100], data[100:300]]
+            snap = s.peer_snapshot()
+            assert snap["local_fetches"] == 3
+            assert snap["peer_hits"] == 0
+        finally:
+            s.close()
+            g.close()
+
+    def test_uri_requires_backing_and_self(self):
+        with pytest.raises(ValueError, match="backing"):
+            open_store("peer://?self=0", fresh=True)
+        with pytest.raises(ValueError, match="self"):
+            open_store("peer://?backing=mem%3A%2F%2Fx", fresh=True)
+        with pytest.raises(ValueError, match="unknown store URI params"):
+            open_store("peer://?self=0&backing=mem%3A%2F%2Fx&bogus=1",
+                       fresh=True)
+        with pytest.raises(ValueError, match="serving address"):
+            # serve=1 (default) but self carries no address.
+            open_store("peer://?self=0&backing=mem%3A%2F%2Fx", fresh=True)
+
+    def test_uri_end_to_end(self):
+        backing = open_store("mem://peeruri-e2e")
+        data = payload(20_000, seed=9)
+        backing.put("obj", data)
+        uri = ("peer://?self=0&peers=" + quote("0@127.0.0.1:0", safe="")
+               + "&backing=" + quote("mem://peeruri-e2e", safe="")
+               + "&mem=8MB")
+        store = open_store(uri, fresh=True)
+        try:
+            assert isinstance(store, PeerAwareStore)
+            assert store.server is not None
+            assert store.get_range("obj", 0, 4096) == data[:4096]
+            snap = store.peer_snapshot()
+            assert snap["local_fetches"] == 1   # 1-host group: all self-owned
+            assert "server" in snap and "group" in snap
+        finally:
+            store.close()
+
+    def test_uri_client_only_member(self):
+        backing = open_store("mem://peeruri-client")
+        backing.put("obj", payload(1000))
+        uri = ("peer://?self=0&serve=0&backing="
+               + quote("mem://peeruri-client", safe=""))
+        store = open_store(uri, fresh=True)
+        try:
+            assert store.server is None
+            assert store.get_range("obj", 0, 100) == payload(1000)[:100]
+        finally:
+            store.close()
+
+    def test_uri_peer_tier_builds_hsm_hierarchy(self):
+        open_store("mem://peeruri-tier")
+        uri = ("peer://?self=0&serve=0&peer_tier=1&mem=1MB&backing="
+               + quote("mem://peeruri-tier", safe=""))
+        store = open_store(uri, fresh=True)
+        try:
+            assert [t.name for t in store.tiers] == ["peer.mem", "peer"]
+            assert isinstance(store.tiers[1], PeerTier)
+            assert isinstance(store.index, HSMIndex)
+        finally:
+            store.close()
+
+    def test_uri_link_params_shape_the_lan(self):
+        open_store("mem://peeruri-link")
+        uri = ("peer://?self=0&serve=0&peer_latency_ms=1.5&peer_bw_mbps=100"
+               + "&backing=" + quote("mem://peeruri-link", safe=""))
+        store = open_store(uri, fresh=True)
+        try:
+            assert store.group.link.latency_s == pytest.approx(1.5e-3)
+            assert store.group.link.bandwidth_Bps == pytest.approx(100e6)
+        finally:
+            store.close()
+
+    def test_uri_composes_with_hsm(self):
+        backing = open_store("mem://peeruri-hsm")
+        data = payload(5000)
+        backing.put("obj", data)
+        hsm_uri = "hsm://?mem=1MB&backing=" + quote("mem://peeruri-hsm",
+                                                    safe="")
+        uri = ("peer://?self=0&peers=" + quote("0@127.0.0.1:0", safe="")
+               + "&backing=" + quote(hsm_uri, safe=""))
+        store = open_store(uri, fresh=True)
+        try:
+            # The peer layer adopted the hsm hierarchy instead of
+            # building its own.
+            assert store.tiers and store.index is not None
+            assert store.get_range("obj", 0, 1000) == data[:1000]
+        finally:
+            store.close()
+
+    def test_uri_hsm_backing_rejects_local_tier_params(self):
+        open_store("mem://peeruri-hsm2")
+        hsm_uri = "hsm://?mem=1MB&backing=" + quote("mem://peeruri-hsm2",
+                                                    safe="")
+        uri = ("peer://?self=0&serve=0&mem=2MB&backing="
+               + quote(hsm_uri, safe=""))
+        with pytest.raises(ValueError, match="adopts that hierarchy"):
+            open_store(uri, fresh=True)
+
+    def test_prefetchfs_adopts_peer_hierarchy_and_reports_stats(self):
+        data = payload(30_000, seed=2)
+        backing = make_backing({"f": data})
+        cluster_tiers = [MemTier(8 << 20)]
+        index = CacheIndex(cluster_tiers, keep_cached=True)
+        g = PeerGroup(0, [])
+        s = PeerAwareStore(backing, g, tiers=cluster_tiers, index=index)
+        fs = PrefetchFS(s, policy=IOPolicy(engine="sequential",
+                                           blocksize=4096))
+        try:
+            with fs.open_many(backing.list_objects()) as f:
+                assert f.read() == data
+            snap = fs.stats().snapshot()
+            assert snap["peer"] is not None
+            assert snap["peer"]["local_fetches"] > 0
+            # The fs adopted the peer hierarchy (reads cached in its tiers).
+            assert cluster_tiers[0].used > 0
+        finally:
+            fs.close()
+            s.close()
+            g.close()
+
+
+# --------------------------------------------------------------------------- #
+# SimCluster: the in-process multi-host harness
+# --------------------------------------------------------------------------- #
+class TestSimCluster:
+    def test_amplification_is_one_with_peers(self):
+        objects = {f"f{i}": payload(16_384, seed=i) for i in range(4)}
+        n_blocks = sum(-(-len(v) // 4096) for v in objects.values())
+        cluster = SimCluster(4, make_backing(objects).inner)
+        try:
+            want = b"".join(objects[k] for k in sorted(objects))
+            outs = {}
+            errors = []
+
+            def run(h):
+                try:
+                    fs = cluster.host(h).open_fs(IOPolicy(
+                        engine="rolling", blocksize=4096, depth=2,
+                        keep_cached=True, eviction_interval_s=0.05))
+                    files = cluster.host(h).store.list_objects()
+                    with fs.open_many(sorted(files, key=lambda m: m.key)) as f:
+                        outs[h] = f.read()
+                except BaseException as e:  # noqa: BLE001
+                    errors.append((h, e))
+
+            threads = [threading.Thread(target=run, args=(h,))
+                       for h in range(4)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            assert not errors, errors
+            assert all(outs[h] == want for h in range(4))
+            # 4 hosts read everything; the WAN saw each block ~once.
+            assert cluster.backing_fetches <= 1.2 * n_blocks
+        finally:
+            cluster.close()
+
+    def test_kill_degrades_to_direct_gets(self):
+        objects = {"f": payload(32_768, seed=4)}
+        cluster = SimCluster(2, make_backing(objects).inner, miss_limit=1)
+        try:
+            h0 = cluster.host(0)
+            cluster.kill(1)
+            fs = h0.open_fs(IOPolicy(engine="sequential", blocksize=4096,
+                                     keep_cached=True))
+            with fs.open_many(h0.store.list_objects()) as f:
+                assert f.read() == objects["f"]
+            snap = h0.store.peer_snapshot()
+            # Host 1's blocks fell back to the store with zero errors.
+            assert snap["dead_peer_fallbacks"] > 0
+            assert not h0.group.is_alive(1)
+        finally:
+            cluster.close()
+
+
+# --------------------------------------------------------------------------- #
+# Satellite: stale-flight reclamation in CacheIndex
+# --------------------------------------------------------------------------- #
+class TestFlightReclamation:
+    def test_dead_leader_times_out_and_new_leader_elected(self):
+        tiers = [MemTier(1 << 20)]
+        index = CacheIndex(tiers, flight_ttl_s=0.05)
+        kind, dead_flight = index.acquire("b@0-4")
+        assert kind == "leader"
+        # The leader "dies" (no publish/abort). Within the TTL every
+        # other reader still waits on it...
+        kind, fl = index.acquire("b@0-4")
+        assert kind == "wait" and fl is dead_flight
+        index.leave(fl)
+        time.sleep(0.06)
+        # ...past the TTL the next acquire reclaims and leads.
+        kind, new_flight = index.acquire("b@0-4")
+        assert kind == "leader" and new_flight is not dead_flight
+        assert index.snapshot()["reclaims"] == 1
+        index.abort_fetch(new_flight)
+
+    def test_waiter_join_reclaims_stale_flight(self):
+        tiers = [MemTier(1 << 20)]
+        index = CacheIndex(tiers, flight_ttl_s=0.05)
+        _, leader = index.acquire("b@0-4")
+        kind, fl = index.acquire("b@0-4")
+        assert kind == "wait"
+        time.sleep(0.06)
+        st, err = index.join(fl, timeout=0.01)
+        assert st == "failed"
+        assert "reclaimed" in str(err)
+        # The waiter re-acquires and becomes the new leader.
+        kind, _ = index.acquire("b@0-4")
+        assert kind == "leader"
+
+    def test_zombie_leader_publish_is_harmless(self):
+        """A reclaimed leader that wakes up late must not clobber the new
+        leader's world: its publish registers nothing."""
+        tiers = [MemTier(1 << 20)]
+        index = CacheIndex(tiers, flight_ttl_s=0.05)
+        _, zombie = index.acquire("b@0-4")
+        time.sleep(0.06)
+        kind, new_leader = index.acquire("b@0-4")   # reclaims the zombie
+        assert kind == "leader"
+        tiers[0].write("b@0-4", b"zzzz")
+        index.publish(zombie, tiers[0], 4)          # late zombie publish
+        assert not index.contains("b@0-4")          # nothing registered
+        # The real leader proceeds normally.
+        index.publish(new_leader, tiers[0], 4)
+        assert index.contains("b@0-4")
+        index.unpin("b@0-4")
+
+    def test_zombie_abort_does_not_unregister_new_flight(self):
+        tiers = [MemTier(1 << 20)]
+        index = CacheIndex(tiers, flight_ttl_s=0.05)
+        _, zombie = index.acquire("b@0-4")
+        time.sleep(0.06)
+        kind, new_leader = index.acquire("b@0-4")
+        assert kind == "leader"
+        index.abort_fetch(zombie)                   # late zombie abort
+        kind, fl = index.acquire("b@0-4")
+        assert kind == "wait" and fl is new_leader  # still registered
+        index.leave(fl)
+        index.abort_fetch(new_leader)
+
+    def test_ttl_none_disables_reclamation(self):
+        tiers = [MemTier(1 << 20)]
+        index = CacheIndex(tiers, flight_ttl_s=None)
+        _, leader = index.acquire("b@0-4")
+        time.sleep(0.02)
+        kind, fl = index.acquire("b@0-4")
+        assert kind == "wait"
+        index.leave(fl)
+        index.abort_fetch(leader)
+
+    def test_live_leader_unaffected_within_ttl(self):
+        tiers = [MemTier(1 << 20)]
+        index = CacheIndex(tiers, flight_ttl_s=30.0)
+        _, leader = index.acquire("b@0-4")
+        tiers[0].write("b@0-4", b"data")
+        index.publish(leader, tiers[0], 4)
+        assert index.contains("b@0-4")
+        assert index.snapshot()["reclaims"] == 0
+        index.unpin("b@0-4")
+
+
+# --------------------------------------------------------------------------- #
+# sharded checkpoint restore
+# --------------------------------------------------------------------------- #
+class TestShardedRestore:
+    def _save(self, store):
+        import numpy as np
+
+        from repro.ckpt.manager import save_checkpoint
+
+        state = {"w": np.arange(16_384, dtype=np.float32).reshape(128, 128),
+                 "b": np.ones((4097,), dtype=np.float32)}
+        save_checkpoint(store, "ckpt", 7, state,
+                        policy=IOPolicy(blocksize=4096))
+        return state
+
+    def test_sharded_restore_matches_plain(self):
+        import numpy as np
+
+        from repro.ckpt.manager import restore_checkpoint
+
+        store = MemStore()
+        state = self._save(store)
+        pol = IOPolicy(engine="sequential", blocksize=4096)
+        for h in range(2):
+            restored, manifest = restore_checkpoint(
+                store, "ckpt", state, policy=pol, shard=(h, 2))
+            assert manifest["step"] == 7
+            for k in state:
+                np.testing.assert_array_equal(np.asarray(restored[k]),
+                                              state[k])
+
+    def test_restore_resharded_delegates(self):
+        import numpy as np
+
+        from repro.ft.elastic import restore_resharded
+
+        store = MemStore()
+        state = self._save(store)
+        restored, manifest = restore_resharded(
+            store, "ckpt", state, host_id=1, num_hosts=3,
+            policy=IOPolicy(engine="sequential", blocksize=4096))
+        assert manifest["step"] == 7
+        for k in state:
+            np.testing.assert_array_equal(np.asarray(restored[k]), state[k])
+
+    def test_shard_warm_publishes_peer_addressable_blocks(self):
+        """After a sharded restore over a peer store, this host's cache
+        holds exactly content-addressed ids — the ids siblings ask for."""
+        from repro.ckpt.manager import restore_checkpoint
+
+        backing = MemStore()
+        state = self._save(backing)
+        tiers = [MemTier(64 << 20)]
+        index = CacheIndex(tiers, keep_cached=True)
+        g = PeerGroup(0, [PeerSpec(1, "127.0.0.1", 9)])  # 2-host membership
+        s = PeerAwareStore(backing, g, tiers=tiers, index=index)
+        try:
+            restore_checkpoint(s, "ckpt", state,
+                               policy=IOPolicy(engine="sequential",
+                                               blocksize=4096),
+                               tiers=tiers, shard=(0, 2))
+            files = [m for m in backing.list_objects()
+                     if m.key.endswith(".raw")]
+            assert files
+            mine = BlockPlan(sorted(files, key=lambda m: m.key),
+                             4096).shard(0, 2)
+            assert mine
+            for blk in mine:
+                assert index.contains(blk.block_id), blk.block_id
+        finally:
+            s.close()
+            g.close()

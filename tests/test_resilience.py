@@ -718,3 +718,148 @@ class TestChaosEndToEnd:
         assert f.read() == objects["a"]   # NOT silently short
         f.close()
         assert pf.stats.retries >= 1
+
+
+# --------------------------------------------------------------------------- #
+# Chaos through the peer transport
+# --------------------------------------------------------------------------- #
+class TestPeerChaos:
+    """`FaultSchedule` rules routed through the ``peer_*`` ops hit the
+    `PeerClient` transport (see `repro.peer.protocol.PEER_OPS`): peer
+    stalls, transient refusals, mid-transfer cuts, and dead heartbeats
+    must all degrade to direct store GETs — byte-identical reads, zero
+    errors surfaced to readers."""
+
+    N_HOSTS = 3
+    BLOCKSIZE = 4096
+
+    def _dataset(self):
+        return {f"p{i}": payload(16_384, seed=i) for i in range(3)}
+
+    def _read_all_hosts(self, cluster, objects):
+        want = b"".join(objects[k] for k in sorted(objects))
+        outs, errors = {}, []
+
+        def run(h):
+            try:
+                host = cluster.host(h)
+                fs = host.open_fs(IOPolicy(
+                    engine="rolling", blocksize=self.BLOCKSIZE, depth=2,
+                    keep_cached=True, eviction_interval_s=0.05))
+                files = sorted(host.store.list_objects(),
+                               key=lambda m: m.key)
+                f = fs.open_many(files)
+                try:
+                    outs[h] = f.read()
+                finally:
+                    f.close()
+            except BaseException as e:  # noqa: BLE001
+                errors.append((h, e))
+
+        threads = [threading.Thread(target=run, args=(h,))
+                   for h in range(self.N_HOSTS)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors, errors
+        for h in range(self.N_HOSTS):
+            assert outs[h] == want, f"host {h} bytes diverged under chaos"
+        return outs
+
+    def _cluster(self, objects, faults, **kw):
+        from repro.peer.sim import SimCluster
+
+        backing = MemStore()
+        for k, v in objects.items():
+            backing.put(k, v)
+        return SimCluster(self.N_HOSTS, backing, faults=faults, **kw)
+
+    def test_peer_transients_degrade_byte_identical(self):
+        objects = self._dataset()
+        sched = FaultSchedule(seed=17).transient(ops=("peer_fetch",),
+                                                 prob=0.3)
+        cluster = self._cluster(objects, sched)
+        try:
+            self._read_all_hosts(cluster, objects)
+            failures = sum(
+                cluster.host(h).store.peer_snapshot()["group"]["rpc_failures"]
+                for h in range(self.N_HOSTS))
+            assert failures > 0          # the chaos actually landed
+            assert sched.total_fired() > 0
+        finally:
+            cluster.close()
+
+    def test_peer_stalls_within_rpc_timeout(self):
+        objects = self._dataset()
+        sched = FaultSchedule(seed=19).stall(0.005, ops=("peer_fetch",),
+                                             prob=0.3)
+        cluster = self._cluster(objects, sched)
+        try:
+            self._read_all_hosts(cluster, objects)
+            assert sched.total_fired() > 0
+        finally:
+            cluster.close()
+
+    def test_peer_cut_mid_transfer_rereads_identically(self):
+        """A cut declares the connection dead AFTER the bytes crossed the
+        wire: the retry (or the store fallback) must observe the same
+        bytes — no torn or duplicated block may reach a reader."""
+        objects = self._dataset()
+        sched = FaultSchedule(seed=23).cut(after_bytes=512,
+                                           ops=("peer_fetch",), prob=0.25)
+        cluster = self._cluster(objects, sched)
+        try:
+            self._read_all_hosts(cluster, objects)
+            assert sched.total_fired() > 0
+        finally:
+            cluster.close()
+
+    def test_dead_heartbeats_fail_everything_over_to_the_store(self):
+        """Every heartbeat ping fails: all siblings get marked dead, all
+        remote-owned blocks degrade to direct backing GETs, and the reads
+        stay exact."""
+        objects = self._dataset()
+        sched = FaultSchedule(seed=29).transient(ops=("peer_ping",),
+                                                 prob=1.0)
+        cluster = self._cluster(objects, sched,
+                                heartbeat_interval_s=0.02, miss_limit=2)
+        try:
+            deadline = time.time() + 10.0
+            while time.time() < deadline:
+                if all(cluster.host(h).group.alive_ids() == [h]
+                       for h in range(self.N_HOSTS)):
+                    break
+                time.sleep(0.02)
+            self._read_all_hosts(cluster, objects)
+            for h in range(self.N_HOSTS):
+                snap = cluster.host(h).store.peer_snapshot()
+                # Nothing remote-owned was served by a peer...
+                assert snap["peer_hits"] == 0
+                # ...every read degraded to the backing store.
+                assert (snap["dead_peer_fallbacks"] > 0
+                        or snap["local_fetches"] > 0)
+        finally:
+            cluster.close()
+
+    def test_mixed_peer_chaos_with_store_chaos(self):
+        """Peer faults AND backing-store faults at once: the peer layer
+        degrades to the store, the store's own retry machinery absorbs
+        its faults, and the bytes stay exact."""
+        objects = self._dataset()
+        sched = (FaultSchedule(seed=31)
+                 .transient(ops=("peer_fetch",), prob=0.2)
+                 .stall(0.002, ops=("peer_fetch",), prob=0.2)
+                 .cut(after_bytes=256, ops=("peer_fetch",), prob=0.1))
+        backing = FaultyStore(
+            make_store(objects),
+            FaultSchedule(seed=37).transient(
+                ops=("get_range", "get_ranges"), prob=0.1))
+        from repro.peer.sim import SimCluster
+
+        cluster = SimCluster(self.N_HOSTS, backing, faults=sched)
+        try:
+            self._read_all_hosts(cluster, objects)
+            assert sched.total_fired() > 0
+        finally:
+            cluster.close()
