@@ -24,6 +24,7 @@ BENCHES = {
     "hsm": "benchmarks.bench_hsm",
     "peer": "benchmarks.bench_peer",
     "resilience": "benchmarks.bench_resilience",
+    "integrity": "benchmarks.bench_integrity",
     "roofline": "benchmarks.bench_roofline",
 }
 

@@ -43,6 +43,7 @@ import jax
 import numpy as np
 
 from repro.io import IOPolicy, PrefetchFS, open_store
+from repro.io.integrity import block_digest, check_block
 from repro.io.retry import Retrier, RetryPolicy
 from repro.store.base import ObjectMeta, ObjectStore
 from repro.store.tiers import CacheTier
@@ -122,12 +123,18 @@ def save_checkpoint(
             key = _leaf_key(prefix, step, idx)
             # Raw little-endian bytes; manifest shape/dtype are
             # authoritative (np.save cannot represent bfloat16 and friends).
+            raw = arr.tobytes()
             w = fs.open_write(key, policy=policy)
-            w.write(arr.tobytes())
+            w.write(raw)
             w.close_async()   # publish in the background, barrier below
             writers.append(w)
+            # Per-leaf digest: restore verifies the streamed bytes against
+            # the manifest, so a leaf corrupted anywhere between this
+            # serialization and a later frombuffer fails loudly instead of
+            # resuming training from silently wrong weights.
             entries.append(
-                dict(key=key, shape=list(arr.shape), dtype=str(arr.dtype))
+                dict(key=key, shape=list(arr.shape), dtype=str(arr.dtype),
+                     digest=block_digest(raw))
             )
         for w in writers:   # durability barrier: all leaves published
             w.join()
@@ -308,6 +315,14 @@ def restore_checkpoint(
                 # readview: a leaf inside one cached block decodes zero-copy
                 # (np.frombuffer over the block buffer's memoryview).
                 raw = read(meta.size)
+                if policy.verify != "off":
+                    # End-to-end: the digest minted over the serialized
+                    # leaf at save time must match the bytes about to
+                    # become model state — whatever path they took
+                    # (store, cache tiers, peers). Manifests predating
+                    # digests verify nothing (entry.get -> None).
+                    check_block(raw, entry.get("digest"),
+                                what=f"checkpoint leaf {entry['key']}")
                 arr = np.frombuffer(
                     raw, dtype=_dtype_from_str(entry["dtype"])
                 ).reshape(entry["shape"])

@@ -55,8 +55,15 @@ from dataclasses import dataclass, field
 
 from repro.core.autotune import AimdDepthController, BlockSizeTuner
 from repro.core.plan import Block, BlockPlan
+from repro.io.integrity import check_block
 from repro.io.retry import Hedger, Retrier, RetryPolicy
-from repro.store.base import ObjectMeta, ObjectStore, StoreError, TransientStoreError
+from repro.store.base import (
+    IntegrityError,
+    ObjectMeta,
+    ObjectStore,
+    StoreError,
+    TransientStoreError,
+)
 from repro.store.tiers import BlockMeta, CacheFlight, CacheIndex, CacheTier
 from repro.utils import get_logger
 
@@ -108,6 +115,8 @@ class PrefetchStats:
     coalesced_requests: int = 0  # GETs that carried more than one block
     coalesced_blocks: int = 0    # blocks delivered by coalesced GETs
     depth_peak: int = 0          # highest concurrent-stream target reached
+    blocks_verified: int = 0     # digest checks that passed
+    integrity_failures: int = 0  # digest mismatches detected (then healed)
     _lock: threading.Lock = field(default_factory=threading.Lock,
                                   repr=False, compare=False)
 
@@ -162,9 +171,14 @@ class RollingPrefetcher:
         tuner: BlockSizeTuner | None = None,
         index: CacheIndex | None = None,
         io_class: str = "default",
+        verify: str = "edges",
     ) -> None:
         if not tiers:
             raise ValueError("at least one cache tier is required")
+        if verify not in ("off", "edges", "full"):
+            raise ValueError(
+                f"verify must be 'off', 'edges', or 'full', got {verify!r}"
+            )
         if depth < 1:
             raise ValueError(f"depth must be >= 1, got {depth}")
         if max_depth is not None and max_depth < depth:
@@ -209,6 +223,11 @@ class RollingPrefetcher:
         # keys admission (entry tier, protection, scan resistance) and
         # per-class hit accounting off it; a flat index ignores it.
         self.io_class = io_class
+        # End-to-end integrity posture: "off" never hashes, "edges" mints
+        # a digest at the store fetch and re-checks at tier boundaries
+        # (trusting self-verifying tiers), "full" re-checks every cached
+        # read. See `repro.io.integrity`.
+        self.verify = verify
         self.stats = PrefetchStats()
         self._aimd = (
             AimdDepthController(depth, max_depth)
@@ -556,10 +575,10 @@ class RollingPrefetcher:
         run = [b for b, _ in group]
         total = sum(b.size for b in run)
         t0 = time.perf_counter()
-        datas, store_s = self._fetch_with_retries(run)
+        pairs, store_s = self._fetch_with_retries(run)
         written: list[Block] = []
         try:
-            for b, d in zip(run, datas):
+            for b, (d, _) in zip(run, pairs):
                 tier.write(b.block_id, d,
                            meta=BlockMeta(key=b.key, offset=b.start))
                 written.append(b)
@@ -609,10 +628,12 @@ class RollingPrefetcher:
                 self._spawn_streams(new)
         evict = False
         with self._cond:
-            for b, fl in group:
+            for (b, fl), (_, dig) in zip(group, pairs):
                 # Publish pins the entry for us (plus any waiters); our
                 # pin is released when this reader's eviction unpins it.
-                self.index.publish(fl, tier, b.size)
+                # The digest minted at the fetch travels with the entry —
+                # every later boundary crossing can re-check it.
+                self.index.publish(fl, tier, b.size, digest=dig)
                 info = self._info[b.index]
                 info.state = (BlockState.CONSUMED if info.abandoned
                               else BlockState.CACHED)
@@ -640,9 +661,9 @@ class RollingPrefetcher:
 
     def _fetch_with_retries(
         self, run: list[Block]
-    ) -> tuple[list[bytes], float | None]:
+    ) -> tuple[list[tuple[bytes, str | None]], float | None]:
         """One resilient (retried, optionally hedged) fetch of a
-        contiguous run. Returns (per-block payloads, store seconds);
+        contiguous run. Returns ((payload, digest) pairs, store seconds);
         seconds is None when a hedge fired — racing duplicates
         contaminate the timing, so hedged samples never reach the
         tuner."""
@@ -651,25 +672,54 @@ class RollingPrefetcher:
             label=f"blocks {run[0].block_id}..{run[-1].block_id}",
         )
 
-    def _request(self, run: list[Block]) -> list[bytes]:
-        if len(run) == 1:
-            b = run[0]
-            datas = [self.store.get_range(b.key, b.start, b.end)]
-        else:
-            datas = self.store.get_ranges(
-                run[0].key, [(b.start, b.end) for b in run]
-            )
-        for b, d in zip(run, datas):
-            if len(d) != b.size:
-                # A short response the server reported as complete
-                # (dropped connection, proxy truncation): caching it
-                # would silently corrupt the stream. Surface it as a
-                # transient fault so the Retrier re-requests.
-                raise TransientStoreError(
-                    f"truncated response for {b.block_id}: "
-                    f"got {len(d)} of {b.size} bytes"
+    def _request(self, run: list[Block]) -> list[tuple[bytes, str | None]]:
+        """One store round trip for a contiguous run. Returns (payload,
+        digest) pairs — the digest is the store's attestation of the
+        authoritative bytes (None with verify="off"), already verified
+        against the payload actually received."""
+        if self.verify == "off":
+            if len(run) == 1:
+                b = run[0]
+                datas = [self.store.get_range(b.key, b.start, b.end)]
+            else:
+                datas = self.store.get_ranges(
+                    run[0].key, [(b.start, b.end) for b in run]
                 )
-        return datas
+            pairs: list[tuple[bytes, str | None]] = [
+                (d, None) for d in datas]
+        else:
+            if len(run) == 1:
+                b = run[0]
+                pairs = [self.store.get_range_verified(b.key, b.start, b.end)]
+            else:
+                pairs = self.store.get_ranges_verified(
+                    run[0].key, [(b.start, b.end) for b in run]
+                )
+        for b, (d, dig) in zip(run, pairs):
+            self._check_fetched(b, d, dig)
+        return pairs
+
+    def _check_fetched(self, b: Block, d: bytes, dig: str | None) -> None:
+        if len(d) != b.size:
+            # A short response the server reported as complete
+            # (dropped connection, proxy truncation): caching it
+            # would silently corrupt the stream. Surface it as a
+            # transient fault so the Retrier re-requests.
+            raise TransientStoreError(
+                f"truncated response for {b.block_id}: "
+                f"got {len(d)} of {b.size} bytes"
+            )
+        if dig is not None:
+            # Received bytes vs the store's attested digest: a mismatch
+            # (bit-flip in transit) is transient — the Retrier re-fetches
+            # — and exhaustion surfaces as a typed IntegrityError rather
+            # than wrong bytes.
+            try:
+                check_block(d, dig, what=f"fetched block {b.block_id}")
+            except IntegrityError:
+                self.stats.bump(integrity_failures=1)
+                raise
+            self.stats.bump(blocks_verified=1)
 
     # ------------------------------------------------------------------ #
     # reading path (called from the application thread)
@@ -735,13 +785,17 @@ class RollingPrefetcher:
 
     def _direct_get(self, block: Block, lo: int, hi: int) -> bytes:
         """Direct store read on the reader thread (patience fallback,
-        backward seek past eviction) — resilient via the shared Retrier
-        like every other production store call."""
+        backward seek past eviction, integrity healing) — resilient via
+        the shared Retrier like every other production store call."""
         self.stats.bump(direct_reads=1)
 
         def attempt() -> bytes:
-            data = self.store.get_range(block.key, block.start + lo,
-                                        block.start + hi)
+            if self.verify == "off":
+                data, dig = self.store.get_range(
+                    block.key, block.start + lo, block.start + hi), None
+            else:
+                data, dig = self.store.get_range_verified(
+                    block.key, block.start + lo, block.start + hi)
             if len(data) != hi - lo:
                 # Same guard as _request: a short response the server
                 # reported as complete must retry, not silently hand the
@@ -750,11 +804,39 @@ class RollingPrefetcher:
                     f"truncated response for {block.block_id}: "
                     f"got {len(data)} of {hi - lo} bytes"
                 )
+            if dig is not None:
+                try:
+                    check_block(data, dig,
+                                what=f"direct read {block.block_id}")
+                except IntegrityError:
+                    self.stats.bump(integrity_failures=1)
+                    raise
+                self.stats.bump(blocks_verified=1)
             return data
 
         return self._retrier.call(
             attempt, label=f"direct read {block.block_id}",
         )
+
+    def _verify_tier_read(self, tier: CacheTier, data: bytes,
+                          block_id: str) -> None:
+        """Engine-side digest re-check of a full-block tier read. "edges"
+        trusts self-verifying tiers (DirTier's journal crc, the peer
+        transport's frame check) — hashing twice would pay the <5%
+        overhead budget twice for the same guarantee; "full" re-checks
+        unconditionally. Raises `IntegrityError` (the caller quarantines
+        and heals)."""
+        if self.verify == "off":
+            return
+        if self.verify == "edges" and getattr(tier, "verifies_reads", False):
+            return
+        dig = self.index.digest_of(block_id)
+        if dig is None:
+            return
+        # Mismatch counting happens at the catch site — the tier itself
+        # may also raise (DirTier's crc), and both must count once.
+        check_block(data, dig, what=f"cached block {block_id}")
+        self.stats.bump(blocks_verified=1)
 
     def _read_from_block(self, block: Block, gstart: int, gend: int,
                          *, view: bool = False) -> bytes | memoryview:
@@ -792,6 +874,16 @@ class RollingPrefetcher:
                 # Load the whole block from the tier once; serve subsequent
                 # small reads from the reader-side buffer.
                 self._buf_data = tier.read(block.block_id, 0, block.size)
+                self._verify_tier_read(tier, self._buf_data, block.block_id)
+            except IntegrityError:
+                # The cached copy is provably wrong (tier-level crc or the
+                # index digest disagrees with the bytes). Quarantine —
+                # evict + tombstone, so no reader (local or sibling) can
+                # hit it again — and heal from the backing store. A rotted
+                # cache block costs one GET, never wrong data.
+                self.stats.bump(integrity_failures=1)
+                self.index.quarantine(block.block_id)
+                return self._direct_get(block, lo, hi)
             except StoreError:
                 # A sibling process sharing a persistent cache dir may
                 # have evicted the file beneath our index entry — the
@@ -804,16 +896,33 @@ class RollingPrefetcher:
             return (memoryview(self._buf_data)[lo:hi] if view
                     else self._buf_data[lo:hi])
         if state == BlockState.FAILED:
-            raise StoreError(f"block {block.block_id} failed to prefetch") from err
+            # Keep the failure typed: unhealable corruption must surface as
+            # IntegrityError at the reader, not a generic prefetch failure.
+            cls = IntegrityError if isinstance(err, IntegrityError) else StoreError
+            raise cls(f"block {block.block_id} failed to prefetch") from err
         # CONSUMED/EVICTED (backward seek): the shared cache may still
         # hold the block (keep_cached, another reader's pin) — serve it
         # locally before paying a store GET.
         kind, val = self.index.acquire(block.block_id, self.io_class)
         if kind == "hit":
             try:
-                data = val.read(block.block_id, lo, hi)
+                if self.verify == "off":
+                    data = val.read(block.block_id, lo, hi)
+                else:
+                    # Digests cover whole blocks: read the full block so
+                    # the check can run, then slice. A backward seek is
+                    # rare enough that the extra bytes are noise next to
+                    # serving rotted data from an unverified partial read.
+                    full = val.read(block.block_id, 0, block.size)
+                    self._verify_tier_read(val, full, block.block_id)
+                    data = full[lo:hi]
                 self.stats.bump(cache_hits=1)
                 return data
+            except IntegrityError:
+                # Rotted beneath us: quarantine (the unpin below is a
+                # no-op once the entry is gone) and go direct.
+                self.stats.bump(integrity_failures=1)
+                self.index.quarantine(block.block_id)
             except StoreError:
                 # Vanished beneath us: drop the stale entry, go direct.
                 self.index.invalidate(block.block_id)

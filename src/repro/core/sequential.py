@@ -22,8 +22,10 @@ from dataclasses import dataclass
 from typing import TYPE_CHECKING
 
 from repro.core.plan import Block, BlockPlan
+from repro.io.integrity import check_block
 from repro.io.retry import Retrier, RetryPolicy
 from repro.store.base import (
+    IntegrityError,
     ObjectMeta,
     ObjectStore,
     StoreError,
@@ -46,6 +48,8 @@ class SequentialStats:
     throttles: int = 0          # ThrottleError responses (503 SlowDown)
     cache_hits: int = 0         # blocks served from the shared index
     flight_joins: int = 0       # blocks obtained from another reader's GET
+    blocks_verified: int = 0    # digest checks that passed
+    integrity_failures: int = 0  # digest mismatches detected (then healed)
 
     def snapshot(self) -> dict:
         return dict(self.__dict__)
@@ -72,13 +76,19 @@ class SequentialFile:
         index: CacheIndex | None = None,
         retry: RetryPolicy | None = None,
         io_class: str = "default",
+        verify: str = "edges",
     ) -> None:
+        if verify not in ("off", "edges", "full"):
+            raise ValueError(
+                f"verify must be 'off', 'edges', or 'full', got {verify!r}"
+            )
         self.store = store
         self.plan = BlockPlan(files, blocksize)
         self.cache_blocks = max(1, cache_blocks)
         self.tuner = tuner
         self.index = index
         self.io_class = io_class
+        self.verify = verify
         self.stats = SequentialStats()
         # Pre-resilience-layer this engine retried NOTHING: the first
         # transient fault of a direct read or a `_join_flight` fallback
@@ -120,7 +130,7 @@ class SequentialFile:
                 break  # keep the request one adjacent span
             run.append(b)
         if self.index is None:
-            datas = self._fetch_run(run)
+            datas = [d for d, _ in self._fetch_run(run)]
         else:
             datas = self._resolve_shared(run)
         for b, d in zip(run, datas):
@@ -136,15 +146,25 @@ class SequentialFile:
     def _on_throttle(self) -> None:
         self.stats.throttles += 1
 
-    def _request(self, run: list[Block]) -> list[bytes]:
-        if len(run) == 1:
-            datas = [self.store.get_range(run[0].key, run[0].start,
-                                          run[0].end)]
+    def _request(self, run: list[Block]) -> list[tuple[bytes, str | None]]:
+        if self.verify == "off":
+            if len(run) == 1:
+                datas = [self.store.get_range(run[0].key, run[0].start,
+                                              run[0].end)]
+            else:
+                datas = self.store.get_ranges(
+                    run[0].key, [(b.start, b.end) for b in run]
+                )
+            pairs: list[tuple[bytes, str | None]] = [(d, None) for d in datas]
         else:
-            datas = self.store.get_ranges(
-                run[0].key, [(b.start, b.end) for b in run]
-            )
-        for b, d in zip(run, datas):
+            if len(run) == 1:
+                pairs = [self.store.get_range_verified(
+                    run[0].key, run[0].start, run[0].end)]
+            else:
+                pairs = self.store.get_ranges_verified(
+                    run[0].key, [(b.start, b.end) for b in run]
+                )
+        for b, (d, dig) in zip(run, pairs):
             if len(d) != b.size:
                 # Short response reported as complete: retry, don't
                 # cache-and-corrupt (same guard as the rolling engine).
@@ -152,19 +172,30 @@ class SequentialFile:
                     f"truncated response for {b.block_id}: "
                     f"got {len(d)} of {b.size} bytes"
                 )
-        return datas
+            if dig is not None:
+                # Received bytes vs store-attested digest: a mismatch is
+                # transient (the Retrier re-fetches); exhaustion raises a
+                # typed IntegrityError, never returns wrong bytes.
+                try:
+                    check_block(d, dig, what=f"fetched block {b.block_id}")
+                except IntegrityError:
+                    self.stats.integrity_failures += 1
+                    raise
+                self.stats.blocks_verified += 1
+        return pairs
 
-    def _fetch_run(self, run: list[Block]) -> list[bytes]:
+    def _fetch_run(self, run: list[Block]) -> list[tuple[bytes, str | None]]:
         """One synchronous (resilient) store request for a contiguous run
-        of blocks."""
+        of blocks. Returns (payload, digest) pairs; digests are None with
+        verify="off"."""
         retries_before = self.stats.retries
         t0 = time.perf_counter()
-        datas = self._retrier.call(
+        pairs = self._retrier.call(
             lambda: self._request(run),
             label=f"blocks {run[0].block_id}..{run[-1].block_id}",
         )
         dt = time.perf_counter() - t0
-        nbytes = sum(len(d) for d in datas)
+        nbytes = sum(len(d) for d, _ in pairs)
         self.stats.fetch_s += dt
         self.stats.store_requests += 1
         self.stats.blocks_fetched += len(run)
@@ -176,7 +207,7 @@ class SequentialFile:
             # Retried calls are excluded — their wall time carries
             # backoff sleeps, not link behaviour.
             self.tuner.observe_request(nbytes, dt)
-        return datas
+        return pairs
 
     # -- shared-index path --------------------------------------------------
     def _resolve_shared(self, run: list[Block]) -> list[bytes]:
@@ -211,6 +242,21 @@ class SequentialFile:
         self._fetch_leaders(group, out)
         return [out[b.index] for b in run]
 
+    def _verify_tier_read(self, tier, data: bytes, block_id: str) -> None:
+        """Engine-side digest re-check of a full-block tier read; same
+        posture as the rolling engine ("edges" trusts self-verifying
+        tiers, "full" re-checks unconditionally). Raises `IntegrityError`
+        for the caller to quarantine and heal."""
+        if self.verify == "off":
+            return
+        if self.verify == "edges" and getattr(tier, "verifies_reads", False):
+            return
+        dig = self.index.digest_of(block_id)
+        if dig is None:
+            return
+        check_block(data, dig, what=f"cached block {block_id}")
+        self.stats.blocks_verified += 1
+
     def _read_hit(self, b: Block, tier) -> bytes:
         """Serve a resident block from its tier. Hits/joins deliberately
         do NOT count into blocks_fetched/bytes_fetched — those mean store
@@ -220,15 +266,23 @@ class SequentialFile:
         try:
             try:
                 data = tier.read(b.block_id, 0, b.size)
+                self._verify_tier_read(tier, data, b.block_id)
             finally:
                 self.index.unpin(b.block_id,
                                  want_evict=not self.index.keep_cached)
+        except IntegrityError:
+            # The resident copy is provably wrong: quarantine (evict +
+            # tombstone) and heal with a direct fetch — a rotted cache
+            # block costs one GET, never wrong data.
+            self.stats.integrity_failures += 1
+            self.index.quarantine(b.block_id)
+            return self._fetch_run([b])[0][0]
         except StoreError:
             # A sibling process sharing a persistent cache dir may have
             # evicted the file beneath the entry — drop the stale entry
             # and fetch it ourselves.
             self.index.invalidate(b.block_id)
-            return self._fetch_run([b])[0]
+            return self._fetch_run([b])[0][0]
         self.stats.cache_hits += 1
         return data
 
@@ -238,12 +292,12 @@ class SequentialFile:
             return
         blocks = [b for b, _ in group]
         try:
-            datas = self._fetch_run(blocks)
+            pairs = self._fetch_run(blocks)
         except Exception as e:   # noqa: BLE001 — waiters must not hang
             for _, fl in group:
                 self.index.abort_fetch(fl, e)
             raise
-        for (b, fl), d in zip(group, datas):
+        for (b, fl), (d, dig) in zip(group, pairs):
             out[b.index] = d
             if fl.waiters == 0 and not self.index.keep_cached:
                 # Nobody is waiting and retention is off: publishing would
@@ -266,7 +320,7 @@ class SequentialFile:
                 self.index.abort_fetch(fl)
                 continue
             tier.commit(b.size)
-            self.index.publish(fl, tier, b.size)
+            self.index.publish(fl, tier, b.size, digest=dig)
             # No long pin (bytes copied out); without keep_cached the
             # block must not outlive its consumption — the paper's
             # evict-when-consumed default applies to this engine too.
@@ -287,18 +341,23 @@ class SequentialFile:
                 waited += 0.5
                 if waited >= self.JOIN_PATIENCE_S:
                     self.index.leave(flight)
-                    return self._fetch_run([b])[0]
+                    return self._fetch_run([b])[0][0]
                 continue
             if kind == "hit":
                 try:
                     try:
                         data = val.read(b.block_id, 0, b.size)
+                        self._verify_tier_read(val, data, b.block_id)
                     finally:
                         self.index.unpin(b.block_id,
                                          want_evict=not self.index.keep_cached)
+                except IntegrityError:
+                    self.stats.integrity_failures += 1
+                    self.index.quarantine(b.block_id)
+                    return self._fetch_run([b])[0][0]
                 except StoreError:
                     self.index.invalidate(b.block_id)
-                    return self._fetch_run([b])[0]
+                    return self._fetch_run([b])[0][0]
                 self.stats.flight_joins += 1
                 return data
             # Leader failed: take over (or join the next attempt).

@@ -51,6 +51,7 @@ def open_rolling(store: ObjectStore, files: list[ObjectMeta],
             tuner=tuner,
             index=index,
             io_class=policy.io_class,
+            verify=policy.verify,
         )
     )
 
@@ -65,7 +66,7 @@ def open_sequential(store: ObjectStore, files: list[ObjectMeta],
     return SequentialFile(store, files, policy.blocksize,
                           cache_blocks=policy.cache_blocks, tuner=tuner,
                           index=index, retry=policy.retry_policy(),
-                          io_class=policy.io_class)
+                          io_class=policy.io_class, verify=policy.verify)
 
 
 @register_reader("direct")

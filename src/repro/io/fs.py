@@ -83,6 +83,13 @@ class FSStats:
     # dead-peer fallbacks, plus nested group/server views); None unless
     # the fs store is a `PeerAwareStore`.
     peer: dict | None = None
+    # End-to-end integrity counters (repro.io.integrity):
+    # ``blocks_verified`` digest checks that passed, ``failures`` digest
+    # mismatches the engines detected (each one healed by a re-fetch, or
+    # surfaced as a typed IntegrityError on exhaustion), ``quarantined``
+    # cache entries evicted + tombstoned for failing verification. All
+    # zeros under ``verify="off"``.
+    integrity: dict = field(default_factory=dict)
 
     def snapshot(self) -> dict:
         return {
@@ -93,6 +100,7 @@ class FSStats:
             "cache": dict(self.cache) if self.cache is not None else None,
             "hsm": dict(self.hsm) if self.hsm is not None else None,
             "peer": dict(self.peer) if self.peer is not None else None,
+            "integrity": dict(self.integrity),
         }
 
 
@@ -407,6 +415,11 @@ class PrefetchFS:
                     out.totals[k] = max(out.totals.get(k, 0), v)
                 else:
                     out.totals[k] = out.totals.get(k, 0) + v
+        out.integrity = dict(
+            blocks_verified=out.totals.get("blocks_verified", 0),
+            failures=out.totals.get("integrity_failures", 0),
+            quarantined=(out.cache or {}).get("quarantined", 0),
+        )
         return out
 
     # ------------------------------------------------------------------ #

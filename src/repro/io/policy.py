@@ -81,6 +81,18 @@ class IOPolicy:
     # restarted jobs start warm. False keeps the paper's
     # evict-when-consumed behaviour.
     keep_cached: bool = False
+    # End-to-end block integrity (repro.io.integrity). "off": no digests,
+    # the zero-overhead baseline. "edges" (default): digests are minted
+    # at the store fetch (verified against the store-attested digest),
+    # carried in the CacheIndex, and re-checked whenever a block crosses
+    # a tier/peer/store boundary — self-verifying tiers (DirTier's
+    # journal crc) are trusted and not double-hashed. "full": edges plus
+    # recomputation on EVERY cached read (even self-verifying tiers),
+    # write-behind staging read-back verification, and an authoritative
+    # backing-store cross-check of peer-served bytes (catches a
+    # byzantine sibling whose frames are self-consistent). Mismatches
+    # quarantine the block and heal through the shared Retrier.
+    verify: str = "edges"
     # Workload class carried to the cache layer (HSM admission): "loader"
     # (bulk epoch sweeps: disk-level entry, scan-resistant), "ckpt"
     # (restore streams: top-tier entry), "serve" (latency-critical
@@ -116,6 +128,10 @@ class IOPolicy:
         if not self.io_class or not isinstance(self.io_class, str):
             raise ValueError(
                 f"io_class must be a non-empty string, got {self.io_class!r}"
+            )
+        if self.verify not in ("off", "edges", "full"):
+            raise ValueError(
+                f"verify must be 'off', 'edges', or 'full', got {self.verify!r}"
             )
 
     def retry_policy(self) -> RetryPolicy:

@@ -36,7 +36,12 @@ import time
 from dataclasses import dataclass
 from typing import Any, Callable
 
-from repro.store.base import StoreError, ThrottleError, TransientStoreError
+from repro.store.base import (
+    IntegrityError,
+    StoreError,
+    ThrottleError,
+    TransientStoreError,
+)
 
 
 @dataclass(frozen=True)
@@ -177,7 +182,12 @@ class Retrier:
                 if self.on_retry is not None:
                     self.on_retry(attempt, e, pause)
                 self._sleep(pause)
-        raise StoreError(f"{label}: {reason}") from last
+        # Typed exhaustion: when the LAST fault was an integrity failure,
+        # every authority we could reach handed back bytes that do not
+        # match their digest — re-raise as IntegrityError so callers can
+        # distinguish "the data is bad" from ordinary unavailability.
+        err_cls = IntegrityError if isinstance(last, IntegrityError) else StoreError
+        raise err_cls(f"{label}: {reason}") from last
 
 
 class Hedger:

@@ -149,17 +149,23 @@ class UploadPool:
 
 class _Part:
     """One sealed part awaiting upload: either staged in a tier (data is
-    read back at upload time) or carried inline when no tier can hold it."""
+    read back at upload time) or carried inline when no tier can hold it.
+    ``digest`` is minted over the sealed bytes at staging time (only with
+    ``IOPolicy.verify="full"``) and re-checked after the tier read-back,
+    so a part that rotted in staging fails the upload loudly instead of
+    persisting corruption to the store."""
 
-    __slots__ = ("index", "size", "tier", "block_id", "data")
+    __slots__ = ("index", "size", "tier", "block_id", "data", "digest")
 
     def __init__(self, index: int, size: int, tier: CacheTier | None,
-                 block_id: str | None, data: bytes | None) -> None:
+                 block_id: str | None, data: bytes | None,
+                 digest: str | None = None) -> None:
         self.index = index
         self.size = size
         self.tier = tier
         self.block_id = block_id
         self.data = data
+        self.digest = digest
 
 
 class Writer:
@@ -369,7 +375,12 @@ class Writer:
                         # at recovery, never resurrected into the cache).
                         cand.write(block_id, data, durable=False)
                         cand.commit(len(data))
-                        return _Part(index, len(data), cand, block_id, None)
+                        digest = None
+                        if self.policy.verify == "full":
+                            from repro.io.integrity import block_digest
+                            digest = block_digest(data)
+                        return _Part(index, len(data), cand, block_id, None,
+                                     digest)
                 with self._cond:
                     if self._error is not None or self._aborted:
                         # Pipeline is failing anyway; skip backpressure so
@@ -392,6 +403,18 @@ class Writer:
                 try:
                     if not skip:   # skipped jobs only free their staging
                         data = part.tier.read(part.block_id, 0, part.size)
+                        if part.digest is not None:
+                            # verify="full": the sealed bytes' digest must
+                            # survive the staging round-trip. A mismatch
+                            # is NOT healable — the application's bytes
+                            # exist nowhere else — so it fails the writer
+                            # loudly at the next barrier rather than
+                            # persisting corruption.
+                            from repro.io.integrity import check_block
+                            check_block(
+                                data, part.digest,
+                                what=f"staged part {part.block_id}",
+                            )
                 finally:
                     part.tier.delete(part.block_id)
                     part.tier.release(part.size)

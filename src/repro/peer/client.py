@@ -16,6 +16,7 @@ import socket
 import threading
 import time
 
+from repro.io.integrity import IntegrityError, block_digest, check_block
 from repro.io.retry import Retrier, RetryPolicy
 from repro.peer.protocol import PeerError, recv_msg, send_msg, span_block_id
 from repro.store.link import LinkModel
@@ -50,6 +51,7 @@ class PeerClient:
         # Telemetry.
         self.rpcs = 0
         self.failures = 0
+        self.integrity_failures = 0
         self.bytes_received = 0
         self.bytes_sent = 0
 
@@ -92,14 +94,16 @@ class PeerClient:
                 pass
 
     # -- fault injection ----------------------------------------------------
-    def _inject(self, op: str, key: str) -> str | None:
-        """Apply scheduled transport faults for one attempt. Returns
-        ``"cut"`` when the attempt must complete and THEN lose its
-        connection (mid-transfer cut: the bytes crossed the wire, the
-        socket did not survive to tell us)."""
+    def _inject(self, op: str, key: str) -> set[str]:
+        """Apply scheduled transport faults for one attempt. Returns the
+        set of *deferred* fault kinds — ``"cut"`` (the attempt completes
+        and THEN loses its connection: the bytes crossed the wire, the
+        socket did not survive to tell us) and ``"corrupt"`` (a byte of
+        the received BLOCK frame payload is flipped in transit — the
+        digest carried in the frame header no longer matches)."""
         if self.faults is None:
-            return None
-        cut = None
+            return set()
+        deferred: set[str] = set()
         for f in self.faults.decide(op, key):
             kind = getattr(f, "kind", None)
             if kind == "stall":
@@ -108,14 +112,14 @@ class PeerClient:
                 with self._lock:
                     self.failures += 1
                 raise PeerError(f"{op} {key}: injected peer fault ({kind})")
-            elif kind == "cut":
-                cut = "cut"
-        return cut
+            elif kind in ("cut", "corrupt"):
+                deferred.add(kind)
+        return deferred
 
     # -- RPC core -----------------------------------------------------------
     def _request_once(self, op: str, header: dict,
                       payload: bytes, key: str) -> tuple[dict, bytes]:
-        cut = self._inject(op, key)
+        deferred = self._inject(op, key)
         sock = self._checkout()
         try:
             send_msg(sock, header, payload)
@@ -132,7 +136,7 @@ class PeerClient:
             raise PeerError(
                 f"peer {self.peer_id}: {op} failed: {e}"
             ) from e
-        if cut is not None:
+        if "cut" in deferred:
             # The response arrived but the connection is declared dead
             # mid-transfer: drop it and fail the attempt — the retry (or
             # the caller's store fallback) must re-request, and the
@@ -151,6 +155,27 @@ class PeerClient:
                 f"peer {self.peer_id}: {op} {key}: remote error: "
                 f"{resp.get('error')}"
             )
+        if "corrupt" in deferred and data:
+            # In-transit frame corruption: flip one byte of the payload
+            # AFTER the frame was received intact — the header (and its
+            # digest) survive, the block bytes do not. Detection is the
+            # digest check below, exactly as it would be in production.
+            buf = bytearray(data)
+            buf[self.faults.rand_index(len(buf))] ^= 0xFF
+            data = bytes(buf)
+        digest = resp.get("digest")
+        if digest is not None and data:
+            # Verify the payload against the digest the sibling attested
+            # in the frame header. A mismatch — bit-flipped in transit or
+            # a byzantine peer serving wrong bytes under a correct-length
+            # frame — degrades to a failed attempt, never to wrong data.
+            try:
+                check_block(data, digest, what=f"peer {self.peer_id} {op} {key}")
+            except IntegrityError as e:
+                with self._lock:
+                    self.failures += 1
+                    self.integrity_failures += 1
+                raise PeerError(str(e)) from e
         with self._lock:
             self.rpcs += 1
             self.bytes_received += len(data)
@@ -214,7 +239,11 @@ class PeerClient:
         """Push a block to the sibling (HSM demotion into a `PeerTier`
         homed there). Returns True when the sibling stored it."""
         bid = span_block_id(key, start, end)
-        header = {"op": "put", "key": key, "start": start, "end": end}
+        # Attest what we are pushing: the sibling re-verifies before
+        # publishing, so a frame corrupted on the way OVER is rejected
+        # there instead of poisoning its cache.
+        header = {"op": "put", "key": key, "start": start, "end": end,
+                  "digest": block_digest(data)}
         resp, _ = self._rpc("peer_put", header, payload=data, key=bid)
         return resp.get("status") == "stored"
 
@@ -227,5 +256,6 @@ class PeerClient:
     def snapshot(self) -> dict:
         with self._lock:
             return dict(rpcs=self.rpcs, failures=self.failures,
+                        integrity_failures=self.integrity_failures,
                         bytes_received=self.bytes_received,
                         bytes_sent=self.bytes_sent)

@@ -64,6 +64,14 @@ def parse_block_id(block_id: str) -> tuple[str, int, int]:
 
 
 def send_msg(sock: socket.socket, header: dict, payload: bytes = b"") -> None:
+    # Every frame with a payload declares its length INSIDE the header
+    # too. The binary prefix frames the read; the header's "len" is the
+    # sender's claim about the block itself, and `recv_msg` rejects any
+    # frame where the two disagree — a short write, a truncating proxy,
+    # or a raw-socket peer lying about its payload would otherwise
+    # deliver a wrong-sized block that only fails much later (or never).
+    if payload:
+        header = dict(header, len=len(payload))
     raw = json.dumps(header, separators=(",", ":")).encode()
     # One sendall: the prefix, header, and payload leave as a single
     # buffer so a thread switch cannot interleave frames on a shared
@@ -89,4 +97,13 @@ def recv_msg(sock: socket.socket) -> tuple[dict, bytes]:
         )
     header = json.loads(recv_exact(sock, hlen))
     payload = recv_exact(sock, plen) if plen else b""
+    declared = header.get("len")
+    if declared is not None and declared != len(payload):
+        # The prefix framed `plen` bytes but the header promised
+        # `declared`: a protocol violation, not a miss. Refuse the frame
+        # — the bytes cannot be trusted to be the block they claim.
+        raise PeerError(
+            f"peer frame length mismatch: header declares {declared} "
+            f"payload bytes, received {len(payload)}"
+        )
     return header, payload

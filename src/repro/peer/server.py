@@ -25,6 +25,7 @@ import socket
 import threading
 import time
 
+from repro.io.integrity import IntegrityError, block_digest, check_block
 from repro.io.retry import Retrier, RetryPolicy
 from repro.peer.protocol import recv_msg, send_msg, span_block_id
 from repro.store.base import ObjectStore, StoreError
@@ -91,6 +92,7 @@ class BlockServer:
         self.stores = 0
         self.bytes_served = 0
         self.errors = 0
+        self.integrity_failures = 0
         self._accept_thread = threading.Thread(
             target=self._accept_loop, name=f"peer-server-{self.host_id}",
             daemon=True,
@@ -127,6 +129,7 @@ class BlockServer:
                 stores=self.stores,
                 bytes_served=self.bytes_served,
                 errors=self.errors,
+                integrity_failures=self.integrity_failures,
             )
 
     # -- socket plumbing ----------------------------------------------------
@@ -182,7 +185,7 @@ class BlockServer:
         if op == "ping":
             return {"ok": True, "host": self.host_id}, b""
         if op == "fetch":
-            status, data = self._fetch_block(
+            status, data, digest = self._fetch_block(
                 header["key"], int(header["start"]), int(header["end"]),
                 owner_fetch=bool(header.get("owner")),
             )
@@ -193,7 +196,12 @@ class BlockServer:
                     if status == "hit":
                         self.hits += 1
                     self.bytes_served += len(data)
-            return {"ok": True, "status": status}, data
+            resp = {"ok": True, "status": status}
+            if digest is not None:
+                # Attest the payload in the frame header: the client
+                # verifies before trusting or publishing the bytes.
+                resp["digest"] = digest
+            return resp, data
         if op == "has":
             bid = span_block_id(header["key"], int(header["start"]),
                                int(header["end"]))
@@ -202,25 +210,33 @@ class BlockServer:
         if op == "put":
             status = self._store_pushed(
                 header["key"], int(header["start"]), int(header["end"]),
-                payload,
+                payload, digest=header.get("digest"),
             )
             return {"ok": True, "status": status}, b""
         return {"ok": False, "error": f"unknown op: {op!r}"}, b""
 
-    def _store_get(self, key: str, start: int, end: int) -> bytes:
-        data = self._retrier.call(
-            lambda: self.store.get_range(key, start, end),
-            label=f"peer owner fetch {key}[{start}:{end}]",
+    def _store_get(self, key: str, start: int, end: int) -> tuple[bytes, str]:
+        def attempt() -> tuple[bytes, str]:
+            data, digest = self.store.get_range_verified(key, start, end)
+            # Verify INSIDE the retried attempt: an in-transit flip of a
+            # store response is transient, so the retrier re-fetches it
+            # instead of handing siblings attested-but-wrong bytes.
+            check_block(data, digest,
+                        what=f"peer owner fetch {key}[{start}:{end}]")
+            return data, digest
+
+        data, digest = self._retrier.call(
+            attempt, label=f"peer owner fetch {key}[{start}:{end}]",
         )
         if len(data) != end - start:
             raise StoreError(
                 f"truncated owner fetch for {key}[{start}:{end}]: "
                 f"got {len(data)} bytes"
             )
-        return data
+        return data, digest
 
     def _fetch_block(self, key: str, start: int, end: int,
-                     owner_fetch: bool) -> tuple[str, bytes]:
+                     owner_fetch: bool) -> tuple[str, bytes, str | None]:
         """Resolve one block against the local hierarchy.
 
         hit → serve from the resident tier; leader + owner → the ONE
@@ -238,26 +254,34 @@ class BlockServer:
                         data = val.read(bid, 0, None)
                     finally:
                         self.index.unpin(bid)
+                except IntegrityError:
+                    # The resident copy rotted (self-verifying tier
+                    # refused it): quarantine — evict + tombstone — and
+                    # re-resolve, never serve it to a sibling.
+                    with self._lock:
+                        self.integrity_failures += 1
+                    self.index.quarantine(bid)
+                    continue
                 except StoreError:
                     # Tier file vanished beneath the entry (sibling
                     # process eviction): drop it and re-resolve.
                     self.index.invalidate(bid)
                     continue
-                return "hit", data
+                return "hit", data, self._attest(bid, data)
             if kind == "leader":
                 if not owner_fetch:
                     # Pure cache probe — do NOT become a fetch leader.
                     self.index.abort_fetch(val)
-                    return "miss", b""
+                    return "miss", b"", None
                 with self._lock:
                     self.ownership_fetches += 1
                 try:
-                    data = self._store_get(key, start, end)
+                    data, digest = self._store_get(key, start, end)
                 except Exception as e:
                     self.index.abort_fetch(val, e)
                     raise
-                self._publish(val, bid, key, start, data)
-                return "fetched", data
+                self._publish(val, bid, key, start, data, digest)
+                return "fetched", data, digest
             # kind == "wait": someone (local engine or another sibling's
             # request) is already fetching — join them.
             remaining = deadline - time.monotonic()
@@ -266,8 +290,9 @@ class BlockServer:
                 if owner_fetch:
                     # Answer rather than time the client out; the stuck
                     # flight is the index's problem (flight TTL).
-                    return "fetched", self._store_get(key, start, end)
-                return "miss", b""
+                    data, digest = self._store_get(key, start, end)
+                    return "fetched", data, digest
+                return "miss", b"", None
             st, res = self.index.join(val, timeout=min(0.5, remaining))
             if st == "hit":
                 try:
@@ -275,16 +300,29 @@ class BlockServer:
                         data = res.read(bid, 0, None)
                     finally:
                         self.index.unpin(bid)
+                except IntegrityError:
+                    with self._lock:
+                        self.integrity_failures += 1
+                    self.index.quarantine(bid)
+                    continue
                 except StoreError:
                     self.index.invalidate(bid)
                     continue
-                return "hit", data
+                return "hit", data, self._attest(bid, data)
             # "failed" → re-acquire (maybe as the new leader); "timeout"
             # → loop with the remaining patience.
         raise StoreError(f"peer fetch of {bid} did not converge")
 
+    def _attest(self, bid: str, data: bytes) -> str:
+        """The digest to stamp on a served block: what the index carries
+        (minted at the original store fetch) when known, else computed
+        over the bytes we are about to send — so every BLOCK frame is
+        attested even for blocks published before digests existed."""
+        digest = self.index.digest_of(bid)
+        return digest if digest is not None else block_digest(data)
+
     def _publish(self, flight, bid: str, key: str, start: int,
-                 data: bytes) -> None:
+                 data: bytes, digest: str | None = None) -> None:
         """Publish an owner-fetched block into the local tiers (the
         engines' reserve→write→commit→publish dance). Failure to cache is
         never failure to serve: abort the flight and the caller returns
@@ -300,16 +338,41 @@ class BlockServer:
             self.index.abort_fetch(flight)
             return
         tier.commit(len(data))
-        self.index.publish(flight, tier, len(data))
+        self.index.publish(flight, tier, len(data), digest=digest)
         # Drop the leader pin; the block stays resident (the peer index
         # runs keep_cached) and evicts only under capacity pressure.
         self.index.unpin(bid)
 
     def _store_pushed(self, key: str, start: int, end: int,
-                      payload: bytes) -> str:
+                      payload: bytes, digest: str | None = None) -> str:
         """A sibling pushed a block at us (HSM demotion into its
         `PeerTier`, homed here). Adopt it through the normal single-flight
         machinery so a racing fetch and a push cannot double-register."""
+        if len(payload) != end - start:
+            # The header's (start, end) is the block's identity; a
+            # payload of any other length is a protocol violation — a
+            # lying or buggy sender — not a storable block. Before this
+            # check a short push was adopted verbatim and served to every
+            # sibling as the real thing.
+            with self._lock:
+                self.errors += 1
+            log.warning(
+                "peer server %d: rejected push of %s[%d:%d]: payload is "
+                "%d bytes, span is %d", self.host_id, key, start, end,
+                len(payload), end - start,
+            )
+            return "rejected"
+        if digest is not None:
+            try:
+                check_block(payload, digest,
+                            what=f"pushed block {key}[{start}:{end}]")
+            except IntegrityError:
+                # Bytes rotted between the sibling's attestation and our
+                # doorstep: refuse, never poison the cache. The sender
+                # demotes elsewhere (or drops the block).
+                with self._lock:
+                    self.integrity_failures += 1
+                return "rejected"
         bid = span_block_id(key, start, end)
         kind, val = self.index.acquire(bid, self.io_class)
         if kind == "hit":
@@ -329,7 +392,9 @@ class BlockServer:
             self.index.abort_fetch(val)
             return "rejected"
         tier.commit(len(payload))
-        self.index.publish(val, tier, len(payload))
+        self.index.publish(val, tier, len(payload),
+                           digest=digest if digest is not None
+                           else block_digest(payload))
         self.index.unpin(bid)
         with self._lock:
             self.stores += 1

@@ -72,6 +72,40 @@ class CountingStore(ObjectStore):
             self.bytes_fetched += sum(len(d) for d in datas)
         return datas
 
+    # Verified reads MUST delegate (not fall back to the base-class
+    # hash-what-you-got default): when the inner store is a FaultyStore,
+    # the digest has to attest the authoritative bytes, not whatever the
+    # chaos layer mangled on the way out.
+    def get_range_verified(self, key: str, start: int,
+                           end: int) -> tuple[bytes, str]:
+        data, digest = self.inner.get_range_verified(key, start, end)
+        with self._lock:
+            self.fetches += 1
+            self.requests += 1
+            self.bytes_fetched += len(data)
+        return data, digest
+
+    def get_ranges_verified(
+        self, key: str, spans: list[tuple[int, int]],
+    ) -> list[tuple[bytes, str]]:
+        pairs = self.inner.get_ranges_verified(key, spans)
+        with self._lock:
+            self.fetches += len(spans)
+            self.requests += 1
+            self.bytes_fetched += sum(len(d) for d, _ in pairs)
+        return pairs
+
+    def digest_range(self, key: str, start: int, end: int) -> str:
+        # The reference digest costs a real store read (the default
+        # implementation fetches the range) — bill it like one, so
+        # amplification claims stay honest under verify="full".
+        digest = self.inner.digest_range(key, start, end)
+        with self._lock:
+            self.fetches += 1
+            self.requests += 1
+            self.bytes_fetched += end - start
+        return digest
+
     def get(self, key: str) -> bytes:
         return self.inner.get(key)
 

@@ -25,6 +25,7 @@ from __future__ import annotations
 import threading
 from urllib.parse import unquote
 
+from repro.io.integrity import block_digest
 from repro.peer.client import PeerClient
 from repro.peer.group import PeerGroup, PeerSpec
 from repro.peer.protocol import span_block_id
@@ -69,11 +70,18 @@ class PeerAwareStore(ObjectStore):
         self.server = server
         self._owns_hierarchy = owns_hierarchy
         self._lock = threading.Lock()
+        # Integrity posture for peer-served bytes. The transport already
+        # verifies every BLOCK frame against its header digest; "full"
+        # additionally cross-checks peer-served bytes against the
+        # *backing store's* digest (`inner.digest_range`) — the one
+        # authority a self-consistent byzantine sibling cannot forge.
+        self.verify = "edges"
         # Telemetry (surfaced as FSStats.peer).
         self.peer_hits = 0             # blocks served by a sibling
         self.peer_misses = 0           # sibling probe came back empty
         self.local_fetches = 0         # self-owned blocks (direct GETs)
         self.dead_peer_fallbacks = 0   # home dead/unreachable -> direct GET
+        self.integrity_rejects = 0     # peer bytes failed the cross-check
         self.bytes_from_peers = 0
         self.fallback_bytes = 0
 
@@ -106,7 +114,32 @@ class PeerAwareStore(ObjectStore):
         with self._lock:
             self.peer_hits += 1
             self.bytes_from_peers += len(data)
+        if self.verify == "full" and not self._cross_check(
+                owner, key, start, end, data):
+            return None
         return data
+
+    def _cross_check(self, owner: int, key: str, start: int, end: int,
+                     data: bytes) -> bool:
+        """"full"-mode defense: compare peer-served bytes against the
+        backing store's own digest of the range. Honest about its cost —
+        the default `digest_range` reads the range from the store — which
+        is why only "full" pays it. A failed check demotes the sibling
+        (`note_failure`) and sends the caller to the backing store."""
+        try:
+            ref = self.inner.digest_range(key, start, end)
+        except StoreError:
+            return True   # no authority reachable; frame digest stands
+        if ref == block_digest(data):
+            return True
+        self.group.note_failure(owner)
+        with self._lock:
+            self.integrity_rejects += 1
+        log.warning(
+            "peer %d served bytes for %s[%d:%d] that contradict the "
+            "backing store (%s); falling back", owner, key, start, end, ref,
+        )
+        return False
 
     def get_range(self, key: str, start: int, end: int) -> bytes:
         client, owner = self._route(key, start, end)
@@ -145,6 +178,60 @@ class PeerAwareStore(ObjectStore):
                 out[i] = d
         return out  # type: ignore[return-value]
 
+    # -- verified reads ------------------------------------------------------
+    # Peer-served bytes arrive frame-verified (PeerClient checked the
+    # payload against the sibling's attested digest), so hashing them
+    # here re-mints the SAME digest the sibling sent; fallback reads get
+    # the backing store's own attestation. Either way the caller holds a
+    # digest that covers the exact bytes returned.
+    def get_range_verified(self, key: str, start: int,
+                           end: int) -> tuple[bytes, str]:
+        client, owner = self._route(key, start, end)
+        if client is not None:
+            data = self._fetch_via_peer(client, owner, key, start, end)
+            if data is not None:
+                return data, block_digest(data)
+        with self._lock:
+            if client is None and owner == self.group.self_id:
+                self.local_fetches += 1
+            elif client is None:
+                self.dead_peer_fallbacks += 1
+            self.fallback_bytes += end - start
+        return self.inner.get_range_verified(key, start, end)
+
+    def get_ranges_verified(
+        self, key: str, spans: list[tuple[int, int]],
+    ) -> list[tuple[bytes, str]]:
+        out: list[tuple[bytes, str] | None] = [None] * len(spans)
+        need: list[int] = []
+        for i, (start, end) in enumerate(spans):
+            client, owner = self._route(key, start, end)
+            data = None
+            if client is not None:
+                data = self._fetch_via_peer(client, owner, key, start, end)
+            if data is not None:
+                out[i] = (data, block_digest(data))
+            else:
+                with self._lock:
+                    if client is None and owner == self.group.self_id:
+                        self.local_fetches += 1
+                    elif client is None:
+                        self.dead_peer_fallbacks += 1
+                    self.fallback_bytes += end - start
+                need.append(i)
+        if need:
+            pairs = self.inner.get_ranges_verified(
+                key, [spans[i] for i in need])
+            for i, pair in zip(need, pairs):
+                out[i] = pair
+        return out  # type: ignore[return-value]
+
+    def digest_range(self, key: str, start: int, end: int) -> str:
+        # Always the backing store's answer: this is the authoritative
+        # reference the "full" cross-check compares peers against, so it
+        # must never itself be peer-derived.
+        return self.inner.digest_range(key, start, end)
+
     # -- plain delegation ----------------------------------------------------
     def get(self, key: str) -> bytes:
         # Whole-object reads (manifests, metadata) skip peer routing:
@@ -175,6 +262,7 @@ class PeerAwareStore(ObjectStore):
                 peer_misses=self.peer_misses,
                 local_fetches=self.local_fetches,
                 dead_peer_fallbacks=self.dead_peer_fallbacks,
+                integrity_rejects=self.integrity_rejects,
                 bytes_from_peers=self.bytes_from_peers,
                 fallback_bytes=self.fallback_bytes,
             )
@@ -200,6 +288,7 @@ class PeerAwareStore(ObjectStore):
 PEER_URI_PARAMS = {
     "backing", "self", "peers", "serve", "mem", "peer_tier",
     "peer_latency_ms", "peer_bw_mbps", "peer_rps", "heartbeat_ms",
+    "verify",
 }
 
 
@@ -292,4 +381,11 @@ def build_peer(uri, open_inner) -> PeerAwareStore:
         inner_for_close if isinstance(inner_for_close, HSMStore) else raw,
         group, tiers=tiers, index=index, server=server, owns_hierarchy=True,
     )
+    verify = uri.params.get("verify")
+    if verify is not None:
+        if verify not in ("off", "edges", "full"):
+            raise ValueError(
+                f"peer:// verify= must be off/edges/full, got {verify!r}"
+            )
+        store.verify = verify
     return store

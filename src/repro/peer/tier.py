@@ -21,6 +21,15 @@ belongs: below local media, far above the WAN.
 Transport billing note: `PeerClient` bills every payload to the peer
 link, so this tier's `read`/`write` overrides skip `CacheTier`'s own
 link charge — one block moved over the LAN is billed once.
+
+Integrity note: every block that crosses the LAN is frame-verified by
+the transport — `PeerClient.fetch` checks the payload against the
+digest the home host attested in the frame header, and `put` attests
+what it pushes (the home host re-verifies before publishing). A frame
+that fails the check surfaces here as a `StoreError`, which the index
+treats like any lost tier block: invalidate and re-fetch from the next
+authority. The tier itself therefore sets ``verifies_reads`` — a read
+that returns at all returned digest-checked bytes.
 """
 
 from __future__ import annotations
@@ -39,6 +48,10 @@ class PeerTier(CacheTier):
     #: tier advertises effectively-infinite space and relies on remote
     #: admission (a push may come back "rejected") for pressure.
     DEFAULT_CAPACITY = 1 << 40
+
+    #: Reads arrive digest-checked by the transport (see module
+    #: docstring), so "edges" verification need not re-hash them.
+    verifies_reads = True
 
     def __init__(self, group: PeerGroup, capacity: int = DEFAULT_CAPACITY,
                  *, name: str = "peer") -> None:

@@ -33,6 +33,16 @@ class ThrottleError(TransientStoreError):
     pipeline stops hammering a rate-limited store."""
 
 
+class IntegrityError(TransientStoreError):
+    """Payload bytes do not match their content digest (corrupt store
+    response, bit-rotted cache block, mangled peer frame). Transient by
+    design: a re-read from the next-more-authoritative source usually
+    heals it, so the `Retrier` retries these like any network fault —
+    but exhaustion re-raises *as* `IntegrityError` (not bare
+    `StoreError`), so callers can distinguish "the data itself is bad
+    everywhere" from ordinary unavailability."""
+
+
 @dataclass(frozen=True)
 class ObjectMeta:
     key: str
@@ -160,6 +170,47 @@ class ObjectStore(abc.ABC):
         round-trips (HEAD for the size, then the ranged GET); concrete
         stores override it to serve whole-object gets in one request."""
         return self.get_range(key, 0, self.size(key))
+
+    # -- verified reads ----------------------------------------------------
+    # The integrity layer's store edge. A *verified* read returns
+    # ``(payload, digest)`` where the digest describes the bytes the
+    # store believes it holds — the authoritative reference the engines
+    # check received bytes against and carry through the cache tiers,
+    # the peer wire protocol, and checkpoint manifests. The defaults
+    # hash the returned payload, which is exact for leaf stores (their
+    # ``get_range`` IS the authority); wrapper stores that can corrupt
+    # or substitute bytes in transit (`FaultyStore`, `PeerAwareStore`)
+    # override these so the digest is computed from the authoritative
+    # inner bytes BEFORE any mangling — modeling S3's GetObject
+    # checksum mode, where the server attests what it sent.
+
+    def get_range_verified(self, key: str, start: int,
+                           end: int) -> tuple[bytes, str]:
+        """Fetch bytes [start, end) plus the store-attested content
+        digest (see `repro.io.integrity.block_digest`)."""
+        from repro.io.integrity import block_digest
+
+        data = self.get_range(key, start, end)
+        return data, block_digest(data)
+
+    def get_ranges_verified(
+        self, key: str, spans: list[tuple[int, int]]
+    ) -> list[tuple[bytes, str]]:
+        """Vectorized :meth:`get_range_verified` (coalescing stores keep
+        their one-request-per-run behaviour via `get_ranges`)."""
+        from repro.io.integrity import block_digest
+
+        return [(d, block_digest(d)) for d in self.get_ranges(key, spans)]
+
+    def digest_range(self, key: str, start: int, end: int) -> str:
+        """Digest of bytes [start, end) without returning them — the
+        authoritative cross-check `verify="full"` uses against
+        peer-served payloads. The portable fallback reads the range
+        (paying its full cost); stores with a cheap checksum RPC
+        override it."""
+        from repro.io.integrity import block_digest
+
+        return block_digest(self.get_range(key, start, end))
 
     def start_multipart(self, key: str) -> MultipartUpload:
         """Begin a multipart upload of `key`; see `MultipartUpload`."""

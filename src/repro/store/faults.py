@@ -23,11 +23,19 @@ latency plus partial bandwidth, exactly what a dropped connection costs.
 `FaultyStore` with a `LinkModel` rps limit when the raising request
 itself should pay a round trip.
 
-Corruption is delivered, not detected: the read engines length-check
-range responses (so ``truncate`` is survivable) but carry no payload
-checksums, so a ``corrupt`` fault reaches the application — it exists to
-exercise end-to-end integrity machinery in higher layers, not the retry
-loop.
+Corruption is detected AND healed since the integrity layer
+(`repro.io.integrity`) landed: the verified-read path
+(:meth:`FaultyStore.get_range_verified` and friends) takes the
+store-attested digest from the INNER store while payload shaping mangles
+only the returned bytes — so a fired ``corrupt``/``truncate`` is exactly
+the detectable wire-mangling S3's GetObject checksum mode catches, and
+engines running ``IOPolicy(verify="edges")`` re-fetch through the shared
+`Retrier` instead of delivering flipped bytes to the application. Only
+the unverified legacy path (``verify="off"``) still delivers corruption
+silently. ``flip_at_rest`` extends chaos to resident cache blocks: a
+`DirTier` constructed with ``faults=schedule`` mutates the on-disk block
+file between write and read, exercising the journal-crc steady-state
+check.
 """
 
 from __future__ import annotations
@@ -52,7 +60,11 @@ META_OPS = ("size", "list_objects", "delete")
 ALL_OPS = READ_OPS + WRITE_OPS + META_OPS
 
 # Faults that replace the normal raise/serve flow of a request.
-_KINDS = ("throttle", "transient", "stall", "truncate", "corrupt", "cut")
+# ``flip_at_rest`` is special: it fires on the pseudo-op "at_rest" that
+# a `DirTier` consults on reads, mutating a RESIDENT block file rather
+# than a wire payload.
+_KINDS = ("throttle", "transient", "stall", "truncate", "corrupt", "cut",
+          "flip_at_rest")
 
 
 @dataclass
@@ -140,6 +152,15 @@ class FaultSchedule:
                 after=0, every=None) -> "FaultSchedule":
         """Flip one (seeded-position) byte of the response payload."""
         return self._add("corrupt", ops, key, prob, times, after, every)
+
+    def flip_at_rest(self, *, key=None, prob=1.0, times=None,
+                     after=0, every=None) -> "FaultSchedule":
+        """Flip one byte of a RESIDENT `DirTier` block file between its
+        write and a later read (at-rest bit rot). Fires on the tier's
+        ``"at_rest"`` pseudo-op — pass this schedule as the tier's
+        ``faults=`` argument; wire-level ops never match it."""
+        return self._add("flip_at_rest", ("at_rest",), key, prob, times,
+                         after, every)
 
     def cut(self, *, after_bytes: int, ops=READ_OPS, key=None, prob=1.0,
             times=None, after=0, every=None) -> "FaultSchedule":
@@ -303,6 +324,53 @@ class FaultyStore(ObjectStore):
                 f"injected cut: {key!r} dropped after {cut.nbytes} bytes"
             )
         return self._mangle(rules, self.inner.get(key))
+
+    # -- verified reads ----------------------------------------------------
+    # The store-attested digest comes from the INNER store (the
+    # authority) while payload shaping mangles only the returned bytes —
+    # so a fired ``corrupt``/``truncate`` is *detectable* by the caller,
+    # exactly like S3's GetObject checksum mode detects a mangled wire
+    # transfer. ``cut`` still raises before any payload exists.
+    def get_range_verified(self, key: str, start: int,
+                           end: int) -> tuple[bytes, str]:
+        rules = self._inject("get_range", key)
+        cut = self._cut_rule(rules)
+        if cut is not None:
+            stop = min(end, start + cut.nbytes)
+            if stop > start:
+                self.inner.get_range(key, start, stop)
+            raise TransientStoreError(
+                f"injected cut: {key!r} dropped after {stop - start} "
+                f"of {end - start} bytes"
+            )
+        data, digest = self.inner.get_range_verified(key, start, end)
+        return self._mangle(rules, data), digest
+
+    def get_ranges_verified(
+        self, key: str, spans: list[tuple[int, int]]
+    ) -> list[tuple[bytes, str]]:
+        rules = self._inject("get_ranges", key)
+        cut = self._cut_rule(rules)
+        if cut is not None:
+            start = spans[0][0] if spans else 0
+            stop = min(spans[-1][1] if spans else 0, start + cut.nbytes)
+            if stop > start:
+                self.inner.get_range(key, start, stop)
+            raise TransientStoreError(
+                f"injected cut: {key!r} dropped after {stop - start} bytes "
+                f"of a {len(spans)}-span request"
+            )
+        out = self.inner.get_ranges_verified(key, spans)
+        if out and rules:
+            out = list(out)
+            data, digest = out[-1]
+            out[-1] = (self._mangle(rules, data), digest)
+        return out
+
+    def digest_range(self, key: str, start: int, end: int) -> str:
+        # A checksum RPC carries no payload to mangle; pass through to
+        # the authority.
+        return self.inner.digest_range(key, start, end)
 
     # -- writes ------------------------------------------------------------
     def put(self, key: str, data: bytes) -> None:

@@ -44,6 +44,7 @@ import time
 from dataclasses import dataclass, field
 
 from repro.store.base import (
+    IntegrityError,
     MultipartUpload,
     ObjectMeta,
     ObjectStore,
@@ -59,6 +60,19 @@ from repro.store.tiers import (
 from repro.utils import get_logger
 
 log = get_logger("store.hsm")
+
+
+def _check_move(data: bytes, digest: str | None, block_id: str,
+                move: str) -> None:
+    """Verify block bytes against their index digest before an HSM move
+    copies them to another tier — a move is a tier/tier boundary, and
+    boundaries are where digests get checked. No digest (verify="off"
+    producers, pre-digest entries) verifies nothing. Lazy import: the io
+    layer imports this module at package init."""
+    if digest is None:
+        return
+    from repro.io.integrity import check_block
+    check_block(data, digest, what=f"hsm {move} of {block_id}")
 
 
 # --------------------------------------------------------------------------- #
@@ -418,8 +432,21 @@ class HSMIndex(CacheIndex):
             return False
         try:
             data = e.tier.read(block_id, 0, e.size)
+            _check_move(data, e.digest, block_id, "demotion")
             dst.write(block_id, data)
             dst.commit(e.size)
+        except IntegrityError as exc:
+            # The copy rotted in the source tier: propagating it down
+            # would launder corruption into a colder (often persistent)
+            # level. Refuse the move — the caller deletes, and the next
+            # read re-fetches clean bytes from the backing store.
+            dst.cancel(e.size)
+            with self._cond:
+                self.moves_failed += 1
+                self.quarantined += 1
+            log.warning("demotion of %s: copy is corrupt, evicting: %s",
+                        block_id, exc)
+            return False
         except Exception as exc:   # noqa: BLE001 — fall back to eviction
             dst.cancel(e.size)
             with self._cond:
@@ -429,7 +456,8 @@ class HSMIndex(CacheIndex):
             return False
         self._delete_from_tier(e.tier, block_id, e.size)
         with self._cond:
-            ne = _IndexEntry(dst, e.size, refs=0, io_class=e.io_class)
+            ne = _IndexEntry(dst, e.size, refs=0, io_class=e.io_class,
+                             digest=e.digest)
             self._entries[block_id] = ne
             self._note_evictable(block_id, ne)
             self.demotions += 1
@@ -501,13 +529,26 @@ class HSMIndex(CacheIndex):
         src = e.tier
         dst = self.tiers[dst_level]
         ok = False
+        rotted = False
         try:
             if self._tier_reserve(dst_level, e.size, e.io_class):
                 try:
                     data = src.read(block_id, 0, e.size)
+                    _check_move(data, e.digest, block_id, "promotion")
                     dst.write(block_id, data)
                     dst.commit(e.size)
                     ok = True
+                except IntegrityError as exc:
+                    # Rotted in place: neither promote it NOR put it
+                    # back. Quarantine — the entry stays gone, the tier
+                    # copy is deleted below, the next read re-fetches.
+                    dst.cancel(e.size)
+                    rotted = True
+                    with self._cond:
+                        self.moves_failed += 1
+                        self.quarantined += 1
+                    log.warning("promotion of %s: copy is corrupt, "
+                                "quarantining: %s", block_id, exc)
                 except Exception as exc:   # noqa: BLE001 — keep in place
                     dst.cancel(e.size)
                     with self._cond:
@@ -517,16 +558,17 @@ class HSMIndex(CacheIndex):
         finally:
             with self._cond:
                 if ok:
-                    ne = _IndexEntry(dst, e.size, refs=0, io_class=e.io_class)
+                    ne = _IndexEntry(dst, e.size, refs=0, io_class=e.io_class,
+                                     digest=e.digest)
                     self._entries[block_id] = ne
                     self._note_evictable(block_id, ne)
                     self.promotions += 1
-                else:
+                elif not rotted:
                     self._entries[block_id] = e
                     self._note_evictable(block_id, e)
                 self._deleting.discard(block_id)
                 self._cond.notify_all()
-        if ok:
+        if ok or rotted:
             self._delete_from_tier(src, block_id, e.size)
         return ok
 
@@ -622,6 +664,18 @@ class HSMStore(ObjectStore):
 
     def get_ranges(self, key: str, spans: list[tuple[int, int]]) -> list[bytes]:
         return self.inner.get_ranges(key, spans)
+
+    def get_range_verified(self, key: str, start: int,
+                           end: int) -> tuple[bytes, str]:
+        return self.inner.get_range_verified(key, start, end)
+
+    def get_ranges_verified(
+        self, key: str, spans: list[tuple[int, int]],
+    ) -> list[tuple[bytes, str]]:
+        return self.inner.get_ranges_verified(key, spans)
+
+    def digest_range(self, key: str, start: int, end: int) -> str:
+        return self.inner.digest_range(key, start, end)
 
     def put(self, key: str, data: bytes) -> None:
         self.inner.put(key, data)

@@ -39,7 +39,7 @@ from collections import OrderedDict
 from dataclasses import dataclass
 from urllib.parse import quote, unquote
 
-from repro.store.base import StoreError
+from repro.store.base import IntegrityError, StoreError
 from repro.store.link import LinkModel
 from repro.utils import get_logger
 
@@ -62,6 +62,12 @@ class BlockMeta:
 
 class CacheTier(abc.ABC):
     """A bounded block cache with simulated (or real) transfer costs."""
+
+    #: True when full-block reads are verified by the tier itself (the
+    #: DirTier's journal-crc check) — engines running ``verify="edges"``
+    #: trust such tiers and skip re-hashing what the tier just hashed;
+    #: ``verify="full"`` re-checks regardless.
+    verifies_reads = False
 
     def __init__(
         self,
@@ -284,9 +290,22 @@ class DirTier(CacheTier):
     BLOCK_PREFIX = "blk-"
     _COMPACT_SLACK = 1024   # journal records beyond live entries before compact
 
-    def __init__(self, capacity: int, root: str, **kw) -> None:
+    def __init__(self, capacity: int, root: str, *,
+                 verify_reads: bool = True, faults=None, **kw) -> None:
         super().__init__(capacity, **kw)
         self.root = root
+        # Steady-state integrity: recovery has always crc-checked blocks,
+        # but a block that rots AFTER recovery used to be served as-is
+        # for the life of the process. With ``verify_reads`` every
+        # full-block read recomputes the journal crc and raises
+        # `IntegrityError` on mismatch (partial reads are not coverable
+        # by a whole-block crc and pass through). ``faults`` is an
+        # optional chaos hook (`FaultSchedule`): a fired ``flip_at_rest``
+        # rule mutates the resident block file before the read, so the
+        # detection path is exercisable deterministically.
+        self.verifies_reads = verify_reads
+        self.faults = faults
+        self.integrity_failures = 0
         os.makedirs(root, exist_ok=True)
         self._journal_path = os.path.join(root, self.INDEX_NAME)
         self._journal_lock = threading.Lock()
@@ -519,12 +538,50 @@ class DirTier(CacheTier):
         self._store_block(block_id, data, None, True)
 
     def _read(self, block_id: str, start: int, end: int | None) -> bytes:
+        if self.faults is not None:
+            self._maybe_rot(block_id)
         try:
             with open(self._path(block_id), "rb") as f:
                 f.seek(start)
-                return f.read(None if end is None else end - start)
+                data = f.read(None if end is None else end - start)
         except OSError:
             raise StoreError(f"{self.name}: block missing: {block_id}") from None
+        if self.verifies_reads and start == 0:
+            with self._journal_lock:
+                rec = self._meta.get(block_id)
+            # Only a read that covers the whole journaled block can be
+            # checked against the whole-block crc.
+            if (rec is not None and len(data) == rec.get("len")
+                    and (zlib.crc32(data) & 0xFFFFFFFF) != rec.get("crc")):
+                with self._journal_lock:
+                    self.integrity_failures += 1
+                raise IntegrityError(
+                    f"{self.name}: journal crc mismatch for {block_id} "
+                    f"(block rotted at rest)"
+                )
+        return data
+
+    def _maybe_rot(self, block_id: str) -> None:
+        """Chaos hook: when the schedule fires a ``flip_at_rest`` rule
+        for this block, flip one byte of the resident file in place —
+        at-rest bit rot between write and read."""
+        rules = self.faults.decide("at_rest", block_id)
+        if not any(getattr(r, "kind", None) == "flip_at_rest" for r in rules):
+            return
+        path = self._path(block_id)
+        try:
+            with open(path, "r+b") as f:
+                f.seek(0, os.SEEK_END)
+                size = f.tell()
+                if size == 0:
+                    return
+                pos = size // 2
+                f.seek(pos)
+                byte = f.read(1)
+                f.seek(pos)
+                f.write(bytes([byte[0] ^ 0xFF]))
+        except OSError:
+            pass   # nothing resident to rot
 
     def _delete(self, block_id: str) -> int:
         path = self._path(block_id)
@@ -572,6 +629,17 @@ class DirTier(CacheTier):
     def resident_blocks(self) -> list[tuple[str, int]]:
         with self._journal_lock:
             return list(self._live.items())
+
+    def digest_of(self, block_id: str) -> str | None:
+        """Canonical digest of a journaled block (``"crc32:%08x"``, the
+        same value `repro.io.integrity.block_digest` mints), so a
+        recovered cache primes the `CacheIndex` with verifiable entries
+        and the peer server can attest recovered blocks it serves."""
+        with self._journal_lock:
+            rec = self._meta.get(block_id)
+            if rec is None or rec.get("crc") is None:
+                return None
+            return f"crc32:{rec['crc'] & 0xFFFFFFFF:08x}"
 
     def journaled_level(self, block_id: str) -> int | None:
         """Tier-generation of a recovered block: the hierarchy level this
@@ -621,15 +689,21 @@ class CacheFlight:
 
 
 class _IndexEntry:
-    __slots__ = ("tier", "size", "refs", "evict_requested", "io_class")
+    __slots__ = ("tier", "size", "refs", "evict_requested", "io_class",
+                 "digest")
 
     def __init__(self, tier: CacheTier, size: int, refs: int,
-                 io_class: str = "default") -> None:
+                 io_class: str = "default",
+                 digest: str | None = None) -> None:
         self.tier = tier
         self.size = size
         self.refs = refs
         self.evict_requested = False
         self.io_class = io_class
+        # Content digest minted at the block's first store fetch (None
+        # for verify="off" producers): the reference every later tier
+        # read, HSM move, and peer-served frame is checked against.
+        self.digest = digest
 
 
 class CacheIndex:
@@ -681,10 +755,14 @@ class CacheIndex:
         self.evictions = 0       # blocks actually deleted from a tier
         self.recovered = 0       # blocks primed from persistent tiers
         self.reclaims = 0        # stale flights expired (leader presumed dead)
+        self.quarantined = 0     # blocks evicted+tombstoned on digest mismatch
         for tier in self.tiers:
+            tier_digest = getattr(tier, "digest_of", None)
             for block_id, size in tier.resident_blocks():
                 if block_id not in self._entries:
-                    self._entries[block_id] = _IndexEntry(tier, size, refs=0)
+                    dg = tier_digest(block_id) if tier_digest else None
+                    self._entries[block_id] = _IndexEntry(tier, size, refs=0,
+                                                          digest=dg)
                     self._evictable[block_id] = None
                     self.recovered += 1
 
@@ -747,7 +825,8 @@ class CacheIndex:
         self._cond.notify_all()
         return True
 
-    def publish(self, flight: CacheFlight, tier: CacheTier, size: int) -> None:
+    def publish(self, flight: CacheFlight, tier: CacheTier, size: int,
+                digest: str | None = None) -> None:
         """Leader: the block is written to `tier`. The entry is pinned once
         for the leader plus once per registered waiter (each waiter's
         `join` returns an already-pinned hit).
@@ -766,7 +845,7 @@ class CacheIndex:
                 self._cond.notify_all()
                 return
             e = _IndexEntry(tier, size, refs=1 + flight.waiters,
-                            io_class=flight.io_class)
+                            io_class=flight.io_class, digest=digest)
             self._entries[flight.block_id] = e
             self._on_insert(flight.block_id, e)
             flight.done = True
@@ -828,6 +907,37 @@ class CacheIndex:
             # Converge the tier's byte accounting now rather than waiting
             # for the next verify_used() walk.
             e.tier.release(e.size)
+
+    def digest_of(self, block_id: str) -> str | None:
+        """Content digest carried by a resident block's entry (None when
+        absent or minted by a verify="off" producer)."""
+        with self._cond:
+            e = self._entries.get(block_id)
+            return e.digest if e is not None else None
+
+    def quarantine(self, block_id: str) -> bool:
+        """A reader caught the resident copy lying (digest mismatch):
+        evict it NOW and tombstone the entry, regardless of pins — every
+        pinned reader would read the same corrupt bytes, and their
+        subsequent unpins are harmless no-ops (same contract as
+        `invalidate`). Unlike `invalidate` (file already gone) the tier
+        file is deleted here, so a persistent tier cannot re-prime the
+        corrupt block after a restart. Returns True when an entry was
+        actually removed."""
+        with self._cond:
+            e = self._entries.pop(block_id, None)
+            if e is None:
+                return False
+            self._evictable.pop(block_id, None)
+            self._deleting.add(block_id)
+            self.quarantined += 1
+        try:
+            self._delete_from_tier(e.tier, block_id, e.size)
+        finally:
+            with self._cond:
+                self._deleting.discard(block_id)
+                self._cond.notify_all()
+        return True
 
     # -- refcounted eviction -------------------------------------------------
     def unpin(self, block_id: str, *, want_evict: bool = False) -> bool:
@@ -966,6 +1076,7 @@ class CacheIndex:
                 evictions=self.evictions,
                 recovered=self.recovered,
                 reclaims=self.reclaims,
+                quarantined=self.quarantined,
                 resident_blocks=len(self._entries),
                 resident_bytes=sum(e.size for e in self._entries.values()),
                 inflight=len(self._flights),

@@ -62,7 +62,10 @@ class TestProtocol:
         try:
             send_msg(a, {"op": "fetch", "key": "k"}, b"\x00\x01payload")
             header, data = recv_msg(b)
-            assert header == {"op": "fetch", "key": "k"}
+            # send_msg stamps the payload length into the header (the
+            # declared-vs-received cross-check recv_msg enforces).
+            assert header == {"op": "fetch", "key": "k",
+                              "len": len(b"\x00\x01payload")}
             assert data == b"\x00\x01payload"
             send_msg(b, {"ok": True, "status": "hit"})
             header, data = recv_msg(a)
@@ -775,3 +778,219 @@ class TestShardedRestore:
         finally:
             s.close()
             g.close()
+
+
+# --------------------------------------------------------------------------- #
+# Satellites: frame-length cross-check + byzantine siblings
+# --------------------------------------------------------------------------- #
+class _LyingServer:
+    """A raw-socket "sibling" that speaks the wire protocol but lies.
+
+    Modes:
+      * ``len_lie``      — BLOCK frames whose header declares the full
+        span while the prefix frames 3 fewer payload bytes (the
+        misbehaving raw-socket peer of the length-mismatch bugfix);
+      * ``flip``         — true bytes with one byte flipped, digest of
+        the TRUE bytes (in-transit rot: the frame check catches it);
+      * ``alien_digest`` — true bytes attested with a DIFFERENT block's
+        digest (a confused peer serving digests for the wrong block id);
+      * ``wrong_block``  — wrong bytes, self-consistently digested (only
+        the backing-store cross-check of verify="full" can tell);
+      * ``stale``        — bytes from an old generation of the object,
+        self-consistently digested.
+    """
+
+    def __init__(self, truth: dict[str, bytes], mode: str,
+                 stale: dict[str, bytes] | None = None) -> None:
+        import json as _json
+        import struct as _struct
+
+        self._json, self._struct = _json, _struct
+        self.truth = truth
+        self.stale = stale or {}
+        self.mode = mode
+        self.fetches = 0
+        self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._sock.bind(("127.0.0.1", 0))
+        self._sock.listen(16)
+        self.address = self._sock.getsockname()[:2]
+        self._stop = threading.Event()
+        threading.Thread(target=self._accept, daemon=True).start()
+
+    def close(self) -> None:
+        self._stop.set()
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+    def _accept(self) -> None:
+        while not self._stop.is_set():
+            try:
+                conn, _ = self._sock.accept()
+            except OSError:
+                return
+            threading.Thread(target=self._serve, args=(conn,),
+                             daemon=True).start()
+
+    def _serve(self, conn: socket.socket) -> None:
+        from repro.io.integrity import block_digest
+
+        try:
+            while not self._stop.is_set():
+                try:
+                    header, _ = recv_msg(conn)
+                except (StoreError, OSError):
+                    return
+                op = header.get("op")
+                if op == "ping":
+                    send_msg(conn, {"ok": True, "host": 1})
+                    continue
+                if op != "fetch":
+                    send_msg(conn, {"ok": True, "status": "miss"})
+                    continue
+                self.fetches += 1
+                key = header["key"]
+                start, end = int(header["start"]), int(header["end"])
+                true = self.truth[key][start:end]
+                if self.mode == "len_lie":
+                    # Hand-rolled frame: prefix frames a short payload,
+                    # header still promises the full span.
+                    hdr = self._json.dumps(
+                        {"ok": True, "status": "hit", "len": end - start,
+                         "digest": block_digest(true)}).encode()
+                    short = true[:-3]
+                    conn.sendall(self._struct.pack(">II", len(hdr),
+                                                   len(short)) + hdr + short)
+                elif self.mode == "flip":
+                    bad = bytearray(true)
+                    bad[len(bad) // 2] ^= 0xFF
+                    send_msg(conn, {"ok": True, "status": "hit",
+                                    "digest": block_digest(true)},
+                             bytes(bad))
+                elif self.mode == "alien_digest":
+                    send_msg(conn, {"ok": True, "status": "hit",
+                                    "digest": block_digest(b"not" + true)},
+                             true)
+                elif self.mode == "wrong_block":
+                    wrong = bytes(reversed(true))
+                    send_msg(conn, {"ok": True, "status": "hit",
+                                    "digest": block_digest(wrong)}, wrong)
+                elif self.mode == "stale":
+                    old = self.stale[key][start:end]
+                    send_msg(conn, {"ok": True, "status": "hit",
+                                    "digest": block_digest(old)}, old)
+                else:
+                    raise AssertionError(self.mode)
+        finally:
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+
+class TestByzantinePeers:
+    BLOCKSIZE = 4096
+    N_BLOCKS = 16
+
+    def _arena(self, mode, *, verify="edges", miss_limit=2, stale=None):
+        objects = {"obj": payload(self.N_BLOCKS * self.BLOCKSIZE, seed=7)}
+        backing = make_backing(objects)
+        liar = _LyingServer(dict(objects), mode, stale=stale)
+        group = PeerGroup(0, [PeerSpec(0, "", 0), PeerSpec(1, *liar.address)],
+                          miss_limit=miss_limit)
+        store = PeerAwareStore(backing, group)
+        store.verify = verify
+        return objects, backing, liar, group, store
+
+    def _read_all(self, store, objects) -> None:
+        for k, v in objects.items():
+            for lo in range(0, len(v), self.BLOCKSIZE):
+                hi = min(lo + self.BLOCKSIZE, len(v))
+                assert store.get_range(k, lo, hi) == v[lo:hi], (k, lo)
+
+    def _teardown(self, liar, group, store):
+        store.close()
+        liar.close()
+
+    def test_length_lie_rejected_at_the_frame(self):
+        """Satellite regression: pre-fix, recv_msg never cross-checked
+        the declared block length against the bytes received — a lying
+        raw-socket peer delivered a silently short block."""
+        liar = _LyingServer({"k": payload(8192)}, "len_lie")
+        client = PeerClient(liar.address, peer_id=1)
+        try:
+            with pytest.raises(StoreError) as ei:
+                client.fetch("k", 0, 4096, owner=True)
+            assert "length mismatch" in str(ei.value.__cause__)
+        finally:
+            client.close()
+            liar.close()
+
+    def test_length_lie_degrades_and_demotes(self):
+        objects, backing, liar, group, store = self._arena("len_lie")
+        try:
+            self._read_all(store, objects)
+            assert liar.fetches > 0                  # the liar was consulted
+            snap = store.peer_snapshot()
+            assert snap["dead_peer_fallbacks"] > 0   # ...and degraded from
+            assert not group.is_alive(1)             # demoted at miss_limit
+            # Every block still cost exactly one authoritative GET.
+            assert backing.fetches <= 1.2 * self.N_BLOCKS
+        finally:
+            self._teardown(liar, group, store)
+
+    @pytest.mark.parametrize("mode", ["flip", "alien_digest"])
+    def test_frame_digest_lies_detected_in_transport(self, mode):
+        """Wrong bytes under a true digest, or true bytes under a wrong
+        digest: either way the BLOCK frame fails its own attestation at
+        the client — no backing-store round trip needed to detect it."""
+        objects, backing, liar, group, store = self._arena(mode)
+        try:
+            client = group.client_for(1)
+            self._read_all(store, objects)
+            assert client.integrity_failures > 0
+            assert not group.is_alive(1)
+            assert backing.fetches <= 1.2 * self.N_BLOCKS
+        finally:
+            self._teardown(liar, group, store)
+
+    def test_self_consistent_lie_needs_full_verify(self):
+        """A byzantine sibling serving wrong bytes with the wrong bytes'
+        own digest passes every frame check. verify="edges" trusts it —
+        documented; verify="full" cross-checks against the backing store
+        and rejects."""
+        objects, backing, liar, group, store = self._arena(
+            "wrong_block", verify="edges")
+        try:
+            got = store.get_range("obj", 0, self.BLOCKSIZE)
+            if liar.fetches:   # routed to the liar: edges mode is fooled
+                assert got != objects["obj"][:self.BLOCKSIZE]
+        finally:
+            self._teardown(liar, group, store)
+
+        objects, backing, liar, group, store = self._arena(
+            "wrong_block", verify="full")
+        try:
+            self._read_all(store, objects)           # byte-identical
+            snap = store.peer_snapshot()
+            assert snap["integrity_rejects"] > 0
+            assert not group.is_alive(1)
+            # Cross-checks cost real digest reads (honest accounting),
+            # but demotion caps them: amplification stays bounded.
+            assert backing.fetches <= 1.2 * self.N_BLOCKS + 2
+        finally:
+            self._teardown(liar, group, store)
+
+    def test_stale_generation_rejected_under_full_verify(self):
+        old = {"obj": payload(self.N_BLOCKS * self.BLOCKSIZE, seed=1)}
+        objects, backing, liar, group, store = self._arena(
+            "stale", verify="full", stale=old)
+        try:
+            self._read_all(store, objects)           # the NEW generation
+            snap = store.peer_snapshot()
+            assert snap["integrity_rejects"] > 0
+            assert not group.is_alive(1)
+        finally:
+            self._teardown(liar, group, store)

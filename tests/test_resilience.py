@@ -531,8 +531,10 @@ class TestThrottleAimd:
 # --------------------------------------------------------------------------- #
 def chaos_schedule(seed: int = 11) -> FaultSchedule:
     """The standard mixed read-fault script: throttles, transients,
-    stalls, truncations, and mid-transfer cuts (everything survivable —
-    corruption is undetectable without checksums and excluded here)."""
+    stalls, truncations, and mid-transfer cuts. Corruption faults live
+    in `tests/test_integrity.py`: with verify-on-read (the
+    ``IOPolicy.verify`` digest layer) they are detected and healed like
+    any other transient."""
     return (FaultSchedule(seed=seed)
             .throttle(ops=("get_range", "get_ranges"), prob=0.08)
             .transient(ops=("get_range", "get_ranges", "get"), prob=0.08)
