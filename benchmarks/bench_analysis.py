@@ -1,0 +1,73 @@
+"""Static-analyzer benchmark: how long the tier-1 gate itself takes.
+
+The analyzer runs in CI before the test stage, so its wall time is part
+of every developer's feedback loop. This benchmark times a full
+``analyze(src, tests)`` pass plus the lock-graph build and asserts the
+gate's own invariants hold:
+
+  * zero unsuppressed findings over the real tree,
+  * an acyclic lock graph with the engine lock outermost,
+  * the whole pass stays under a CI-scale wall-time budget.
+
+Emits ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.bench_analysis [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+from benchmarks.common import emit
+from repro.analysis import analyze, build_lock_graph, load_project
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), os.pardir))
+# Generous CI-machine bound; the point is catching an accidental
+# complexity blow-up (the call-graph fixpoints are the risky part), not
+# micro-timing.
+FULL_PASS_BUDGET_S = 60.0
+
+
+def main(quick: bool = False) -> None:
+    paths = [os.path.join(REPO_ROOT, "src")]
+    if not quick:
+        paths.append(os.path.join(REPO_ROOT, "tests"))
+
+    t0 = time.perf_counter()
+    project, findings = analyze(paths)
+    t_analyze = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    graph = build_lock_graph(project)
+    t_graph = time.perf_counter() - t0
+
+    n_files = len(project.modules)
+    new = [f for f in findings if not f.suppressed]
+    emit("analysis_full_pass", t_analyze * 1e6,
+         f"files={n_files};findings={len(findings)};new={len(new)}")
+    emit("analysis_lock_graph", t_graph * 1e6,
+         f"locks={len(graph.nodes)};edges={len(graph.edges)}")
+
+    assert new == [], [f.location() for f in new]
+    assert graph.cycles() == [], graph.cycles()
+    order = graph.topo_order()
+    assert order is not None
+    assert t_analyze + t_graph < FULL_PASS_BUDGET_S, (
+        f"analysis pass took {t_analyze + t_graph:.1f}s"
+    )
+
+    # Parse cost alone (project load, no rules) for the breakdown.
+    t0 = time.perf_counter()
+    load_project(paths)
+    t_load = time.perf_counter() - t0
+    emit("analysis_parse_only", t_load * 1e6, f"files={n_files}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="src only (the CI-sized quick pass)")
+    args = ap.parse_args()
+    main(quick=args.smoke)

@@ -119,7 +119,7 @@ def bench_shared_readers(n_readers: int, blocksize: int) -> dict:
                 readers[i] = f
                 assert f.read() == want
                 f.close()
-            except Exception as e:   # noqa: BLE001 — surfaced below
+            except Exception as e:   # repro: allow[RP005] — surfaced below
                 errs.append(e)
 
         threads = [threading.Thread(target=go, args=(i,))

@@ -51,7 +51,7 @@ def _run_parallel(ds, mode: str, files_per_worker: int) -> None:
             for _ in iter_streamlines_multi(f, f.size):
                 pass
             f.close()
-        except BaseException as e:  # noqa: BLE001
+        except BaseException as e:  # repro: allow[RP005] — stashed; asserted after join
             errs.append(e)
 
     threads = [threading.Thread(target=worker, args=(i,)) for i in range(WORKERS)]

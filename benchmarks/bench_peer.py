@@ -74,7 +74,7 @@ def _stream_all(cluster: SimCluster, hosts, blocksize: int,
             finally:
                 f.close()
             assert got == want, f"host {h} bytes diverged"
-        except BaseException as e:  # noqa: BLE001
+        except BaseException as e:  # repro: allow[RP005] — stashed; asserted after join
             errors.append((h, e))
 
     threads = [threading.Thread(target=run, args=(h,)) for h in hosts]
@@ -118,7 +118,7 @@ def bench_amplification(n_hosts: int, n_files: int, file_bytes: int,
             try:
                 start.wait(timeout=60)
                 _stream_all(c, [0], blocksize, want)
-            except BaseException as e:  # noqa: BLE001
+            except BaseException as e:  # repro: allow[RP005] — stashed; asserted after join
                 errors.append(e)
 
         threads = [threading.Thread(target=run, args=(c,)) for c in solos]
@@ -193,7 +193,7 @@ def _restore_all(cluster: SimCluster, n_hosts: int, state,
             for k in state:
                 np.testing.assert_array_equal(np.asarray(restored[k]),
                                               state[k])
-        except BaseException as e:  # noqa: BLE001
+        except BaseException as e:  # repro: allow[RP005] — stashed; asserted after join
             errors.append((h, e))
 
     threads = [threading.Thread(target=run, args=(h,))
@@ -266,7 +266,7 @@ def bench_kill_one(n_hosts: int, n_files: int, file_bytes: int,
             finally:
                 f.close()
             assert first + rest == want, f"survivor {h} bytes diverged"
-        except BaseException as e:  # noqa: BLE001
+        except BaseException as e:  # repro: allow[RP005] — stashed; asserted after join
             errors.append((h, e))
 
     threads = [threading.Thread(target=run, args=(h,)) for h in survivors]

@@ -126,7 +126,7 @@ def bench_backoff(n_clients: int, requests_each: int) -> dict:
                 barrier.wait()
                 for _ in range(requests_each):
                     retrier.call(lambda: link.transfer(0))
-            except Exception as e:  # noqa: BLE001 — surfaced below
+            except Exception as e:  # repro: allow[RP005] — surfaced below
                 errs.append(e)
 
         threads = [threading.Thread(target=client, args=(i,))

@@ -26,6 +26,7 @@ BENCHES = {
     "resilience": "benchmarks.bench_resilience",
     "integrity": "benchmarks.bench_integrity",
     "roofline": "benchmarks.bench_roofline",
+    "analysis": "benchmarks.bench_analysis",
 }
 
 
@@ -51,7 +52,7 @@ def main() -> None:
             failures.append((name, e))
             print(f"bench_{name}_wall,{(time.time() - t0) * 1e6:.0f},"
                   f"status=CLAIM_FAILED:{e}")
-        except Exception as e:  # noqa: BLE001
+        except Exception as e:  # repro: allow[RP005] — recorded as status=ERROR; run exits 1
             failures.append((name, e))
             print(f"bench_{name}_wall,{(time.time() - t0) * 1e6:.0f},"
                   f"status=ERROR:{type(e).__name__}:{e}")

@@ -1,0 +1,67 @@
+"""repro.analysis: project-specific static analysis for the prefetch stack.
+
+Every rule in this package encodes a bug class this codebase has already
+paid for (see CHANGES.md): unjittered retry storms, locks leaked on
+early-exit paths, blocking store I/O under an index lock, fire-and-forget
+threads, and un-length-checked range responses cached as corruption.
+Generic linters cannot see these (the ruff config is deliberately
+Pyflakes-only); this analyzer walks the AST with a lightweight
+intra-project call graph and checks the invariants directly.
+
+Usage::
+
+    python -m repro.analysis src tests              # text report
+    python -m repro.analysis src --format json      # machine-readable
+    python -m repro.analysis src --locks-md LOCKS.md
+
+Suppression convention (one per line, reason required)::
+
+    except Exception:   # repro: allow[RP005] — mover must survive
+
+Rules register through `@register_rule`, mirroring the reader/store
+registries in `repro.io.registry` — adding a rule is writing a function.
+On top of rule findings the analyzer emits a lock-order graph (which
+locks are held at each acquisition site, interprocedurally) and fails on
+any cycle; `LOCKS.md` is its rendered form.
+"""
+
+from __future__ import annotations
+
+from repro.analysis.core import (
+    Finding,
+    Module,
+    Project,
+    analyze,
+    load_project,
+)
+from repro.analysis.lockgraph import LockGraph, build_lock_graph
+from repro.analysis.registry import (
+    RuleSpec,
+    all_rules,
+    get_rule,
+    register_rule,
+)
+from repro.analysis.report import (
+    Baseline,
+    Report,
+    render_json,
+    render_text,
+)
+
+__all__ = [
+    "Baseline",
+    "Finding",
+    "LockGraph",
+    "Module",
+    "Project",
+    "Report",
+    "RuleSpec",
+    "all_rules",
+    "analyze",
+    "build_lock_graph",
+    "get_rule",
+    "load_project",
+    "register_rule",
+    "render_json",
+    "render_text",
+]

@@ -1,0 +1,96 @@
+"""CLI: `python -m repro.analysis src tests [--format json] [...]`.
+
+Exit status is the gate: 0 when there are no new findings and the lock
+graph is acyclic, 1 otherwise, 2 for usage errors. CI runs this before
+the test stage and uploads the JSON report as an artifact.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from repro.analysis.core import analyze
+from repro.analysis.lockgraph import build_lock_graph
+from repro.analysis.registry import all_rules
+from repro.analysis.report import Baseline, Report, render_json, render_text
+
+DEFAULT_BASELINE = "ANALYSIS_BASELINE.json"
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Concurrency- and I/O-invariant static analyzer for "
+                    "the repro prefetch stack.",
+    )
+    ap.add_argument("paths", nargs="*", default=[],
+                    help="files or directories to analyze (default: src)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--output", default=None,
+                    help="also write the report (in --format) to this file")
+    ap.add_argument("--baseline", default=None,
+                    help=f"baseline file (default: {DEFAULT_BASELINE} "
+                         f"if it exists)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="grandfather every current new finding into the "
+                         "baseline file and exit 0")
+    ap.add_argument("--locks-md", default=None, metavar="PATH",
+                    help="render the lock-order graph to PATH (markdown)")
+    ap.add_argument("--no-lock-graph", action="store_true",
+                    help="skip the lock-order graph/cycle gate")
+    ap.add_argument("--list-rules", action="store_true")
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="text format: also show suppressed/baselined")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for spec in all_rules():
+            print(f"{spec.rule_id}  {spec.summary}")
+            print(f"       why: {spec.rationale}")
+        return 0
+
+    paths = args.paths or ["src"]
+    missing = [p for p in paths if not os.path.exists(p)]
+    if missing:
+        print(f"error: no such path(s): {', '.join(missing)}",
+              file=sys.stderr)
+        return 2
+
+    project, findings = analyze(paths)
+
+    lock_graph = None
+    if not args.no_lock_graph:
+        lock_graph = build_lock_graph(project)
+        if args.locks_md:
+            with open(args.locks_md, "w", encoding="utf-8") as fh:
+                fh.write(lock_graph.render_markdown())
+
+    baseline_path = args.baseline
+    if baseline_path is None and os.path.exists(DEFAULT_BASELINE):
+        baseline_path = DEFAULT_BASELINE
+    baseline = (Baseline.load(baseline_path)
+                if baseline_path and os.path.exists(baseline_path) else None)
+
+    report = Report.build(findings, baseline=baseline, lock_graph=lock_graph)
+
+    if args.write_baseline:
+        merged = Baseline.from_findings(report.new + report.baselined)
+        merged.save(args.baseline or DEFAULT_BASELINE)
+        print(f"baseline written: {len(merged.fingerprints)} finding(s) "
+              f"grandfathered -> {args.baseline or DEFAULT_BASELINE}")
+        return 0
+
+    rendered = (render_json(report) if args.format == "json"
+                else render_text(report, verbose=args.verbose))
+    sys.stdout.write(rendered)
+    if args.output:
+        with open(args.output, "w", encoding="utf-8") as fh:
+            fh.write(render_json(report) if args.output.endswith(".json")
+                     else rendered)
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

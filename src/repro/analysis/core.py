@@ -1,0 +1,564 @@
+"""Analysis core: parsed modules, the cross-module project model, and the
+suppression machinery.
+
+The project model is deliberately lightweight — no real type inference,
+just the three resolutions the rules need, mirroring how the codebase is
+actually written:
+
+* class table across every analyzed file (so ``HSMIndex`` finds the
+  ``_cond`` its base ``CacheIndex`` defined);
+* attribute types from ``__init__`` assignments and annotations (so
+  ``self.index.publish(...)`` resolves to ``CacheIndex.publish``);
+* an intra-project call graph over those resolutions, used by RP002's
+  blocking-closure and the lock-order graph. Unresolvable calls are
+  skipped — the analysis under-approximates, never guesses.
+"""
+
+from __future__ import annotations
+
+import ast
+import hashlib
+import os
+import re
+from dataclasses import dataclass, field
+
+# One suppression per line: `# repro: allow[RP005] — reason`. The reason
+# is mandatory — an allow without one does not suppress (and is itself
+# reported, as RP000), so every silenced finding carries its why.
+_SUPPRESS_RE = re.compile(
+    r"#\s*repro:\s*allow\[([A-Za-z0-9_,\s]+)\]\s*(?:[—–-]{1,2}\s*(\S.*))?"
+)
+
+_LOCK_FACTORIES = {"Lock", "RLock", "Condition"}
+
+
+@dataclass
+class Finding:
+    rule: str
+    path: str                  # path as given on the command line
+    line: int
+    col: int
+    message: str
+    snippet: str = ""
+    suppressed: bool = False
+    suppress_reason: str | None = None
+
+    def location(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}"
+
+    def fingerprint(self) -> str:
+        """Stable identity for the baseline: rule + file + the source
+        text of the flagged line (so renumbering a file does not churn
+        the baseline, but editing the flagged code does)."""
+        basis = f"{self.rule}|{_normpath(self.path)}|{self.snippet.strip()}"
+        return hashlib.sha1(basis.encode()).hexdigest()[:16]
+
+    def to_dict(self) -> dict:
+        return {
+            "rule": self.rule,
+            "path": _normpath(self.path),
+            "line": self.line,
+            "col": self.col,
+            "message": self.message,
+            "snippet": self.snippet.strip(),
+            "fingerprint": self.fingerprint(),
+            "suppressed": self.suppressed,
+            "suppress_reason": self.suppress_reason,
+        }
+
+
+def _normpath(path: str) -> str:
+    return path.replace(os.sep, "/")
+
+
+@dataclass
+class Suppression:
+    ids: set[str]              # rule IDs; {"*"} allows everything
+    reason: str | None
+    line: int                  # the line the comment sits on
+
+    def covers(self, rule_id: str) -> bool:
+        return bool(self.reason) and ("*" in self.ids or rule_id in self.ids)
+
+
+class Module:
+    """One parsed source file with parent links and suppression map."""
+
+    def __init__(self, path: str, source: str) -> None:
+        self.path = path
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        for node in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(node):
+                child._repro_parent = node  # type: ignore[attr-defined]
+        #: effective-line -> Suppression. A comment on a code line covers
+        #: that line; a comment-only line covers the next code line.
+        self.suppressions: dict[int, Suppression] = {}
+        self.bad_suppressions: list[Suppression] = []
+        self._scan_suppressions()
+
+    # -- suppressions -------------------------------------------------------
+    def _scan_suppressions(self) -> None:
+        pending: Suppression | None = None
+        for lineno, text in enumerate(self.lines, start=1):
+            stripped = text.strip()
+            m = _SUPPRESS_RE.search(text)
+            if m:
+                ids = {s.strip() for s in m.group(1).split(",") if s.strip()}
+                sup = Suppression(ids=ids, reason=m.group(2), line=lineno)
+                if not sup.reason:
+                    self.bad_suppressions.append(sup)
+                elif stripped.startswith("#"):
+                    pending = sup          # standalone comment: covers next code line
+                else:
+                    self.suppressions[lineno] = sup
+                continue
+            if pending is not None and stripped and not stripped.startswith("#"):
+                self.suppressions[lineno] = pending
+                pending = None
+
+    def suppression_at(self, line: int, rule_id: str) -> Suppression | None:
+        sup = self.suppressions.get(line)
+        if sup is not None and sup.covers(rule_id):
+            return sup
+        return None
+
+    # -- helpers ------------------------------------------------------------
+    def line_text(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1]
+        return ""
+
+    def parents(self, node: ast.AST):
+        cur = getattr(node, "_repro_parent", None)
+        while cur is not None:
+            yield cur
+            cur = getattr(cur, "_repro_parent", None)
+
+    def enclosing_function(self, node: ast.AST) -> ast.AST | None:
+        for p in self.parents(node):
+            if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return p
+        return None
+
+    def finding(self, rule: str, node: ast.AST, message: str) -> Finding:
+        line = getattr(node, "lineno", 1)
+        col = getattr(node, "col_offset", 0)
+        return Finding(rule=rule, path=self.path, line=line, col=col,
+                       message=message, snippet=self.line_text(line))
+
+    @property
+    def is_test(self) -> bool:
+        p = _normpath(self.path)
+        return "/tests/" in p or os.path.basename(p).startswith("test_")
+
+
+# ---------------------------------------------------------------------------
+# Project model: classes, attribute types, call resolution.
+# ---------------------------------------------------------------------------
+
+@dataclass
+class FuncInfo:
+    module: Module
+    node: ast.FunctionDef | ast.AsyncFunctionDef
+    qualname: str                       # "Class.method" or "func"
+    cls: "ClassInfo | None" = None
+
+    @property
+    def key(self) -> tuple[str, str]:
+        return (self.module.path, self.qualname)
+
+
+@dataclass
+class ClassInfo:
+    name: str
+    module: Module
+    node: ast.ClassDef
+    bases: list[str] = field(default_factory=list)
+    methods: dict[str, FuncInfo] = field(default_factory=dict)
+    attr_types: dict[str, str] = field(default_factory=dict)
+    lock_attrs: dict[str, str] = field(default_factory=dict)  # attr -> kind
+    lock_sites: dict[str, tuple[str, int]] = field(default_factory=dict)
+
+
+def _ann_class_name(node: ast.AST | None) -> str | None:
+    """Best-effort class name out of an annotation: handles `X`, `m.X`,
+    `X | None`, `Optional[X]`, and quoted forms stay untouched (the repo
+    uses `from __future__ import annotations`, so annotations are real
+    AST nodes). Containers resolve to None — element types are not the
+    receiver's type."""
+    if node is None:
+        return None
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.BinOp) and isinstance(node.op, ast.BitOr):
+        return _ann_class_name(node.left) or _ann_class_name(node.right)
+    if isinstance(node, ast.Subscript):
+        base = _ann_class_name(node.value)
+        if base == "Optional":
+            return _ann_class_name(node.slice)
+        return None
+    if isinstance(node, ast.Constant) and node.value is None:
+        return None
+    return None
+
+
+def _lock_kind_of(value: ast.AST) -> str | None:
+    """'Lock' | 'RLock' | 'Condition' if `value` constructs one."""
+    if not isinstance(value, ast.Call):
+        return None
+    f = value.func
+    if isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name) \
+            and f.value.id == "threading" and f.attr in _LOCK_FACTORIES:
+        return f.attr
+    if isinstance(f, ast.Name) and f.id in _LOCK_FACTORIES:
+        return f.id
+    return None
+
+
+class Project:
+    """Cross-module view: class table, module-level locks, call graph."""
+
+    def __init__(self, modules: list[Module]) -> None:
+        self.modules = modules
+        self.classes: dict[str, ClassInfo] = {}
+        self.module_funcs: dict[tuple[str, str], FuncInfo] = {}
+        self.module_locks: dict[tuple[str, str], str] = {}  # (path, name) -> kind
+        self.funcs: dict[tuple[str, str], FuncInfo] = {}
+        for mod in modules:
+            self._index_module(mod)
+
+    # -- indexing -----------------------------------------------------------
+    def _index_module(self, mod: Module) -> None:
+        for node in mod.tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                fi = FuncInfo(module=mod, node=node, qualname=node.name)
+                self.module_funcs[(mod.path, node.name)] = fi
+                self.funcs[fi.key] = fi
+            elif isinstance(node, ast.ClassDef):
+                self._index_class(mod, node)
+            elif isinstance(node, ast.Assign):
+                kind = _lock_kind_of(node.value)
+                if kind:
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            self.module_locks[(mod.path, t.id)] = kind
+
+    def _index_class(self, mod: Module, node: ast.ClassDef) -> None:
+        info = ClassInfo(
+            name=node.name, module=mod, node=node,
+            bases=[b for b in (_ann_class_name(x) for x in node.bases) if b],
+        )
+        for item in node.body:
+            if isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                fi = FuncInfo(module=mod, node=item,
+                              qualname=f"{node.name}.{item.name}", cls=info)
+                info.methods[item.name] = fi
+                self.funcs[fi.key] = fi
+                self._scan_method_attrs(info, item)
+            elif isinstance(item, ast.AnnAssign) and isinstance(item.target, ast.Name):
+                t = _ann_class_name(item.annotation)
+                if t:
+                    info.attr_types[item.target.id] = t
+        # Later definition wins (names are effectively unique repo-wide).
+        self.classes[node.name] = info
+
+    def _scan_method_attrs(self, info: ClassInfo,
+                           fn: ast.FunctionDef | ast.AsyncFunctionDef) -> None:
+        param_ann = {a.arg: _ann_class_name(a.annotation)
+                     for a in fn.args.args + fn.args.kwonlyargs}
+        for node in ast.walk(fn):
+            target: ast.AST | None = None
+            value: ast.AST | None = None
+            if isinstance(node, ast.Assign) and len(node.targets) == 1:
+                target, value = node.targets[0], node.value
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                target, value = node.target, node.value
+            if not (isinstance(target, ast.Attribute)
+                    and isinstance(target.value, ast.Name)
+                    and target.value.id == "self"):
+                continue
+            attr = target.attr
+            kind = _lock_kind_of(value) if value is not None else None
+            if kind:
+                info.lock_attrs.setdefault(attr, kind)
+                info.lock_sites.setdefault(
+                    attr, (info.module.path, getattr(node, "lineno", 0)))
+                continue
+            if isinstance(node, ast.AnnAssign):
+                t = _ann_class_name(node.annotation)
+                if t:
+                    info.attr_types.setdefault(attr, t)
+                    continue
+            # self.x = SomeClass(...) / self.x = param (typed by annotation);
+            # `x if x is not None else Default()` and `x or Default()`
+            # unwrap to their candidate expressions.
+            candidates: list[ast.AST] = [value] if value is not None else []
+            if isinstance(value, ast.IfExp):
+                candidates = [value.body, value.orelse]
+            elif isinstance(value, ast.BoolOp):
+                candidates = list(value.values)
+            for cand in candidates:
+                t: str | None = None
+                if isinstance(cand, ast.Call):
+                    t = _ann_class_name(cand.func)
+                    if t and not (t in self.classes or t[:1].isupper()):
+                        t = None
+                elif isinstance(cand, ast.Name):
+                    t = param_ann.get(cand.id)
+                if t:
+                    info.attr_types.setdefault(attr, t)
+                    break
+
+    # -- class-hierarchy queries -------------------------------------------
+    def mro(self, cls_name: str) -> list[ClassInfo]:
+        """Breadth-first base walk through the analyzed class table."""
+        out: list[ClassInfo] = []
+        seen: set[str] = set()
+        queue = [cls_name]
+        while queue:
+            name = queue.pop(0)
+            if name in seen:
+                continue
+            seen.add(name)
+            info = self.classes.get(name)
+            if info is None:
+                continue
+            out.append(info)
+            queue.extend(info.bases)
+        return out
+
+    def resolve_method(self, cls_name: str, method: str) -> FuncInfo | None:
+        for info in self.mro(cls_name):
+            if method in info.methods:
+                return info.methods[method]
+        return None
+
+    def attr_type(self, cls_name: str, attr: str) -> str | None:
+        for info in self.mro(cls_name):
+            if attr in info.attr_types:
+                return info.attr_types[attr]
+        return None
+
+    def lock_node(self, cls_name: str, attr: str) -> str | None:
+        """Canonical lock name `Definer._attr` — the class whose __init__
+        created the lock, so `HSMIndex._cond` normalizes to
+        `CacheIndex._cond`."""
+        for info in self.mro(cls_name):
+            if attr in info.lock_attrs:
+                return f"{info.name}.{attr}"
+        return None
+
+    def lock_kind(self, lock_node: str) -> str | None:
+        cls, _, attr = lock_node.partition(".")
+        info = self.classes.get(cls)
+        if info is not None and attr in info.lock_attrs:
+            return info.lock_attrs[attr]
+        for (_, name), kind in self.module_locks.items():
+            if lock_node.endswith(f".{name}"):
+                return kind
+        return None
+
+    def is_subclass_of(self, cls_name: str, base: str) -> bool:
+        return any(info.name == base for info in self.mro(cls_name))
+
+    # -- expression resolution ---------------------------------------------
+    def local_types(self, fi: FuncInfo) -> dict[str, str]:
+        """Parameter annotations + trivially-typed locals of a function."""
+        types: dict[str, str] = {}
+        args = fi.node.args
+        for a in args.args + args.kwonlyargs + args.posonlyargs:
+            t = _ann_class_name(a.annotation)
+            if t:
+                types[a.arg] = t
+        for node in ast.walk(fi.node):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                name = node.targets[0].id
+                if isinstance(node.value, ast.Call):
+                    t = _ann_class_name(node.value.func)
+                    if t and t in self.classes:
+                        types.setdefault(name, t)
+                elif isinstance(node.value, ast.Attribute) \
+                        and isinstance(node.value.value, ast.Name) \
+                        and node.value.value.id == "self" and fi.cls:
+                    t = self.attr_type(fi.cls.name, node.value.attr)
+                    if t:
+                        types.setdefault(name, t)
+        return types
+
+    def receiver_type(self, fi: FuncInfo, expr: ast.AST) -> str | None:
+        """Type of a call receiver: self / self.attr / typed name."""
+        if isinstance(expr, ast.Name):
+            if expr.id == "self" and fi.cls:
+                return fi.cls.name
+            return self.local_types(fi).get(expr.id)
+        if isinstance(expr, ast.Attribute) and isinstance(expr.value, ast.Name):
+            base = self.receiver_type(fi, expr.value)
+            if base:
+                return self.attr_type(base, expr.attr)
+        return None
+
+    def resolve_call(self, fi: FuncInfo, call: ast.Call) -> FuncInfo | None:
+        f = call.func
+        if isinstance(f, ast.Name):
+            return self.module_funcs.get((fi.module.path, f.id))
+        if isinstance(f, ast.Attribute):
+            recv_type = self.receiver_type(fi, f.value)
+            if recv_type:
+                return self.resolve_method(recv_type, f.attr)
+        return None
+
+    def resolve_lock_expr(self, fi: FuncInfo, expr: ast.AST) -> str | None:
+        """Name of the lock `expr` denotes, or None if it is not one.
+
+        `self._lock` -> `Definer._lock`; a module-level lock var ->
+        `module.VAR`; a local constructed in this function ->
+        `qualname.<local VAR>` (kept out of the cross-function graph)."""
+        if isinstance(expr, ast.Attribute) and isinstance(expr.value, ast.Name):
+            if expr.value.id == "self" and fi.cls:
+                return self.lock_node(fi.cls.name, expr.attr)
+            base = self.receiver_type(fi, expr.value)
+            if base:
+                return self.lock_node(base, expr.attr)
+        if isinstance(expr, ast.Attribute) and isinstance(expr.value, ast.Attribute):
+            base = self.receiver_type(fi, expr.value)
+            if base:
+                return self.lock_node(base, expr.attr)
+        if isinstance(expr, ast.Name):
+            modbase = os.path.splitext(os.path.basename(fi.module.path))[0]
+            if (fi.module.path, expr.id) in self.module_locks:
+                return f"{modbase}.{expr.id}"
+            for node in ast.walk(fi.node):
+                if isinstance(node, ast.Assign) \
+                        and len(node.targets) == 1 \
+                        and isinstance(node.targets[0], ast.Name) \
+                        and node.targets[0].id == expr.id \
+                        and _lock_kind_of(node.value):
+                    return f"{fi.qualname}.<local {expr.id}>"
+        return None
+
+
+# ---------------------------------------------------------------------------
+# Held-lock walking (shared by RP002 and the lock-order graph).
+# ---------------------------------------------------------------------------
+
+_SCOPE_NODES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda, ast.ClassDef)
+
+
+def held_walk(fi: FuncInfo, project: Project):
+    """Walk one function body tracking which locks are held lexically.
+
+    Yields ``("acquire", lock_name, node, held_before)`` for every
+    ``with``-acquired lock and ``("call", call_node, held)`` for every
+    call site. Nested function/lambda/class bodies are skipped — they
+    run later, not under the current locks."""
+
+    def walk(node: ast.AST, held: tuple[str, ...]):
+        if isinstance(node, _SCOPE_NODES):
+            return
+        if isinstance(node, ast.With):
+            inner = held
+            for item in node.items:
+                lock = project.resolve_lock_expr(fi, item.context_expr)
+                if lock is not None:
+                    yield ("acquire", lock, item.context_expr, inner)
+                    inner = inner + (lock,)
+                else:
+                    yield from walk(item.context_expr, inner)
+            for stmt in node.body:
+                yield from walk(stmt, inner)
+            return
+        if isinstance(node, ast.Call):
+            yield ("call", node, held)
+        for child in ast.iter_child_nodes(node):
+            yield from walk(child, held)
+
+    for stmt in fi.node.body:
+        yield from walk(stmt, ())
+
+
+def iter_calls_shallow(node: ast.AST):
+    """Calls lexically inside `node`, skipping nested scope bodies."""
+    if isinstance(node, ast.Call):
+        yield node
+    for child in ast.iter_child_nodes(node):
+        if isinstance(child, _SCOPE_NODES):
+            continue
+        yield from iter_calls_shallow(child)
+
+
+# ---------------------------------------------------------------------------
+# Entry points.
+# ---------------------------------------------------------------------------
+
+def collect_files(paths: list[str]) -> list[str]:
+    out: list[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            out.append(p)
+            continue
+        for root, dirs, files in os.walk(p):
+            dirs[:] = sorted(d for d in dirs
+                             if d not in ("__pycache__", ".git"))
+            out.extend(os.path.join(root, f) for f in sorted(files)
+                       if f.endswith(".py"))
+    return out
+
+
+def load_project(paths: list[str]) -> tuple[Project, list[Finding]]:
+    """Parse every .py under `paths`; syntax errors become findings, not
+    crashes (a broken file must fail the gate, not the tool)."""
+    modules: list[Module] = []
+    errors: list[Finding] = []
+    for path in collect_files(paths):
+        try:
+            with open(path, encoding="utf-8") as fh:
+                source = fh.read()
+            modules.append(Module(path, source))
+        except (SyntaxError, UnicodeDecodeError) as e:
+            errors.append(Finding(
+                rule="RP000", path=path,
+                line=getattr(e, "lineno", 1) or 1, col=0,
+                message=f"unparseable file: {e}",
+            ))
+    return Project(modules), errors
+
+
+def analyze(paths: list[str]) -> tuple[Project, list[Finding]]:
+    """Run every registered rule over `paths`. Returns all findings with
+    `suppressed` already resolved against in-source allow comments;
+    RP000 findings report malformed suppressions (missing reason)."""
+    from repro.analysis.registry import all_rules
+
+    project, findings = load_project(paths)
+    for mod in project.modules:
+        for sup in mod.bad_suppressions:
+            f = Finding(
+                rule="RP000", path=mod.path, line=sup.line, col=0,
+                message="suppression without a reason: write "
+                        "`# repro: allow[RULE-ID] — reason`",
+                snippet=mod.line_text(sup.line),
+            )
+            findings.append(f)
+        for spec in all_rules():
+            if not spec.applies_to(mod.path):
+                continue
+            for f in spec.fn(mod, project):
+                sup = mod.suppression_at(f.line, f.rule)
+                if sup is not None:
+                    f.suppressed = True
+                    f.suppress_reason = sup.reason
+                findings.append(f)
+    seen: set[tuple[str, str, int, int, str]] = set()
+    unique: list[Finding] = []
+    for f in findings:
+        key = (f.rule, f.path, f.line, f.col, f.message)
+        if key not in seen:
+            seen.add(key)
+            unique.append(f)
+    unique.sort(key=lambda f: (f.path, f.line, f.rule))
+    return project, unique

@@ -1,0 +1,78 @@
+"""Rule registry: `@register_rule`, mirroring `repro.io.registry`.
+
+A rule is a plain function ``(module, project) -> list[Finding]``; the
+decorator attaches the ID/summary/rationale and files it in the global
+table, exactly the way prefetch engines register under their policy
+names and stores under their URI schemes. `python -m repro.analysis
+--list-rules` renders this table; README's rule catalogue is generated
+from the same metadata so docs cannot drift from the code.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, Callable
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard for type hints
+    from repro.analysis.core import Finding, Module, Project
+
+RuleFn = Callable[["Module", "Project"], "list[Finding]"]
+
+
+@dataclass(frozen=True)
+class RuleSpec:
+    """One registered rule: the check plus the history that justifies it."""
+
+    rule_id: str              # "RP001"
+    summary: str              # one-line description of the invariant
+    rationale: str            # the historical bug class this rule encodes
+    fn: RuleFn
+    #: Path fragments this rule is restricted to ("tests" for RP008);
+    #: empty = applies everywhere.
+    only_paths: tuple[str, ...] = field(default=())
+    #: Path fragments this rule never applies to (io/retry.py for RP004).
+    skip_paths: tuple[str, ...] = field(default=())
+
+    def applies_to(self, relpath: str) -> bool:
+        path = relpath.replace("\\", "/")
+        if self.only_paths and not any(p in path for p in self.only_paths):
+            return False
+        return not any(p in path for p in self.skip_paths)
+
+
+_RULES: dict[str, RuleSpec] = {}
+
+
+def register_rule(
+    rule_id: str,
+    summary: str,
+    *,
+    rationale: str,
+    only_paths: tuple[str, ...] = (),
+    skip_paths: tuple[str, ...] = (),
+) -> Callable[[RuleFn], RuleFn]:
+    """Class decorator-style registration: ``@register_rule("RP001", ...)``."""
+
+    def deco(fn: RuleFn) -> RuleFn:
+        if rule_id in _RULES:
+            raise ValueError(f"duplicate rule id: {rule_id}")
+        _RULES[rule_id] = RuleSpec(
+            rule_id=rule_id, summary=summary, rationale=rationale, fn=fn,
+            only_paths=only_paths, skip_paths=skip_paths,
+        )
+        return fn
+
+    return deco
+
+
+def all_rules() -> list[RuleSpec]:
+    """Registered rules, sorted by ID (imports the rule module on demand)."""
+    import repro.analysis.rules  # noqa: F401 - registration side effect
+
+    return [_RULES[k] for k in sorted(_RULES)]
+
+
+def get_rule(rule_id: str) -> RuleSpec:
+    import repro.analysis.rules  # noqa: F401 - registration side effect
+
+    return _RULES[rule_id]

@@ -1,0 +1,138 @@
+"""Reporting: text/JSON renderers, the grandfathering baseline, and the
+Report object the CLI, benchmark, and tests all consume.
+
+The baseline is a checked-in JSON file of finding fingerprints
+(rule + file + flagged source text). Findings in it are reported but do
+not fail the gate — the mechanism for landing the analyzer against a
+tree with known debt, then ratcheting the debt down without ever letting
+it grow. This repo's baseline is empty on purpose: every first-run
+finding was fixed or suppressed with a reason instead.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+
+from repro.analysis.core import Finding
+from repro.analysis.lockgraph import LockGraph
+
+BASELINE_VERSION = 1
+
+
+@dataclass
+class Baseline:
+    fingerprints: dict[str, dict] = field(default_factory=dict)
+
+    @classmethod
+    def load(cls, path: str) -> "Baseline":
+        with open(path, encoding="utf-8") as fh:
+            raw = json.load(fh)
+        if raw.get("version") != BASELINE_VERSION:
+            raise ValueError(
+                f"baseline {path}: unsupported version {raw.get('version')!r}"
+            )
+        return cls(fingerprints={f["fingerprint"]: f
+                                 for f in raw.get("findings", [])})
+
+    @classmethod
+    def from_findings(cls, findings: list[Finding]) -> "Baseline":
+        return cls(fingerprints={
+            f.fingerprint(): {
+                "fingerprint": f.fingerprint(),
+                "rule": f.rule,
+                "path": f.path.replace("\\", "/"),
+                "snippet": f.snippet.strip(),
+                "message": f.message,
+            }
+            for f in findings
+        })
+
+    def save(self, path: str) -> None:
+        doc = {
+            "version": BASELINE_VERSION,
+            "findings": sorted(self.fingerprints.values(),
+                               key=lambda f: (f["path"], f["rule"],
+                                              f["snippet"])),
+        }
+        with open(path, "w", encoding="utf-8") as fh:
+            json.dump(doc, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+
+    def covers(self, finding: Finding) -> bool:
+        return finding.fingerprint() in self.fingerprints
+
+
+@dataclass
+class Report:
+    """The gate's verdict: what fired, what was silenced, and why."""
+
+    new: list[Finding] = field(default_factory=list)         # fail the gate
+    baselined: list[Finding] = field(default_factory=list)   # grandfathered
+    suppressed: list[Finding] = field(default_factory=list)  # annotated
+    lock_graph: LockGraph | None = None
+
+    @classmethod
+    def build(cls, findings: list[Finding], *,
+              baseline: Baseline | None = None,
+              lock_graph: LockGraph | None = None) -> "Report":
+        rep = cls(lock_graph=lock_graph)
+        for f in findings:
+            if f.suppressed:
+                rep.suppressed.append(f)
+            elif baseline is not None and baseline.covers(f):
+                rep.baselined.append(f)
+            else:
+                rep.new.append(f)
+        return rep
+
+    @property
+    def cycles(self) -> list[list[str]]:
+        return self.lock_graph.cycles() if self.lock_graph else []
+
+    @property
+    def ok(self) -> bool:
+        return not self.new and not self.cycles
+
+    def to_dict(self) -> dict:
+        return {
+            "ok": self.ok,
+            "summary": {
+                "new": len(self.new),
+                "baselined": len(self.baselined),
+                "suppressed": len(self.suppressed),
+                "lock_cycles": len(self.cycles),
+            },
+            "findings": [f.to_dict() for f in self.new],
+            "baselined": [f.to_dict() for f in self.baselined],
+            "suppressed": [f.to_dict() for f in self.suppressed],
+            "lock_graph": (self.lock_graph.to_dict()
+                           if self.lock_graph else None),
+        }
+
+
+def render_json(report: Report) -> str:
+    return json.dumps(report.to_dict(), indent=2) + "\n"
+
+
+def render_text(report: Report, *, verbose: bool = False) -> str:
+    lines: list[str] = []
+    for f in report.new:
+        lines.append(f"{f.location()}: {f.rule}: {f.message}")
+        if f.snippet.strip():
+            lines.append(f"    {f.snippet.strip()}")
+    if verbose:
+        for f in report.baselined:
+            lines.append(f"{f.location()}: {f.rule}: [baselined] {f.message}")
+        for f in report.suppressed:
+            lines.append(f"{f.location()}: {f.rule}: "
+                         f"[allowed: {f.suppress_reason}]")
+    for cyc in report.cycles:
+        lines.append("LOCK CYCLE: " + " -> ".join(cyc + [cyc[0]]))
+    n, s, b = len(report.new), len(report.suppressed), len(report.baselined)
+    lines.append(
+        f"{n} finding(s), {s} suppressed, {b} baselined, "
+        f"{len(report.cycles)} lock cycle(s)"
+        + (" — OK" if report.ok else " — FAIL")
+    )
+    return "\n".join(lines) + "\n"

@@ -1,0 +1,644 @@
+"""The rule set. Each rule encodes one bug class this repo has already
+shipped and fixed (rationale strings cite the history); see README's
+"Static analysis" section for the catalogue.
+
+Rules are deliberately heuristic: they under-approximate (unresolvable
+receivers and calls are skipped) so a finding is worth reading, and the
+suppression comment exists for the cases where the code is right and
+the rule cannot see why.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import (
+    Finding,
+    FuncInfo,
+    Module,
+    Project,
+    held_walk,
+    iter_calls_shallow,
+)
+from repro.analysis.registry import register_rule
+
+
+def _module_funcs(module: Module, project: Project) -> list[FuncInfo]:
+    return [fi for fi in project.funcs.values() if fi.module is module]
+
+
+def _call_name(call: ast.Call) -> str:
+    f = call.func
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    if isinstance(f, ast.Name):
+        return f.id
+    return "<call>"
+
+
+def _recv_name(expr: ast.AST) -> str:
+    """Terminal name of a call receiver: `self.store` -> "store"."""
+    if isinstance(expr, ast.Attribute):
+        return expr.attr
+    if isinstance(expr, ast.Name):
+        return expr.id
+    return ""
+
+
+def _shallow(node: ast.AST):
+    """Walk a subtree without descending into nested scopes."""
+    yield node
+    for child in ast.iter_child_nodes(node):
+        if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Lambda, ast.ClassDef)):
+            continue
+        yield from _shallow(child)
+
+
+# ---------------------------------------------------------------------------
+# RP001: bare lock.acquire()
+# ---------------------------------------------------------------------------
+
+@register_rule(
+    "RP001",
+    "bare lock.acquire() without a with-block or try/finally release",
+    rationale="PR 4 fixed locks leaked on early-exit paths in the rolling "
+              "scheduler; an acquire whose release is not on every exit "
+              "path wedges all readers behind a dead flight.",
+)
+def rule_bare_acquire(module: Module, project: Project) -> list[Finding]:
+    out: list[Finding] = []
+    for fi in _module_funcs(module, project):
+        # Locks released inside ANY finally block of this function.
+        safe: set[str] = set()
+        for node in ast.walk(fi.node):
+            if not isinstance(node, ast.Try):
+                continue
+            for stmt in node.finalbody:
+                for call in iter_calls_shallow(stmt):
+                    f = call.func
+                    if isinstance(f, ast.Attribute) and f.attr == "release":
+                        lock = project.resolve_lock_expr(fi, f.value)
+                        if lock:
+                            safe.add(lock)
+        for call in iter_calls_shallow(fi.node):
+            f = call.func
+            if not (isinstance(f, ast.Attribute) and f.attr == "acquire"):
+                continue
+            lock = project.resolve_lock_expr(fi, f.value)
+            if lock is None or lock in safe:
+                continue
+            out.append(module.finding(
+                "RP001", call,
+                f"`{lock}.acquire()` with no matching release in a "
+                f"finally block — use `with {_recv_name(f.value)}:` or "
+                f"try/finally so every exit path releases it",
+            ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RP002: blocking I/O while holding a lock
+# ---------------------------------------------------------------------------
+
+_SOCKET_BLOCKING = {"recv", "recv_into", "recvfrom", "sendall", "accept",
+                    "connect", "create_connection"}
+_STORE_BLOCKING = {"get_range", "get_ranges", "get_range_verified",
+                   "get_ranges_verified", "digest_range", "start_multipart"}
+_STORE_NAMED = {"get", "put", "delete"}          # only on store-ish receivers
+_TIER_BLOCKING = {"read", "write", "delete"}     # only on tier receivers
+_BLOCKING_FUNCS = {"recv_msg", "send_msg"}       # peer frame I/O
+
+
+def _blocking_desc(fi: FuncInfo, project: Project,
+                   call: ast.Call) -> str | None:
+    f = call.func
+    if isinstance(f, ast.Name):
+        if f.id in _BLOCKING_FUNCS:
+            return f"socket I/O {f.id}()"
+        return None
+    if not isinstance(f, ast.Attribute):
+        return None
+    attr, recv = f.attr, f.value
+    rname = _recv_name(recv)
+    if attr == "sleep" and rname == "time":
+        return "time.sleep()"
+    if attr in _SOCKET_BLOCKING and attr != "connect" or (
+            attr == "connect" and ("sock" in rname or "conn" in rname)):
+        if rname == "time":
+            return None
+        return f"socket I/O .{attr}()"
+    if attr in _STORE_BLOCKING:
+        return f"store I/O .{attr}()"
+    if attr in _STORE_NAMED and (rname in ("inner",) or rname.endswith("store")):
+        return f"store I/O {rname}.{attr}()"
+    if attr in _TIER_BLOCKING:
+        rtype = project.receiver_type(fi, recv)
+        tierish = (rtype is not None
+                   and project.is_subclass_of(rtype, "CacheTier"))
+        if tierish or rname == "tier" or rname.endswith("_tier"):
+            return f"tier I/O .{attr}()"
+    if attr == "fetch" and (rname.endswith("client")
+                            or project.receiver_type(fi, recv) == "PeerClient"):
+        return "peer RPC .fetch()"
+    return None
+
+
+def _blocking_closures(project: Project) -> dict:
+    """function key -> {description: via-qualname-or-None}, the fixpoint
+    of "may this function block?" over the resolved call graph."""
+    direct: dict = {}
+    callees: dict = {}
+    for key, fi in project.funcs.items():
+        found: dict = {}
+        outs = set()
+        for call in iter_calls_shallow(fi.node):
+            desc = _blocking_desc(fi, project, call)
+            if desc:
+                found.setdefault(desc, None)
+            target = project.resolve_call(fi, call)
+            if target is not None and target.key != key:
+                outs.add(target.key)
+        direct[key] = found
+        callees[key] = outs
+    closure = {k: dict(v) for k, v in direct.items()}
+    changed = True
+    while changed:
+        changed = False
+        for key, outs in callees.items():
+            mine = closure[key]
+            qual = {k2: project.funcs[k2].qualname for k2 in outs}
+            for callee in outs:
+                for desc, via in closure.get(callee, {}).items():
+                    if desc not in mine:
+                        mine[desc] = via or qual[callee]
+                        changed = True
+    return closure
+
+
+@register_rule(
+    "RP002",
+    "blocking call (store/tier/socket I/O, time.sleep) while holding a lock",
+    rationale="PR 4's scheduler rewrite moved store GETs out from under "
+              "the index lock after profiling showed every reader "
+              "serialized behind one fetch; I/O under a lock turns "
+              "concurrency into a queue.",
+)
+def rule_blocking_under_lock(module: Module,
+                             project: Project) -> list[Finding]:
+    out: list[Finding] = []
+    closures = getattr(project, "_rp002_closures", None)
+    if closures is None:
+        closures = _blocking_closures(project)
+        project._rp002_closures = closures  # type: ignore[attr-defined]
+    for fi in _module_funcs(module, project):
+        for ev in held_walk(fi, project):
+            if ev[0] != "call":
+                continue
+            _, call, held = ev
+            if not held:
+                continue
+            lock = held[-1]
+            desc = _blocking_desc(fi, project, call)
+            if desc is not None:
+                out.append(module.finding(
+                    "RP002", call,
+                    f"{desc} inside `with {lock}:` — move the I/O out of "
+                    f"the critical section (tombstone/copy-then-release)",
+                ))
+                continue
+            target = project.resolve_call(fi, call)
+            if target is None or target.key == fi.key:
+                continue
+            blocked = closures.get(target.key, {})
+            if blocked:
+                desc, via = next(iter(sorted(blocked.items())))
+                chain = f" via {via}()" if via else ""
+                out.append(module.finding(
+                    "RP002", call,
+                    f"call to {target.qualname}() may block ({desc}"
+                    f"{chain}) while holding `{lock}`",
+                ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RP003: Condition.wait() without a while-loop predicate
+# ---------------------------------------------------------------------------
+
+def _condition_receiver(fi: FuncInfo, project: Project,
+                        expr: ast.AST) -> str | None:
+    """Lock name if `expr` denotes a threading.Condition."""
+    lock = project.resolve_lock_expr(fi, expr)
+    if lock is None:
+        return None
+    if "<local " in lock:
+        # Local: find the constructing assignment to read its kind.
+        name = _recv_name(expr)
+        for node in ast.walk(fi.node):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name) \
+                    and node.targets[0].id == name \
+                    and isinstance(node.value, ast.Call):
+                f = node.value.func
+                cname = f.attr if isinstance(f, ast.Attribute) else \
+                    f.id if isinstance(f, ast.Name) else ""
+                return lock if cname == "Condition" else None
+        return None
+    return lock if project.lock_kind(lock) == "Condition" else None
+
+
+@register_rule(
+    "RP003",
+    "Condition.wait() not guarded by a while-loop predicate",
+    rationale="Spurious wakeups and stolen notifications are real: the "
+              "cache index's single-flight join loops on its predicate "
+              "for exactly this reason. An if-guarded wait() returns "
+              "once with the predicate still false.",
+)
+def rule_unguarded_wait(module: Module, project: Project) -> list[Finding]:
+    out: list[Finding] = []
+    for fi in _module_funcs(module, project):
+        for call in iter_calls_shallow(fi.node):
+            f = call.func
+            if not (isinstance(f, ast.Attribute) and f.attr == "wait"):
+                continue
+            lock = _condition_receiver(fi, project, f.value)
+            if lock is None:
+                continue
+            in_while = any(isinstance(p, ast.While)
+                           for p in module.parents(call))
+            if not in_while:
+                out.append(module.finding(
+                    "RP003", call,
+                    f"`{lock}.wait()` outside any while loop — re-check "
+                    f"the predicate in a loop, or use wait_for()",
+                ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RP004: hand-rolled backoff outside repro.io.retry
+# ---------------------------------------------------------------------------
+
+@register_rule(
+    "RP004",
+    "hand-rolled retry backoff (time.sleep / 2**attempt in an except "
+    "handler) outside repro.io.retry",
+    rationale="PR 5 unified three divergent retry implementations after "
+              "an unjittered 2**attempt loop synchronized clients into "
+              "retry storms; backoff now lives in repro.io.retry "
+              "(full jitter, budget, Retry-After) and nowhere else.",
+    skip_paths=("io/retry.py",),
+)
+def rule_handrolled_backoff(module: Module,
+                            project: Project) -> list[Finding]:
+    out: list[Finding] = []
+    for node in ast.walk(module.tree):
+        if not isinstance(node, ast.ExceptHandler):
+            continue
+        for stmt in node.body:
+            for call in iter_calls_shallow(stmt):
+                f = call.func
+                if isinstance(f, ast.Attribute) and f.attr == "sleep" \
+                        and _recv_name(f.value) == "time":
+                    out.append(module.finding(
+                        "RP004", call,
+                        "time.sleep() in an except handler — hand-rolled "
+                        "backoff; use repro.io.retry (Retrier/RetryPolicy: "
+                        "full jitter + budget)",
+                    ))
+            for sub in ast.walk(stmt):
+                if isinstance(sub, ast.BinOp) and isinstance(sub.op, ast.Pow) \
+                        and isinstance(sub.left, ast.Constant) \
+                        and sub.left.value == 2:
+                    out.append(module.finding(
+                        "RP004", sub,
+                        "`2 ** n` backoff in an except handler — "
+                        "unjittered exponential backoff synchronizes "
+                        "clients into retry storms; use repro.io.retry",
+                    ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RP005: broad except that swallows
+# ---------------------------------------------------------------------------
+
+_BROAD = {"Exception", "BaseException"}
+
+
+def _is_broad(type_node: ast.AST | None) -> bool:
+    if type_node is None:
+        return True
+    if isinstance(type_node, ast.Name):
+        return type_node.id in _BROAD
+    if isinstance(type_node, ast.Attribute):
+        return type_node.attr in _BROAD
+    if isinstance(type_node, ast.Tuple):
+        return any(_is_broad(e) for e in type_node.elts)
+    return False
+
+
+@register_rule(
+    "RP005",
+    "broad `except Exception` that neither re-raises nor carries an "
+    "annotated suppression",
+    rationale="Swallowed StoreError/IntegrityError turns data loss into "
+              "silence — the HSM mover and write-behind pool both route "
+              "broad catches through telemetry + annotation instead. A "
+              "broad handler must re-raise, narrow, or say why not "
+              "(`# repro: allow[RP005] — reason`).",
+)
+def rule_broad_except(module: Module, project: Project) -> list[Finding]:
+    out: list[Finding] = []
+    for node in ast.walk(module.tree):
+        if not isinstance(node, ast.ExceptHandler) or not _is_broad(node.type):
+            continue
+        reraises = any(isinstance(sub, ast.Raise)
+                       for stmt in node.body
+                       for sub in _shallow(stmt))
+        if reraises:
+            continue
+        what = "bare except" if node.type is None else "broad except"
+        out.append(module.finding(
+            "RP005", node,
+            f"{what} swallows all errors (incl. StoreError/IntegrityError)"
+            " — re-raise, narrow the type, or annotate "
+            "`# repro: allow[RP005] — reason`",
+        ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RP006: fire-and-forget threads
+# ---------------------------------------------------------------------------
+
+def _is_thread_ctor(call: ast.Call) -> bool:
+    f = call.func
+    if isinstance(f, ast.Attribute):
+        return f.attr == "Thread" and _recv_name(f.value) == "threading"
+    return isinstance(f, ast.Name) and f.id == "Thread"
+
+
+def _class_joins_attr(cls_node: ast.ClassDef, attr: str) -> bool:
+    """Does any method of the class both reference self.<attr> and call
+    .join() in the same function? Covers `self._t.join()` and
+    `for t in self._threads: t.join()`."""
+    for item in cls_node.body:
+        if not isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        refs_attr = any(
+            isinstance(n, ast.Attribute) and n.attr == attr
+            and isinstance(n.value, ast.Name) and n.value.id == "self"
+            for n in ast.walk(item)
+        )
+        joins = any(
+            isinstance(n, ast.Call) and isinstance(n.func, ast.Attribute)
+            and n.func.attr == "join"
+            for n in ast.walk(item)
+        )
+        if refs_attr and joins:
+            return True
+    return False
+
+
+def _collection_local(call: ast.Call) -> str | None:
+    """Thread ctor feeding a local collection: ``ts = [Thread(...) for ...]``,
+    ``ts += [...]``, ``ts.append(Thread(...))``. Returns the local name."""
+    node: ast.AST = call
+    while True:
+        parent = getattr(node, "_repro_parent", None)
+        if parent is None or isinstance(
+            parent, (ast.FunctionDef, ast.AsyncFunctionDef,
+                     ast.Lambda, ast.ClassDef),
+        ):
+            return None
+        if isinstance(parent, ast.Assign) and len(parent.targets) == 1 \
+                and isinstance(parent.targets[0], ast.Name):
+            return parent.targets[0].id
+        if isinstance(parent, ast.AugAssign) \
+                and isinstance(parent.target, ast.Name):
+            return parent.target.id
+        if isinstance(parent, ast.Call) and parent is not call \
+                and isinstance(parent.func, ast.Attribute) \
+                and parent.func.attr == "append" \
+                and isinstance(parent.func.value, ast.Name):
+            return parent.func.value.id
+        node = parent
+
+
+def _local_joined(fn: ast.AST, name: str) -> bool:
+    """Is `<name>.join()` called, or `.join()` on the loop variable of a
+    ``for t in <name>:`` loop, anywhere in the function?"""
+    for n in ast.walk(fn):
+        if isinstance(n, ast.Call) and isinstance(n.func, ast.Attribute) \
+                and n.func.attr == "join" \
+                and isinstance(n.func.value, ast.Name) \
+                and n.func.value.id == name:
+            return True
+        if isinstance(n, ast.For) and isinstance(n.iter, ast.Name) \
+                and n.iter.id == name and isinstance(n.target, ast.Name):
+            var = n.target.id
+            for m in ast.walk(n):
+                if isinstance(m, ast.Call) \
+                        and isinstance(m.func, ast.Attribute) \
+                        and m.func.attr == "join" \
+                        and isinstance(m.func.value, ast.Name) \
+                        and m.func.value.id == var:
+                    return True
+    return False
+
+
+@register_rule(
+    "RP006",
+    "threading.Thread spawned with no join()/close() path referencing it",
+    rationale="Leaked hedge threads outlived their Hedger until PR 5 "
+              "pinned their lifecycle; a thread nobody joins holds "
+              "sockets and store handles past close() and turns "
+              "shutdown into a race.",
+)
+def rule_unjoined_thread(module: Module, project: Project) -> list[Finding]:
+    out: list[Finding] = []
+    for fi in _module_funcs(module, project):
+        fn = fi.node
+        for call in iter_calls_shallow(fn):
+            if not _is_thread_ctor(call):
+                continue
+            parent = getattr(call, "_repro_parent", None)
+            stored_attr: str | None = None
+            local: str | None = None
+            if isinstance(parent, ast.Assign) and len(parent.targets) == 1:
+                t = parent.targets[0]
+                if isinstance(t, ast.Attribute) \
+                        and isinstance(t.value, ast.Name) \
+                        and t.value.id == "self":
+                    stored_attr = t.attr
+                elif isinstance(t, ast.Name):
+                    local = t.id
+            if local is None and stored_attr is None:
+                local = _collection_local(call)
+            if local is not None:
+                if _local_joined(fn, local):
+                    continue
+                # t = Thread(); self.X.append(t) → stored under X.
+                for n in ast.walk(fn):
+                    if isinstance(n, ast.Call) \
+                            and isinstance(n.func, ast.Attribute) \
+                            and n.func.attr == "append" \
+                            and isinstance(n.func.value, ast.Attribute) \
+                            and n.args \
+                            and isinstance(n.args[0], ast.Name) \
+                            and n.args[0].id == local:
+                        stored_attr = n.func.value.attr
+                        break
+            if stored_attr is not None and fi.cls is not None:
+                for info in project.mro(fi.cls.name):
+                    if _class_joins_attr(info.node, stored_attr):
+                        break
+                else:
+                    out.append(module.finding(
+                        "RP006", call,
+                        f"thread stored in self.{stored_attr} is never "
+                        f"join()ed by any method — add a close()/join path "
+                        f"or annotate why the thread may be orphaned",
+                    ))
+                continue
+            if stored_attr is None and local is None:
+                out.append(module.finding(
+                    "RP006", call,
+                    "fire-and-forget thread (not stored, never joined) — "
+                    "its lifetime outlives every owner; join it or "
+                    "annotate why detaching is safe",
+                ))
+            elif local is not None:
+                out.append(module.finding(
+                    "RP006", call,
+                    f"thread `{local}` is started but never join()ed in "
+                    f"this function or stored on self — shutdown cannot "
+                    f"wait for it",
+                ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RP007: unverified range-get bytes published to a cache tier
+# ---------------------------------------------------------------------------
+
+_RANGE_GETTERS = {"get_range", "get_ranges"}
+_PUBLISH_SINKS = {"write", "publish"}
+_GUARDS = {"check_block", "check_ranges", "block_digest", "len"}
+
+
+@register_rule(
+    "RP007",
+    "range-get bytes written to a tier/published without a length check "
+    "or digest verification",
+    rationale="An un-length-checked range response was once cached and "
+              "served as truth (the short-push bug PR 7 fixed at the "
+              "protocol edge, PR 8 at every path): verify length or "
+              "digest between fetch and publish, or fetch via the "
+              "*_verified variants.",
+)
+def rule_unverified_publish(module: Module,
+                            project: Project) -> list[Finding]:
+    out: list[Finding] = []
+    for fi in _module_funcs(module, project):
+        fn = fi.node
+        tracked: set[str] = set()
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.value, ast.Call) \
+                    and isinstance(node.value.func, ast.Attribute) \
+                    and node.value.func.attr in _RANGE_GETTERS:
+                t = node.targets[0]
+                if isinstance(t, ast.Name):
+                    tracked.add(t.id)
+            # Iterating a tracked list taints the loop variable.
+            if isinstance(node, ast.For) and isinstance(node.iter, ast.Name) \
+                    and node.iter.id in tracked \
+                    and isinstance(node.target, ast.Name):
+                tracked.add(node.target.id)
+            if isinstance(node, ast.For) and isinstance(node.iter, ast.Call) \
+                    and isinstance(node.iter.func, ast.Name) \
+                    and node.iter.func.id == "zip" \
+                    and isinstance(node.target, ast.Tuple):
+                srcs = {a.id for a in node.iter.args
+                        if isinstance(a, ast.Name)}
+                if srcs & tracked:
+                    tracked.update(e.id for e in node.target.elts
+                                   if isinstance(e, ast.Name))
+        if not tracked:
+            continue
+        guarded: set[str] = set()
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                    and node.func.id in _GUARDS:
+                for a in node.args:
+                    if isinstance(a, ast.Name) and a.id in tracked:
+                        guarded.add(a.id)
+        for call in iter_calls_shallow(fn):
+            f = call.func
+            if not (isinstance(f, ast.Attribute) and f.attr in _PUBLISH_SINKS):
+                continue
+            for a in call.args:
+                if isinstance(a, ast.Name) and a.id in tracked \
+                        and a.id not in guarded:
+                    out.append(module.finding(
+                        "RP007", call,
+                        f"`{a.id}` came from an unverified range get and "
+                        f"reaches .{f.attr}() with no len()/digest check — "
+                        f"a short or corrupt response would be cached as "
+                        f"truth; check it or use get_range(s)_verified",
+                    ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RP008: unseeded randomness / wall-clock assertions in tests
+# ---------------------------------------------------------------------------
+
+_RANDOM_FNS = {"random", "randint", "choice", "shuffle", "uniform",
+               "randrange", "sample", "getrandbits", "randbytes"}
+_TIME_FNS = {"time", "perf_counter", "monotonic"}
+
+
+@register_rule(
+    "RP008",
+    "unseeded random.* call or wall-clock time in an assert, in tests",
+    rationale="Flaky tests erode the tier-1 gate: the hypothesis "
+              "fallback seeds every example stream per-test for exactly "
+              "this reason. Seed the module RNG (or use random.Random(n)"
+              "/jax.random keys); never assert on wall-clock reads.",
+    only_paths=("tests",),
+)
+def rule_test_nondeterminism(module: Module,
+                             project: Project) -> list[Finding]:
+    out: list[Finding] = []
+    seeded = any(
+        isinstance(n, ast.Call) and isinstance(n.func, ast.Attribute)
+        and n.func.attr == "seed" and _recv_name(n.func.value) == "random"
+        for n in ast.walk(module.tree)
+    )
+    for node in ast.walk(module.tree):
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute):
+            f = node.func
+            if f.attr in _RANDOM_FNS and isinstance(f.value, ast.Name) \
+                    and f.value.id == "random" and not seeded:
+                out.append(module.finding(
+                    "RP008", node,
+                    f"unseeded random.{f.attr}() in a test — seed the "
+                    f"module RNG or use random.Random(<seed>)",
+                ))
+        if isinstance(node, ast.Assert):
+            for call in iter_calls_shallow(node.test):
+                f = call.func
+                if isinstance(f, ast.Attribute) and f.attr in _TIME_FNS \
+                        and _recv_name(f.value) == "time":
+                    out.append(module.finding(
+                        "RP008", node,
+                        f"assert reads the wall clock (time.{f.attr}()) — "
+                        f"timing assertions flake under load; assert on "
+                        f"counters or injected clocks instead",
+                    ))
+    return out

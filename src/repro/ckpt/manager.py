@@ -391,7 +391,7 @@ class CheckpointManager:
                 save_checkpoint(self.store, self.prefix, step, snapshot,
                                 extra=extra, policy=self.policy)
                 gc_checkpoints(self.store, self.prefix, self.keep_last)
-            except BaseException as e:  # noqa: BLE001
+            except BaseException as e:  # repro: allow[RP005] — stashed; wait() re-raises
                 self._err.append(e)
 
         self._thread = threading.Thread(target=upload, daemon=True)

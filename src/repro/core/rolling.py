@@ -451,8 +451,11 @@ class RollingPrefetcher:
                 if skip_acquired is not None and skip_acquired[0] is b:
                     _, kind, val = skip_acquired
                     if kind == "hit":
+                        # repro: allow[RP002] — index calls are engine-lock-
+                        # safe (tiers.py contract); at worst a local unlink.
                         self.index.unpin(b.block_id)
                     elif kind == "wait":
+                        # repro: allow[RP002] — same contract as above.
                         self.index.leave(val)
                 if closing:
                     unclaim.append(b)
@@ -502,7 +505,7 @@ class RollingPrefetcher:
             try:
                 self._fetch_group(group, tier)
                 return True
-            except Exception as e:  # noqa: BLE001 — flights MUST abort:
+            except Exception as e:  # repro: allow[RP005] — flights MUST abort:
                 # a leaked flight would park every waiter (other readers
                 # included) until their patience fallback, and this
                 # reader's blocks would stay FETCHING forever.
@@ -529,6 +532,8 @@ class RollingPrefetcher:
         while True:
             with self._cond:
                 if not self._fetch:
+                    # repro: allow[RP002] — engine-lock-safe (tiers.py
+                    # contract); at worst a local unlink.
                     self.index.leave(flight)
                     self._unclaim([b])
                     return False
@@ -591,7 +596,7 @@ class RollingPrefetcher:
             for b in written:
                 try:
                     tier.delete(b.block_id)
-                except Exception:  # noqa: BLE001 - best-effort cleanup
+                except Exception:  # repro: allow[RP005] — best-effort cleanup
                     pass
             if isinstance(e, StoreError):
                 raise

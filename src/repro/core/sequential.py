@@ -226,7 +226,7 @@ class SequentialFile:
             try:
                 self._fetch_leaders(group, out)
                 group = []
-            except Exception:
+            except Exception:  # repro: allow[RP005] — releases, then re-raises
                 # The pin (hit) / waiter slot (wait) just taken for `b`
                 # must not leak past a failed leader group, or the block
                 # becomes unevictable forever.
@@ -293,7 +293,7 @@ class SequentialFile:
         blocks = [b for b, _ in group]
         try:
             pairs = self._fetch_run(blocks)
-        except Exception as e:   # noqa: BLE001 — waiters must not hang
+        except Exception as e:   # repro: allow[RP005] — waiters must not hang
             for _, fl in group:
                 self.index.abort_fetch(fl, e)
             raise
@@ -315,7 +315,7 @@ class SequentialFile:
             try:
                 tier.write(b.block_id, d,
                            meta=BlockMeta(key=b.key, offset=b.start))
-            except Exception:   # noqa: BLE001 — cache write is best-effort
+            except Exception:   # repro: allow[RP005] — cache write is best-effort
                 tier.cancel(b.size)
                 self.index.abort_fetch(fl)
                 continue

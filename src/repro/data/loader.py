@@ -218,6 +218,7 @@ class DeviceFeeder:
         self.sharding = sharding
         self.observe = observe
         self._err: list[BaseException] = []
+        self._stop = threading.Event()
         self._thread = threading.Thread(
             target=self._run, args=(batch_iter,), daemon=True
         )
@@ -226,6 +227,8 @@ class DeviceFeeder:
     def _run(self, batch_iter) -> None:
         try:
             for host_batch in batch_iter:
+                if self._stop.is_set():
+                    break
                 t0 = time.perf_counter()
                 dev = jax.tree.map(
                     lambda x: jax.device_put(x, self.sharding), host_batch
@@ -233,15 +236,29 @@ class DeviceFeeder:
                 if self.observe:
                     self.observe(time.perf_counter() - t0)
                 self.q.put(dev)
-        except BaseException as e:  # noqa: BLE001
+        except BaseException as e:  # repro: allow[RP005] — stashed; __iter__ re-raises
             self._err.append(e)
         finally:
             self.q.put(self._STOP)
+
+    def close(self) -> None:
+        """Stop the feeder thread and reap it. Safe to call repeatedly;
+        also called automatically when the iterator is exhausted."""
+        self._stop.set()
+        # The feeder may be parked in q.put() with the queue full; drain
+        # until it observes the stop flag and posts the sentinel.
+        while self._thread.is_alive():
+            try:
+                self.q.get_nowait()
+            except queue.Empty:
+                pass
+            self._thread.join(timeout=0.05)
 
     def __iter__(self):
         while True:
             item = self.q.get()
             if item is self._STOP:
+                self._thread.join()
                 if self._err:
                     raise self._err[0]
                 return

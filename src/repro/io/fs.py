@@ -444,7 +444,7 @@ class PrefetchFS:
         for _, handle in handles:
             try:
                 handle.close()
-            except Exception as e:   # noqa: BLE001 - re-raised below
+            except Exception as e:   # repro: allow[RP005] — re-raised below
                 if first_err is None:
                     first_err = e
         if pool is not None:

@@ -257,7 +257,7 @@ class Hedger:
         def attempt(hedge: bool) -> None:
             try:
                 r = fn()
-            except Exception as e:  # noqa: BLE001 - propagated below
+            except Exception as e:  # repro: allow[RP005] — propagated below
                 with cond:
                     errors.append(e)
                     cond.notify_all()
@@ -269,6 +269,8 @@ class Hedger:
                 if hedge:
                     self._release()
 
+        # repro: allow[RP006] — attempts are daemons; call() returns only
+        # after every launched attempt reported, so none outlives the raise.
         threading.Thread(target=attempt, args=(False,), daemon=True,
                          name="hedge-primary").start()
         launched = 1
@@ -279,6 +281,7 @@ class Hedger:
         if want_hedge and self._try_acquire():
             if self.on_hedge is not None:
                 self.on_hedge()
+            # repro: allow[RP006] — same lifecycle as the primary attempt.
             threading.Thread(target=attempt, args=(True,), daemon=True,
                              name="hedge-secondary").start()
             launched = 2

@@ -129,7 +129,7 @@ class UploadPool:
                 return
             try:
                 job()
-            except BaseException:   # jobs capture their own errors; belt only
+            except BaseException:   # repro: allow[RP005] — jobs capture their own errors; belt only
                 log.exception("upload job leaked an exception")
 
     def close(self) -> None:
@@ -334,9 +334,16 @@ class Writer:
     # sealing + staging (application thread)
     # ------------------------------------------------------------------ #
     def _seal(self, data: bytes) -> None:
+        # The multipart handshake is a store round-trip; doing it under
+        # _cond stalled every upload worker's barrier bump behind the
+        # first seal's network latency. Only the application thread
+        # seals, so the lazy init cannot race itself, and workers read
+        # _mp only from jobs queued after this publish.
+        if self._mp is None:
+            mp = self.store.start_multipart(self.key)
+            with self._cond:
+                self._mp = mp
         with self._cond:
-            if self._mp is None:
-                self._mp = self.store.start_multipart(self.key)
             index = self._next_index
             self._next_index += 1
             self._sealed += 1
@@ -426,7 +433,7 @@ class Writer:
                     parts_uploaded=1,
                     bytes_uploaded=part.size,
                 )
-        except Exception as e:   # noqa: BLE001 — surfaced at the barrier
+        except Exception as e:   # repro: allow[RP005] — surfaced at the barrier
             self._record_error(e)
         finally:
             with self._cond:
@@ -444,7 +451,7 @@ class Writer:
                 t0 = time.perf_counter()
                 self._execute_put(self._mp.complete)
                 self.stats.bump(upload_s=time.perf_counter() - t0)
-        except Exception as e:   # noqa: BLE001 — surfaced at the barrier
+        except Exception as e:   # repro: allow[RP005] — surfaced at the barrier
             self._record_error(e)
         finally:
             with self._cond:
@@ -463,7 +470,7 @@ class Writer:
                     parts_uploaded=1,
                     bytes_uploaded=len(data),
                 )
-        except Exception as e:   # noqa: BLE001 — surfaced at the barrier
+        except Exception as e:   # repro: allow[RP005] — surfaced at the barrier
             self._record_error(e)
         finally:
             with self._cond:

@@ -156,7 +156,7 @@ def run_cells(cells, *, meshes=("pod16x16", "pod2x16x16"), out_dir=None,
                     f"dom={rec['dominant']} tc={rec['t_compute']:.2e} "
                     f"tm={rec['t_memory']:.2e} tcoll={rec['t_collective']:.2e}"
                 )
-            except Exception as e:  # noqa: BLE001
+            except Exception as e:  # repro: allow[RP005] — recorded per cell; re-raised when stop_on_error
                 rec = {
                     "arch": arch, "shape": shape_name, "mesh": mesh_name,
                     "status": "error", "error": f"{type(e).__name__}: {e}",

@@ -93,6 +93,7 @@ class BlockServer:
         self.bytes_served = 0
         self.errors = 0
         self.integrity_failures = 0
+        self.owner_fetch_failures = 0   # backing GET failed while leading
         self._accept_thread = threading.Thread(
             target=self._accept_loop, name=f"peer-server-{self.host_id}",
             daemon=True,
@@ -130,6 +131,7 @@ class BlockServer:
                 bytes_served=self.bytes_served,
                 errors=self.errors,
                 integrity_failures=self.integrity_failures,
+                owner_fetch_failures=self.owner_fetch_failures,
             )
 
     # -- socket plumbing ----------------------------------------------------
@@ -144,6 +146,8 @@ class BlockServer:
             conn.settimeout(30.0)
             with self._lock:
                 self._conns.add(conn)
+            # repro: allow[RP006] — one daemon per live connection; close()
+            # closes every tracked socket, which unblocks and ends them.
             threading.Thread(
                 target=self._serve_conn, args=(conn,),
                 name=f"peer-conn-{self.host_id}", daemon=True,
@@ -158,8 +162,8 @@ class BlockServer:
                     return   # client went away / junk frame: drop the conn
                 try:
                     resp, data = self._dispatch(header, payload)
-                except Exception as e:   # noqa: BLE001 — a handler bug must
-                    # not kill the connection loop; report it to the client.
+                except Exception as e:   # repro: allow[RP005] — reported to
+                    # the client; a handler bug must not kill the conn loop.
                     with self._lock:
                         self.errors += 1
                     log.warning("peer server %d: %s failed: %s",
@@ -277,7 +281,10 @@ class BlockServer:
                     self.ownership_fetches += 1
                 try:
                     data, digest = self._store_get(key, start, end)
-                except Exception as e:
+                except Exception as e:  # repro: allow[RP005] — counted, flight
+                    # aborted (waiters fail over), then re-raised to _dispatch.
+                    with self._lock:
+                        self.owner_fetch_failures += 1
                     self.index.abort_fetch(val, e)
                     raise
                 self._publish(val, bid, key, start, data, digest)
@@ -333,7 +340,7 @@ class BlockServer:
             return
         try:
             tier.write(bid, data, meta=BlockMeta(key=key, offset=start))
-        except Exception:   # noqa: BLE001 — cache write is best-effort
+        except Exception:   # repro: allow[RP005] — cache write is best-effort
             tier.cancel(len(data))
             self.index.abort_fetch(flight)
             return
@@ -387,7 +394,7 @@ class BlockServer:
             return "rejected"
         try:
             tier.write(bid, payload, meta=BlockMeta(key=key, offset=start))
-        except Exception:   # noqa: BLE001
+        except Exception:   # repro: allow[RP005] — adoption is best-effort
             tier.cancel(len(payload))
             self.index.abort_fetch(val)
             return "rejected"

@@ -218,7 +218,7 @@ class SimCluster:
         for fs in h._fss:
             try:
                 fs.close()
-            except Exception:   # noqa: BLE001 — a dying host dies messy
+            except Exception:   # repro: allow[RP005] — a dying host dies messy
                 pass
         h.server.close()
         h.group.close()
@@ -229,7 +229,7 @@ class SimCluster:
                 for fs in h._fss:
                     try:
                         fs.close()
-                    except Exception:   # noqa: BLE001
+                    except Exception:   # repro: allow[RP005] — shutdown close is best-effort
                         pass
                 h.store.close()
                 h.alive = False

@@ -447,7 +447,7 @@ class HSMIndex(CacheIndex):
             log.warning("demotion of %s: copy is corrupt, evicting: %s",
                         block_id, exc)
             return False
-        except Exception as exc:   # noqa: BLE001 — fall back to eviction
+        except Exception as exc:   # repro: allow[RP005] — fall back to eviction
             dst.cancel(e.size)
             with self._cond:
                 self.moves_failed += 1
@@ -468,7 +468,7 @@ class HSMIndex(CacheIndex):
         while not self._mover_stop.wait(interval_s):
             try:
                 self.mover_tick()
-            except Exception:   # noqa: BLE001 — the mover must survive
+            except Exception:   # repro: allow[RP005] — the mover must survive
                 log.exception("hsm mover tick failed")
 
     def mover_tick(self) -> None:
@@ -549,7 +549,7 @@ class HSMIndex(CacheIndex):
                         self.quarantined += 1
                     log.warning("promotion of %s: copy is corrupt, "
                                 "quarantining: %s", block_id, exc)
-                except Exception as exc:   # noqa: BLE001 — keep in place
+                except Exception as exc:   # repro: allow[RP005] — keep in place
                     dst.cancel(e.size)
                     with self._cond:
                         self.moves_failed += 1

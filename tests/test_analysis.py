@@ -1,0 +1,558 @@
+"""Tests for the `repro.analysis` static analyzer.
+
+Three layers:
+
+1. Paired fixtures per rule: each "bad" snippet fires exactly its rule
+   and the matching "good" snippet is clean, so rule heuristics cannot
+   silently widen or narrow.
+2. The suppression and baseline machinery round-trips.
+3. The gate itself: running the analyzer over this repo's real `src/`
+   and `tests/` trees yields zero unsuppressed findings and an acyclic
+   lock graph — the exact check CI runs.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import threading
+
+import pytest
+
+from repro.analysis import (
+    Baseline,
+    Report,
+    all_rules,
+    analyze,
+    build_lock_graph,
+    get_rule,
+    load_project,
+    render_json,
+    render_text,
+)
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), os.pardir))
+
+
+def run_on(tmp_path, sources: dict[str, str]):
+    """Write `sources` (relpath -> code) under tmp_path and analyze."""
+    for rel, code in sources.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(code)
+    _, findings = analyze([str(tmp_path)])
+    return findings
+
+
+def fired(findings) -> set[str]:
+    return {f.rule for f in findings if not f.suppressed}
+
+
+# --------------------------------------------------------------------------- #
+# Rule fixtures: bad fires exactly its rule, good is clean.
+# --------------------------------------------------------------------------- #
+
+RULE_FIXTURES = {
+    "RP001": (
+        # bad: bare acquire with no finally-release
+        """
+import threading
+
+class Box:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.x = 0
+
+    def bump(self):
+        self._lock.acquire()
+        self.x += 1
+        self._lock.release()
+""",
+        # good: release lives in a finally block
+        """
+import threading
+
+class Box:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.x = 0
+
+    def bump(self):
+        self._lock.acquire()
+        try:
+            self.x += 1
+        finally:
+            self._lock.release()
+""",
+    ),
+    "RP002": (
+        # bad: store round-trip while holding the lock
+        """
+import threading
+
+class Cache:
+    def __init__(self, store):
+        self._lock = threading.Lock()
+        self.store = store
+        self.blocks = {}
+
+    def fill(self, key):
+        with self._lock:
+            self.blocks[key] = self.store.get_range(key, 0, 1 << 20)
+""",
+        # good: fetch outside, publish under the lock
+        """
+import threading
+
+class Cache:
+    def __init__(self, store):
+        self._lock = threading.Lock()
+        self.store = store
+        self.blocks = {}
+
+    def fill(self, key):
+        data = self.store.get_range(key, 0, 1 << 20)
+        with self._lock:
+            self.blocks[key] = data
+""",
+    ),
+    "RP003": (
+        # bad: wait() guarded by `if`, not `while`
+        """
+import threading
+
+class Gate:
+    def __init__(self):
+        self._cond = threading.Condition()
+        self.ready = False
+
+    def block(self):
+        with self._cond:
+            if not self.ready:
+                self._cond.wait()
+""",
+        # good: wait() re-checks its predicate in a loop
+        """
+import threading
+
+class Gate:
+    def __init__(self):
+        self._cond = threading.Condition()
+        self.ready = False
+
+    def block(self):
+        with self._cond:
+            while not self.ready:
+                self._cond.wait()
+""",
+    ),
+    "RP004": (
+        # bad: hand-rolled exponential backoff in an except handler
+        """
+import time
+
+def fetch(fn):
+    for attempt in range(5):
+        try:
+            return fn()
+        except OSError:
+            time.sleep(0.1 * 2 ** attempt)
+    raise OSError("gave up")
+""",
+        # good: the handler classifies and re-raises; pacing is the
+        # retry layer's job
+        """
+def fetch(fn):
+    try:
+        return fn()
+    except OSError as e:
+        raise TimeoutError(str(e)) from e
+""",
+    ),
+    "RP005": (
+        # bad: broad handler that swallows everything
+        """
+def probe(fn):
+    try:
+        return fn()
+    except Exception:
+        return None
+""",
+        # good: broad handler that re-raises
+        """
+def probe(fn):
+    try:
+        return fn()
+    except Exception:
+        raise
+""",
+    ),
+    "RP006": (
+        # bad: owned thread with no join path anywhere in the class
+        """
+import threading
+
+class Pump:
+    def __init__(self):
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        pass
+""",
+        # good: close() reaps the thread
+        """
+import threading
+
+class Pump:
+    def __init__(self):
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        pass
+
+    def close(self):
+        self._thread.join()
+""",
+    ),
+    "RP007": (
+        # bad: range-get bytes published to a tier unchecked
+        """
+class Mirror:
+    def __init__(self, store, tier):
+        self.store = store
+        self.tier = tier
+
+    def pull(self, key):
+        data = self.store.get_range(key, 0, 4096)
+        self.tier.write(key, data)
+""",
+        # good: length-checked before publish
+        """
+class Mirror:
+    def __init__(self, store, tier):
+        self.store = store
+        self.tier = tier
+
+    def pull(self, key):
+        data = self.store.get_range(key, 0, 4096)
+        if len(data) != 4096:
+            raise ValueError("short read")
+        self.tier.write(key, data)
+""",
+    ),
+    "RP008": (
+        # bad: unseeded randomness in a test module
+        """
+import random
+
+def test_pick():
+    assert random.randint(0, 5) >= 0
+""",
+        # good: module seeds its RNG
+        """
+import random
+
+random.seed(1234)
+
+def test_pick():
+    assert random.randint(0, 5) >= 0
+""",
+    ),
+}
+
+
+@pytest.mark.parametrize("rule_id", sorted(RULE_FIXTURES))
+def test_bad_fixture_fires_exactly_its_rule(tmp_path, rule_id):
+    bad, _ = RULE_FIXTURES[rule_id]
+    # RP008 only applies under a path containing "tests".
+    rel = "tests/test_fx.py" if rule_id == "RP008" else "fx.py"
+    findings = run_on(tmp_path, {rel: bad})
+    assert fired(findings) == {rule_id}, [f.to_dict() for f in findings]
+
+
+@pytest.mark.parametrize("rule_id", sorted(RULE_FIXTURES))
+def test_good_fixture_is_clean(tmp_path, rule_id):
+    _, good = RULE_FIXTURES[rule_id]
+    rel = "tests/test_fx.py" if rule_id == "RP008" else "fx.py"
+    findings = run_on(tmp_path, {rel: good})
+    assert fired(findings) == set(), [f.to_dict() for f in findings]
+
+
+def test_every_registered_rule_has_a_fixture_pair():
+    assert {spec.rule_id for spec in all_rules()} == set(RULE_FIXTURES)
+
+
+def test_rule_metadata_complete():
+    for spec in all_rules():
+        assert spec.summary and spec.rationale
+    assert get_rule("RP008").only_paths == ("tests",)
+
+
+# --------------------------------------------------------------------------- #
+# Suppressions
+# --------------------------------------------------------------------------- #
+
+def test_suppression_with_reason_silences(tmp_path):
+    bad, _ = RULE_FIXTURES["RP005"]
+    code = bad.replace(
+        "except Exception:",
+        "except Exception:  # repro: allow[RP005] — probe is best-effort",
+    )
+    findings = run_on(tmp_path, {"fx.py": code})
+    assert fired(findings) == set()
+    sup = [f for f in findings if f.suppressed]
+    assert len(sup) == 1
+    assert sup[0].rule == "RP005"
+    assert sup[0].suppress_reason == "probe is best-effort"
+
+
+def test_suppression_standalone_comment_covers_next_line(tmp_path):
+    bad, _ = RULE_FIXTURES["RP005"]
+    code = bad.replace(
+        "    except Exception:",
+        "    # repro: allow[RP005] — probe is best-effort\n"
+        "    except Exception:",
+    )
+    findings = run_on(tmp_path, {"fx.py": code})
+    assert fired(findings) == set()
+
+
+def test_suppression_without_reason_is_rp000(tmp_path):
+    bad, _ = RULE_FIXTURES["RP005"]
+    # (concatenated so the scanner does not read this literal as a
+    # malformed suppression of this very file)
+    code = bad.replace(
+        "except Exception:",
+        "except Exception:  # repro: " + "allow[RP005]",
+    )
+    findings = run_on(tmp_path, {"fx.py": code})
+    assert "RP000" in fired(findings)
+
+
+def test_suppression_for_other_rule_does_not_silence(tmp_path):
+    bad, _ = RULE_FIXTURES["RP005"]
+    code = bad.replace(
+        "except Exception:",
+        "except Exception:  # repro: allow[RP001] — wrong rule",
+    )
+    findings = run_on(tmp_path, {"fx.py": code})
+    assert "RP005" in fired(findings)
+
+
+# --------------------------------------------------------------------------- #
+# Baseline
+# --------------------------------------------------------------------------- #
+
+def test_baseline_round_trip(tmp_path):
+    bad, _ = RULE_FIXTURES["RP005"]
+    findings = run_on(tmp_path, {"fx.py": bad})
+    assert fired(findings)
+
+    bl_path = str(tmp_path / "baseline.json")
+    Baseline.from_findings(findings).save(bl_path)
+    loaded = Baseline.load(bl_path)
+
+    report = Report.build(findings, baseline=loaded)
+    assert report.ok
+    assert not report.new
+    assert report.baselined
+
+    # Editing the flagged line changes the fingerprint -> finding is new.
+    edited = bad.replace("return None", "return 0")
+    findings2 = run_on(tmp_path, {"fx2.py": edited})
+    report2 = Report.build(findings2, baseline=loaded)
+    assert not report2.ok
+
+
+def test_baseline_rejects_unknown_version(tmp_path):
+    p = tmp_path / "bl.json"
+    p.write_text(json.dumps({"version": 99, "findings": []}))
+    with pytest.raises(ValueError):
+        Baseline.load(str(p))
+
+
+def test_reports_render(tmp_path):
+    bad, _ = RULE_FIXTURES["RP005"]
+    findings = run_on(tmp_path, {"fx.py": bad})
+    report = Report.build(findings)
+    doc = json.loads(render_json(report))
+    assert doc["ok"] is False
+    assert doc["summary"]["new"] == 1
+    text = render_text(report)
+    assert "RP005" in text and "FAIL" in text
+
+
+# --------------------------------------------------------------------------- #
+# The real gate: this repo must be clean, and its lock graph acyclic.
+# --------------------------------------------------------------------------- #
+
+def test_repo_has_zero_unsuppressed_findings():
+    _, findings = analyze([os.path.join(REPO_ROOT, "src"),
+                           os.path.join(REPO_ROOT, "tests")])
+    new = [f for f in findings if not f.suppressed]
+    assert new == [], "\n".join(
+        f"{f.location()}: {f.rule}: {f.message}" for f in new
+    )
+
+
+def test_repo_suppressions_all_carry_reasons():
+    _, findings = analyze([os.path.join(REPO_ROOT, "src")])
+    for f in findings:
+        if f.suppressed:
+            assert f.suppress_reason, f.location()
+
+
+def test_lock_graph_is_acyclic_and_ordered():
+    project, _ = load_project([os.path.join(REPO_ROOT, "src")])
+    graph = build_lock_graph(project)
+    assert graph.cycles() == []
+    order = graph.topo_order()
+    assert order is not None
+    # The documented global order: the engine lock is outermost, the
+    # index condition sits above the tier locks.
+    pos = {name: i for i, name in enumerate(order)}
+    assert pos["PrefetchFS._lock"] < pos["CacheIndex._cond"]
+    assert pos["RollingPrefetcher._cond"] < pos["CacheIndex._cond"]
+    assert pos["CacheIndex._cond"] < pos["CacheTier._lock"]
+
+
+def test_lock_graph_aliases_subclass_locks():
+    project, _ = load_project([os.path.join(REPO_ROOT, "src")])
+    graph = build_lock_graph(project)
+    assert graph.normalize("HSMIndex._cond") == "CacheIndex._cond"
+    assert graph.normalize("MemTier._lock") == "CacheTier._lock"
+
+
+def test_lock_cycle_detected(tmp_path):
+    code = """
+import threading
+
+class A:
+    def __init__(self, b: B):
+        self._lock = threading.Lock()
+        self.b = b
+
+    def one(self):
+        with self._lock:
+            with self.b._lock:
+                pass
+
+class B:
+    def __init__(self, a: A):
+        self._lock = threading.Lock()
+        self.a = a
+
+    def two(self):
+        with self._lock:
+            with self.a._lock:
+                pass
+"""
+    (tmp_path / "fx.py").write_text(code)
+    project, _ = load_project([str(tmp_path)])
+    graph = build_lock_graph(project)
+    cycles = graph.cycles()
+    assert cycles, graph.to_dict()
+    assert {"A._lock", "B._lock"} <= set(cycles[0])
+    assert graph.topo_order() is None
+
+
+# --------------------------------------------------------------------------- #
+# CLI
+# --------------------------------------------------------------------------- #
+
+def _run_cli(args, cwd):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        capture_output=True, text=True, cwd=cwd, env=env,
+    )
+
+
+def test_cli_clean_tree_exits_zero(tmp_path):
+    (tmp_path / "ok.py").write_text("x = 1\n")
+    proc = _run_cli([str(tmp_path)], cwd=str(tmp_path))
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "OK" in proc.stdout
+
+
+def test_cli_findings_exit_one_and_json(tmp_path):
+    bad, _ = RULE_FIXTURES["RP005"]
+    (tmp_path / "fx.py").write_text(bad)
+    proc = _run_cli([str(tmp_path), "--format", "json", "--no-lock-graph"],
+                    cwd=str(tmp_path))
+    assert proc.returncode == 1
+    doc = json.loads(proc.stdout)
+    assert doc["ok"] is False
+    assert doc["findings"][0]["rule"] == "RP005"
+
+
+def test_cli_missing_path_exits_two(tmp_path):
+    proc = _run_cli([str(tmp_path / "nope")], cwd=str(tmp_path))
+    assert proc.returncode == 2
+
+
+def test_cli_write_baseline_then_gate_passes(tmp_path):
+    bad, _ = RULE_FIXTURES["RP005"]
+    (tmp_path / "fx.py").write_text(bad)
+    bl = str(tmp_path / "bl.json")
+    proc = _run_cli([str(tmp_path), "--baseline", bl, "--write-baseline"],
+                    cwd=str(tmp_path))
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    proc = _run_cli([str(tmp_path), "--baseline", bl], cwd=str(tmp_path))
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+# --------------------------------------------------------------------------- #
+# Runtime lock-order tracing (the conftest fixture) agrees with the
+# static graph.
+# --------------------------------------------------------------------------- #
+
+def test_traced_locks_record_real_nesting(traced_locks):
+    from repro.store.tiers import CacheIndex, MemTier
+
+    tier = MemTier(1 << 20)
+    index = CacheIndex([tier])
+    assert type(index._cond).__name__ == "_TracedCondition"
+    kind, flight = index.acquire("blk")
+    assert kind == "leader"
+    tier.write("blk", b"x" * 64)
+    index.publish(flight, tier, 64)
+    index.unpin("blk")
+    # The wrapper resolved the same name the static analyzer uses; the
+    # fixture asserts edge consistency against the static graph on
+    # teardown.
+    assert index._cond._name == "CacheIndex._cond"
+    assert tier._blk_lock._name == "MemTier._blk_lock"
+
+
+def test_assert_order_consistent_flags_inversion():
+    from conftest import LockOrderRecorder, assert_order_consistent
+
+    project, _ = load_project([os.path.join(REPO_ROOT, "src")])
+    graph = build_lock_graph(project)
+    rec = LockOrderRecorder()
+    # Invert a real static edge: runtime claims the index condition was
+    # held while taking the engine lock.
+    rec.edges[("CacheIndex._cond", "PrefetchFS._lock")] = "t0"
+    with pytest.raises(AssertionError):
+        assert_order_consistent(rec, graph)
+
+
+def test_traced_lock_wrapper_mechanics(traced_locks):
+    class Pair:
+        def __init__(self):
+            self.outer = threading.Lock()
+            self.inner = threading.Lock()
+
+        def nest(self):
+            with self.outer:
+                with self.inner:
+                    pass
+
+    Pair().nest()
+    assert ("Pair.outer", "Pair.inner") in traced_locks.edges

@@ -288,7 +288,7 @@ class TestDirTierPersistence:
                 while not stop.is_set():
                     sibling.write(f"sib{i % 10}", payload(64, seed=i))
                     i += 1
-            except Exception as e:   # noqa: BLE001 — surfaced below
+            except Exception as e:   # repro: allow[RP005] — surfaced below
                 errs.append(e)
 
         t = threading.Thread(target=sib_writes)
@@ -432,7 +432,7 @@ class TestSharedReaders:
                 readers[i] = f
                 results[i] = f.read()
                 f.close()
-            except Exception as e:   # noqa: BLE001 — surfaced below
+            except Exception as e:   # repro: allow[RP005] — surfaced below
                 errs.append(e)
 
         threads = [threading.Thread(target=run, args=(i,))

@@ -169,6 +169,23 @@ class TestTokenLoader:
         loader.close()
         assert len(out) == 3
         assert all(isinstance(x[0], jax.Array) for x in out)
+        # Exhausting the iterator reaps the feeder thread.
+        assert not feeder._thread.is_alive()
+
+    def test_device_feeder_close_mid_stream(self):
+        # A consumer that stops early must be able to reap the feeder
+        # even while it is parked on a full queue (regression: the
+        # feeder thread used to be unjoinable — nothing stopped it).
+        import itertools
+
+        import numpy as np_
+
+        batches = (np_.zeros((2, 8), np_.int32) for _ in itertools.count())
+        feeder = DeviceFeeder(batches, depth=1)
+        next(iter(feeder))
+        feeder.close()
+        assert not feeder._thread.is_alive()
+        feeder.close()  # idempotent
 
 
 # --------------------------------------------------------------------------- #

@@ -522,7 +522,7 @@ class TestAcceptanceChaos:
                                    key=lambda m: m.key)
                     with fs.open_many(files) as f:
                         outs[h] = f.read()
-                except BaseException as e:  # noqa: BLE001
+                except BaseException as e:  # repro: allow[RP005] — stashed; asserted after join
                     errors.append((h, e))
 
             threads = [threading.Thread(target=run, args=(h,))

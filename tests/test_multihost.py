@@ -64,7 +64,7 @@ class TestMultiHost:
                 loader = _loader(store, host)
                 results[host] = [b[0] for b in loader.batches(max_batches=3)]
                 loader.close()
-            except BaseException as e:  # noqa: BLE001
+            except BaseException as e:  # repro: allow[RP005] — stashed; asserted after join
                 errors.append((host, e))
 
         threads = [threading.Thread(target=run, args=(h,))
@@ -168,7 +168,7 @@ def _stream_all(cluster, hosts, *, engine="rolling"):
                 outs[h] = f.read()
             finally:
                 f.close()
-        except BaseException as e:  # noqa: BLE001
+        except BaseException as e:  # repro: allow[RP005] — stashed; asserted after join
             errors.append((h, e))
 
     threads = [threading.Thread(target=run, args=(h,)) for h in hosts]
@@ -261,7 +261,7 @@ class TestPeerCluster:
                     outs[h] = first + f.read()
                 finally:
                     f.close()
-            except BaseException as e:  # noqa: BLE001
+            except BaseException as e:  # repro: allow[RP005] — stashed; asserted after join
                 errors.append((h, e))
 
         threads = [threading.Thread(target=run, args=(h,))

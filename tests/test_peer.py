@@ -211,7 +211,7 @@ class TestServerClient:
             try:
                 barrier.wait()
                 results.append(c.fetch("obj", 16384, 20480, owner=True))
-            except BaseException as e:  # noqa: BLE001
+            except BaseException as e:  # repro: allow[RP005] — stashed; asserted after join
                 errors.append(e)
 
         threads = [threading.Thread(target=hammer, args=(c,))
@@ -586,7 +586,7 @@ class TestSimCluster:
                     files = cluster.host(h).store.list_objects()
                     with fs.open_many(sorted(files, key=lambda m: m.key)) as f:
                         outs[h] = f.read()
-                except BaseException as e:  # noqa: BLE001
+                except BaseException as e:  # repro: allow[RP005] — stashed; asserted after join
                     errors.append((h, e))
 
             threads = [threading.Thread(target=run, args=(h,))
@@ -816,6 +816,8 @@ class _LyingServer:
         self._sock.listen(16)
         self.address = self._sock.getsockname()[:2]
         self._stop = threading.Event()
+        # repro: allow[RP006] — daemon acceptor; close() sets _stop and
+        # closes the listening socket, which unblocks accept() and ends it.
         threading.Thread(target=self._accept, daemon=True).start()
 
     def close(self) -> None:
@@ -831,6 +833,8 @@ class _LyingServer:
                 conn, _ = self._sock.accept()
             except OSError:
                 return
+            # repro: allow[RP006] — one daemon per test connection; dies
+            # with its socket when the fake server closes.
             threading.Thread(target=self._serve, args=(conn,),
                              daemon=True).start()
 

@@ -445,7 +445,7 @@ class TestSatellites:
                     f.read()
                     f.close()
                     fs.stats()
-            except Exception as e:  # noqa: BLE001
+            except Exception as e:  # repro: allow[RP005] — stashed; asserted after join
                 errors.append(e)
 
         def writer_worker(tid):
@@ -455,7 +455,7 @@ class TestSatellites:
                     w.write(payload(1000, seed=tid))
                     w.close()
                     fs.stats()
-            except Exception as e:  # noqa: BLE001
+            except Exception as e:  # repro: allow[RP005] — stashed; asserted after join
                 errors.append(e)
 
         threads = [threading.Thread(target=reader_worker, args=(t,))
