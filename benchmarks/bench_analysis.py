@@ -2,14 +2,18 @@
 
 The analyzer runs in CI before the test stage, so its wall time is part
 of every developer's feedback loop. This benchmark times a full
-``analyze(src, tests)`` pass plus the lock-graph build and asserts the
-gate's own invariants hold:
+``analyze(src, tests)`` pass, the typestate (RP009+) interpreter alone,
+the lock-graph build, and an interleaving-explorer smoke (the racy
+fixture must be caught, the safe one must pass), and asserts the gate's
+own invariants hold:
 
   * zero unsuppressed findings over the real tree,
   * an acyclic lock graph with the engine lock outermost,
+  * the explorer catches the seeded race and clears the safe fixture,
   * the whole pass stays under a CI-scale wall-time budget.
 
-Emits ``name,us_per_call,derived`` CSV rows.
+Emits ``name,us_per_call,derived`` CSV rows and writes the full record
+to ``BENCH_analysis.json`` so CI tracks the gate's cost over time.
 
   PYTHONPATH=src python -m benchmarks.bench_analysis [--smoke]
 """
@@ -17,20 +21,28 @@ Emits ``name,us_per_call,derived`` CSV rows.
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import time
 
 from benchmarks.common import emit
 from repro.analysis import analyze, build_lock_graph, load_project
+from repro.analysis.explore import (
+    RacySingleFlightModel,
+    SafeSingleFlightModel,
+    explore,
+    fuzz,
+)
+from repro.analysis.typestate import run_typestate
 
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), os.pardir))
 # Generous CI-machine bound; the point is catching an accidental
-# complexity blow-up (the call-graph fixpoints are the risky part), not
-# micro-timing.
+# complexity blow-up (the call-graph and path fixpoints are the risky
+# part), not micro-timing.
 FULL_PASS_BUDGET_S = 60.0
 
 
-def main(quick: bool = False) -> None:
+def main(quick: bool = False, out: str = "BENCH_analysis.json") -> None:
     paths = [os.path.join(REPO_ROOT, "src")]
     if not quick:
         paths.append(os.path.join(REPO_ROOT, "tests"))
@@ -60,14 +72,68 @@ def main(quick: bool = False) -> None:
 
     # Parse cost alone (project load, no rules) for the breakdown.
     t0 = time.perf_counter()
-    load_project(paths)
+    fresh_project, _ = load_project(paths)
     t_load = time.perf_counter() - t0
     emit("analysis_parse_only", t_load * 1e6, f"files={n_files}")
+
+    # Typestate interpreter alone, on a fresh (uncached) project.
+    t0 = time.perf_counter()
+    ts_findings = 0
+    for module in fresh_project.modules:
+        ts_findings += len(run_typestate(module, fresh_project))
+    t_typestate = time.perf_counter() - t0
+    emit("analysis_typestate_pass", t_typestate * 1e6,
+         f"files={n_files};findings={ts_findings}")
+
+    # Interleaving-explorer smoke: the racy fixture must be caught, the
+    # safe one must survive a bounded exhaustive pass.
+    t0 = time.perf_counter()
+    racy = fuzz(RacySingleFlightModel, seed=3, runs=10)
+    t_fuzz = time.perf_counter() - t0
+    assert not racy.ok, "explorer missed the seeded race"
+    emit("explore_fuzz_racy", t_fuzz * 1e6, f"schedules={racy.schedules}")
+
+    t0 = time.perf_counter()
+    safe = explore(SafeSingleFlightModel, preemption_bound=1,
+                   max_schedules=60)
+    t_explore = time.perf_counter() - t0
+    assert safe.ok, safe.describe()
+    emit("explore_bounded_safe", t_explore * 1e6,
+         f"schedules={safe.schedules}")
+
+    record = {
+        "bench": "analysis",
+        "smoke": quick,
+        "files": n_files,
+        "findings": len(findings),
+        "new": len(new),
+        "lock_nodes": len(graph.nodes),
+        "lock_edges": len(graph.edges),
+        "typestate_findings": ts_findings,
+        "timings_s": {
+            "full_pass": t_analyze,
+            "lock_graph": t_graph,
+            "parse_only": t_load,
+            "typestate_pass": t_typestate,
+            "explore_fuzz_racy": t_fuzz,
+            "explore_bounded_safe": t_explore,
+        },
+        "explorer": {
+            "racy_schedules": racy.schedules,
+            "racy_caught": not racy.ok,
+            "safe_schedules": safe.schedules,
+            "safe_ok": safe.ok,
+        },
+    }
+    with open(out, "w", encoding="utf-8") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="src only (the CI-sized quick pass)")
+    ap.add_argument("--out", default="BENCH_analysis.json")
     args = ap.parse_args()
-    main(quick=args.smoke)
+    main(quick=args.smoke, out=args.out)

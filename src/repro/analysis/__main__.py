@@ -36,8 +36,15 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--write-baseline", action="store_true",
                     help="grandfather every current new finding into the "
                          "baseline file and exit 0")
+    ap.add_argument("--check-baseline", action="store_true",
+                    help="fail (exit 1) when the baseline holds stale "
+                         "fingerprints no current finding matches — dead "
+                         "grandfather entries must be pruned, not carried")
     ap.add_argument("--locks-md", default=None, metavar="PATH",
                     help="render the lock-order graph to PATH (markdown)")
+    ap.add_argument("--check-locks-md", default=None, metavar="PATH",
+                    help="fail (exit 1) when PATH differs from the "
+                         "freshly-rendered lock-order graph (doc drift gate)")
     ap.add_argument("--no-lock-graph", action="store_true",
                     help="skip the lock-order graph/cycle gate")
     ap.add_argument("--list-rules", action="store_true")
@@ -66,6 +73,22 @@ def main(argv: list[str] | None = None) -> int:
         if args.locks_md:
             with open(args.locks_md, "w", encoding="utf-8") as fh:
                 fh.write(lock_graph.render_markdown())
+        if args.check_locks_md:
+            want = lock_graph.render_markdown()
+            try:
+                with open(args.check_locks_md, encoding="utf-8") as fh:
+                    have = fh.read()
+            except OSError:
+                have = None
+            if have != want:
+                print(f"error: {args.check_locks_md} is stale — regenerate "
+                      f"with --locks-md {args.check_locks_md}",
+                      file=sys.stderr)
+                return 1
+    elif args.check_locks_md:
+        print("error: --check-locks-md requires the lock graph "
+              "(drop --no-lock-graph)", file=sys.stderr)
+        return 2
 
     baseline_path = args.baseline
     if baseline_path is None and os.path.exists(DEFAULT_BASELINE):
@@ -74,6 +97,19 @@ def main(argv: list[str] | None = None) -> int:
                 if baseline_path and os.path.exists(baseline_path) else None)
 
     report = Report.build(findings, baseline=baseline, lock_graph=lock_graph)
+
+    if args.check_baseline and baseline is not None:
+        current = {f.fingerprint() for f in findings}
+        stale = sorted(fp for fp in baseline.fingerprints if fp not in current)
+        if stale:
+            for fp in stale:
+                entry = baseline.fingerprints[fp]
+                print(f"stale baseline entry {fp}: {entry.get('rule')} "
+                      f"{entry.get('path')}: {entry.get('message')}",
+                      file=sys.stderr)
+            print(f"error: {len(stale)} stale baseline fingerprint(s) — "
+                  f"re-run --write-baseline to prune", file=sys.stderr)
+            return 1
 
     if args.write_baseline:
         merged = Baseline.from_findings(report.new + report.baselined)

@@ -519,7 +519,10 @@ def load_project(paths: list[str]) -> tuple[Project, list[Finding]]:
             with open(path, encoding="utf-8") as fh:
                 source = fh.read()
             modules.append(Module(path, source))
-        except (SyntaxError, UnicodeDecodeError) as e:
+        except (SyntaxError, UnicodeDecodeError, ValueError, OSError) as e:
+            # ValueError: compile() refuses null bytes; OSError: the file
+            # vanished or is unreadable mid-walk. Either way: a per-file
+            # finding, never a crashed analyzer.
             errors.append(Finding(
                 rule="RP000", path=path,
                 line=getattr(e, "lineno", 1) or 1, col=0,

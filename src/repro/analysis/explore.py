@@ -1,0 +1,589 @@
+"""Deterministic interleaving explorer over the concurrency core.
+
+Runs small concurrency *models* — a few threads exercising a real
+object (`CacheIndex` single flight, `UploadPool` close-vs-submit,
+`PeerGroup` failover) or a deliberately-broken fixture — under
+`repro.sched.CoopScheduler`, with the typestate protocols from
+`repro.analysis.protocols` attached as runtime monitors. Two search
+modes over the schedule space:
+
+* `fuzz(model, seed=...)` — seeded random schedules; identical seed,
+  identical trace and verdict, machine-independent (the scheduler's
+  clock is virtual and its candidate ordering is by task name).
+* `explore(model, preemption_bound=...)` — CHESS-style exhaustive
+  enumeration of every schedule reachable with at most N preemptions
+  (a context switch at a point where the running task could have
+  continued). Most real concurrency bugs need only 1–2.
+
+A violating schedule's decision sequence is returned in the `Verdict`;
+`replay(model, decisions)` re-runs exactly that interleaving.
+
+The monitors are the *same* `ProtocolSpec` tables the static pass
+interprets — plus the one invariant statics cannot see: at most one
+resource per key in an `exclusive_states` state (single flight).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from ..sched import (
+    CoopScheduler,
+    DeadlockError,
+    LivelockError,
+    RandomPicker,
+    ReplayPicker,
+    TaskFailed,
+)
+from .protocols import CACHE_ACQUIRE, LIFECYCLE, ProtocolSpec
+
+__all__ = [
+    "ProtocolMonitor",
+    "Verdict",
+    "fuzz",
+    "explore",
+    "replay",
+    "RacySingleFlightModel",
+    "SafeSingleFlightModel",
+    "SingleFlightModel",
+    "UploadPoolCloseModel",
+    "PeerFailoverModel",
+]
+
+
+# ---------------------------------------------------------------------------
+# Runtime protocol monitor.
+# ---------------------------------------------------------------------------
+
+class ProtocolMonitor:
+    """Runs `ProtocolSpec` state machines over live objects.
+
+    Violations are *recorded*, never raised — a bad interleaving must
+    run to completion so its full trace and decision sequence can be
+    reported and replayed.
+    """
+
+    def __init__(self) -> None:
+        self.violations: list[str] = []
+        #: (spec name, state, key) -> occupying handle, for states at
+        #: most one resource per key may hold (single flight).
+        self._exclusive: dict[tuple[str, str, str], object] = {}
+        #: cache-acquire pin refcounts by block id.
+        self.pins: dict[str, int] = {}
+
+    def note(self, msg: str) -> None:
+        if msg not in self.violations:
+            self.violations.append(msg)
+
+    def pin_imbalance(self) -> dict[str, int]:
+        """Blocks whose pins were not released exactly as taken."""
+        return {bid: n for bid, n in sorted(self.pins.items()) if n != 0}
+
+    # -- generic receiver-matched protocols (lifecycle etc.) ----------------
+    def watch(self, obj, spec: ProtocolSpec):
+        """Attach `spec`'s event machine to one live object (the object
+        IS the resource). A `uses` method counts as a violation only
+        when it *returns normally* in a final state — an API that raises
+        on use-after-close has defended itself, and the model catching
+        that error is conforming."""
+        mon = self
+        state = {"s": spec.initial or spec.states[0]}
+        label = type(obj).__name__
+
+        for event, trans in spec.events.items():
+            inner = getattr(obj, event, None)
+            if inner is None:
+                continue
+
+            def wrap_event(event=event, trans=trans, inner=inner):
+                def call(*a, **k):
+                    out = inner(*a, **k)
+                    st = state["s"]
+                    if st in trans:
+                        state["s"] = trans[st]
+                    elif st not in spec.monitor_ignore_states:
+                        mon.note(f"{spec.name}: {event}() on {label} "
+                                 f"in state {st!r}")
+                    return out
+                return call
+
+            setattr(obj, event, wrap_event())
+
+        for use in spec.uses:
+            inner = getattr(obj, use, None)
+            if inner is None:
+                continue
+
+            def wrap_use(use=use, inner=inner):
+                def call(*a, **k):
+                    st = state["s"]
+                    out = inner(*a, **k)
+                    if st in spec.final:
+                        mon.note(f"{spec.name}: {use}() succeeded on "
+                                 f"{label} in final state {st!r}")
+                    return out
+                return call
+
+            setattr(obj, use, wrap_use())
+        return obj
+
+    # -- cache-acquire (arg0-matched, resources born from returns) ----------
+    def watch_index(self, index, spec: ProtocolSpec = CACHE_ACQUIRE):
+        """Attach the cache-acquire machine to a live index-like object.
+
+        Transitions, ignore-states and exclusivity all come from the
+        spec; the glue here only extracts resource identity — flights
+        from `acquire`'s return tuple, pins keyed by block id — which is
+        the part the static binder does from the AST. Wrappers are
+        instance attributes, so internal calls such as `leave()` →
+        ``self.unpin(...)`` route through the monitor too.
+        """
+        mon = self
+        # One logical resource PER ACQUISITION, not per handle: a leader
+        # and its waiters share the same flight object, but each holds
+        # its own obligation (publish/abort vs join/leave).
+        acquisitions: dict[int, list[list]] = {}   # id(handle) -> [[state, key]]
+        live: dict[int, object] = {}    # keep handles alive: ids stay unique
+
+        def enter(handle, st: str, key: str) -> None:
+            acquisitions.setdefault(id(handle), []).append([st, key])
+            live[id(handle)] = handle
+            if st in spec.exclusive_states:
+                slot = (spec.name, st, key)
+                if slot in mon._exclusive:
+                    mon.note(f"{spec.name}: two concurrent {st!r} resources "
+                             f"for key {key!r} (single flight violated)")
+                else:
+                    mon._exclusive[slot] = handle
+
+        def transition(handle, event: str) -> None:
+            lst = acquisitions.get(id(handle))
+            if not lst:
+                return                   # a flight born before watching began
+            trans = spec.events.get(event, {})
+            for res in lst:              # the acquisition this event retires
+                if res[0] in trans:
+                    if res[0] in spec.exclusive_states:
+                        mon._exclusive.pop((spec.name, res[0], res[1]), None)
+                    res[0] = trans[res[0]]
+                    return
+            for res in lst:
+                if res[0] not in spec.monitor_ignore_states:
+                    mon.note(f"{spec.name}: {event}() on a {res[0]!r} "
+                             f"resource (key {res[1]!r})")
+                    return
+
+        real_acquire = index.acquire
+        real = {m: getattr(index, m)
+                for m in ("publish", "abort_fetch", "join", "leave", "unpin")
+                if hasattr(index, m)}
+
+        def acquire(block_id, *a, **k):
+            kind, val = real_acquire(block_id, *a, **k)
+            st = spec.discriminants.get(kind)
+            if st == "pinned":
+                mon.pins[block_id] = mon.pins.get(block_id, 0) + 1
+            elif st is not None:
+                enter(val, st, block_id)
+            return kind, val
+
+        def publish(flight, *a, **k):
+            out = real["publish"](flight, *a, **k)
+            # A publish from a still-leading flight pins once for the
+            # leader plus once per registered waiter (their joins return
+            # pre-pinned hits). flight.waiters is frozen once done.
+            leading = [r for r in acquisitions.get(id(flight), [])
+                       if r[0] == "leading"]
+            if leading and not getattr(flight, "reclaimed", False):
+                bid = getattr(flight, "block_id", leading[0][1])
+                mon.pins[bid] = (mon.pins.get(bid, 0) + 1
+                                 + getattr(flight, "waiters", 0))
+            transition(flight, "publish")
+            return out
+
+        def abort_fetch(flight, *a, **k):
+            out = real["abort_fetch"](flight, *a, **k)
+            transition(flight, "abort_fetch")
+            return out
+
+        def join(flight, *a, **k):
+            out = real["join"](flight, *a, **k)
+            st = out[0] if isinstance(out, tuple) else out
+            if st != "timeout":          # keep joining / leave() still owed
+                transition(flight, "join")
+            return out
+
+        def leave(flight, *a, **k):
+            out = real["leave"](flight, *a, **k)
+            transition(flight, "leave")
+            return out
+
+        def unpin(block_id, *a, **k):
+            n = mon.pins.get(block_id, 0) - 1
+            mon.pins[block_id] = n
+            if n < 0:
+                mon.note(f"{spec.name}: unpin({block_id!r}) without a "
+                         f"matching pin (double unpin)")
+            return real["unpin"](block_id, *a, **k)
+
+        index.acquire = acquire
+        if "publish" in real:
+            index.publish = publish
+        if "abort_fetch" in real:
+            index.abort_fetch = abort_fetch
+        if "join" in real:
+            index.join = join
+        if "leave" in real:
+            index.leave = leave
+        if "unpin" in real:
+            index.unpin = unpin
+        return index
+
+
+# ---------------------------------------------------------------------------
+# Verdicts and search.
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Verdict:
+    """Outcome of a schedule search. `decisions` replays the violating
+    (or final) schedule via `replay`."""
+
+    ok: bool
+    schedules: int
+    violations: list[str]
+    trace: list[str]
+    decisions: tuple[int, ...]
+    error: str | None = None
+
+    def describe(self) -> str:
+        if self.ok:
+            return f"ok after {self.schedules} schedule(s)"
+        what = "; ".join(self.violations) or self.error or "violation"
+        return (f"violation after {self.schedules} schedule(s): {what} "
+                f"[replay decisions={list(self.decisions)}]")
+
+
+@dataclass
+class _Outcome:
+    trace: list = field(default_factory=list)
+    points: list = field(default_factory=list)
+    decisions: list = field(default_factory=list)
+    violations: list = field(default_factory=list)
+    error: str | None = None
+
+
+def _run_schedule(model_factory, picker) -> _Outcome:
+    out = _Outcome()
+    sched = CoopScheduler(picker)
+    monitor = ProtocolMonitor()
+    with sched.activate():
+        model = model_factory()
+        for name, fn in model.setup(monitor):
+            sched.spawn(fn, name=name)
+        try:
+            sched.run()
+            model.check()
+        except AssertionError as e:
+            out.error = f"check failed: {e}"
+        except DeadlockError as e:
+            out.error = f"deadlock: {e}"
+        except LivelockError as e:
+            out.error = f"livelock: {e}"
+        except TaskFailed as e:
+            out.error = str(e)
+    out.trace = list(sched.trace)
+    out.points = list(sched.points)
+    out.decisions = list(sched.decisions)
+    out.violations = list(monitor.violations)
+    return out
+
+
+def _verdict(out: _Outcome, schedules: int) -> Verdict:
+    return Verdict(
+        ok=not out.violations and out.error is None,
+        schedules=schedules,
+        violations=out.violations,
+        trace=out.trace,
+        decisions=tuple(out.decisions),
+        error=out.error,
+    )
+
+
+def replay(model_factory, decisions) -> Verdict:
+    """Re-run one exact interleaving from a recorded decision sequence."""
+    return _verdict(_run_schedule(model_factory, ReplayPicker(decisions)), 1)
+
+
+def fuzz(model_factory, *, seed: int = 0, runs: int = 25) -> Verdict:
+    """Seeded random schedules; stops at the first violating one.
+    Fully deterministic in (model, seed, runs)."""
+    out = None
+    for i in range(runs):
+        out = _run_schedule(model_factory, RandomPicker(f"{seed}:{i}"))
+        if out.violations or out.error is not None:
+            return _verdict(out, i + 1)
+    return _verdict(out, runs)
+
+
+def explore(model_factory, *, preemption_bound: int = 2,
+            max_schedules: int = 200) -> Verdict:
+    """Preemption-bounded exhaustive search (CHESS-style).
+
+    Runs the nonpreemptive baseline schedule, then branches a new
+    decision prefix at every scheduling point where a *different*
+    runnable task could have been chosen — counting a switch away from
+    a still-runnable task as one preemption and never exceeding the
+    bound. Within `max_schedules`, every schedule with ≤ bound
+    preemptions is eventually visited."""
+    tried: set[tuple[int, ...]] = set()
+    stack: list[tuple[int, ...]] = [()]
+    runs = 0
+    last = None
+    while stack and runs < max_schedules:
+        prefix = stack.pop()
+        if prefix in tried:
+            continue
+        tried.add(prefix)
+        out = _run_schedule(model_factory, ReplayPicker(prefix))
+        runs += 1
+        last = out
+        if out.violations or out.error is not None:
+            return _verdict(out, runs)
+        # Cumulative preemption count before each point.
+        pre, prelist = 0, []
+        for d, (_names, _chosen, cur) in zip(out.decisions, out.points):
+            prelist.append(pre)
+            if cur is not None and d != cur:
+                pre += 1
+        for i in range(len(out.points) - 1, len(prefix) - 1, -1):
+            names, chosen, cur = out.points[i]
+            for j in range(len(names)):
+                if j == chosen:
+                    continue
+                cost = 0 if (cur is None or j == cur) else 1
+                if prelist[i] + cost <= preemption_bound:
+                    branch = tuple(out.decisions[:i]) + (j,)
+                    if branch not in tried:
+                        stack.append(branch)
+    return _verdict(last, runs) if last is not None else Verdict(
+        ok=True, schedules=0, violations=[], trace=[], decisions=())
+
+
+# ---------------------------------------------------------------------------
+# Fixture models: a known-racy single-flight index and its fixed twin.
+# The explorer's own tests calibrate against these — the racy one MUST
+# be caught, the safe one MUST pass.
+# ---------------------------------------------------------------------------
+
+class _FixtureFlight:
+    __slots__ = ("block_id", "done", "waiters")
+
+    def __init__(self, block_id: str) -> None:
+        self.block_id = block_id
+        self.done = False
+        self.waiters = 0
+
+
+class _BrokenIndex:
+    """Deliberately racy single-flight registry: the absent-check and
+    the leader-install sit in two separate lock regions (check-then-act),
+    so two threads interleaved between them both become leaders."""
+
+    def __init__(self) -> None:
+        import threading
+        self._lock = threading.Lock()
+        self._flights: dict[str, _FixtureFlight] = {}
+        self._published: set[str] = set()
+
+    def acquire(self, block_id: str):
+        with self._lock:
+            if block_id in self._published:
+                return "hit", None
+            fl = self._flights.get(block_id)
+        if fl is not None:
+            return "wait", fl
+        # BUG under test: a second thread can pass the check above
+        # before this block runs, and both install themselves.
+        with self._lock:
+            fl = _FixtureFlight(block_id)
+            self._flights[block_id] = fl
+            return "leader", fl
+
+    def publish(self, flight: _FixtureFlight) -> None:
+        with self._lock:
+            flight.done = True
+            self._published.add(flight.block_id)
+            if self._flights.get(flight.block_id) is flight:
+                del self._flights[flight.block_id]
+
+    def abort_fetch(self, flight: _FixtureFlight) -> None:
+        self.publish(flight)
+
+    def join(self, flight: _FixtureFlight, timeout: float | None = None):
+        return ("hit", None) if flight.done else ("timeout", None)
+
+
+class _SafeIndex(_BrokenIndex):
+    """The fixed twin: check and install in one atomic lock region."""
+
+    def acquire(self, block_id: str):
+        with self._lock:
+            if block_id in self._published:
+                return "hit", None
+            fl = self._flights.get(block_id)
+            if fl is not None:
+                return "wait", fl
+            fl = _FixtureFlight(block_id)
+            self._flights[block_id] = fl
+            return "leader", fl
+
+
+class _FixtureSingleFlight:
+    def __init__(self, index_cls) -> None:
+        self._index_cls = index_cls
+        self.fetches = 0
+
+    def setup(self, monitor: ProtocolMonitor):
+        self.index = monitor.watch_index(self._index_cls())
+
+        def reader():
+            kind, fl = self.index.acquire("blk")
+            if kind == "leader":
+                self.fetches += 1          # "the" store fetch
+                self.index.publish(fl)
+            elif kind == "wait":
+                self.index.join(fl)
+            # "hit": already resident, nothing owed
+
+        return [("reader-a", reader), ("reader-b", reader)]
+
+    def check(self) -> None:
+        # Single flight's observable promise: ONE store fetch per block.
+        # (Two overlapping leaders additionally trip the monitor's
+        # exclusive-state check, but that needs a second preemption.)
+        assert self.fetches == 1, f"{self.fetches} fetches of one block"
+
+
+def RacySingleFlightModel() -> _FixtureSingleFlight:
+    return _FixtureSingleFlight(_BrokenIndex)
+
+
+def SafeSingleFlightModel() -> _FixtureSingleFlight:
+    return _FixtureSingleFlight(_SafeIndex)
+
+
+# ---------------------------------------------------------------------------
+# Real-tree models.
+# ---------------------------------------------------------------------------
+
+class SingleFlightModel:
+    """Three readers race `CacheIndex.acquire` on one missing block: the
+    protocol monitor checks single-leadership and pin balance; `check`
+    asserts exactly one backing-store fetch and a fully-released index."""
+
+    def __init__(self, readers: int = 3) -> None:
+        self.readers = readers
+        self.fetches = 0
+
+    def setup(self, monitor: ProtocolMonitor):
+        from ..store.tiers import CacheIndex, MemTier
+        self.tier = MemTier(capacity=1 << 20)
+        self.index = monitor.watch_index(
+            CacheIndex([self.tier], flight_ttl_s=None))
+        self.monitor = monitor
+        payload = b"x" * 64
+
+        def reader():
+            idx = self.index
+            kind, val = idx.acquire("blk")
+            if kind == "leader":
+                try:
+                    self.fetches += 1
+                    self.tier.write("blk", payload)
+                except BaseException:
+                    idx.abort_fetch(val)
+                    raise
+                idx.publish(val, self.tier, len(payload))
+                assert self.tier.read("blk") == payload
+                idx.unpin("blk")
+            elif kind == "wait":
+                st, tier = idx.join(val)
+                assert st == "hit"
+                assert tier.read("blk") == payload
+                idx.unpin("blk")
+            else:                          # a hit: leader already published
+                assert val.read("blk") == payload
+                idx.unpin("blk")
+
+        return [(f"reader-{i}", reader) for i in range(self.readers)]
+
+    def check(self) -> None:
+        assert self.fetches == 1, f"single flight broken: {self.fetches} fetches"
+        assert not self.index._flights, "flight leaked past the run"
+        entry = self.index._entries.get("blk")
+        assert entry is not None and entry.refs == 0, "pins leaked"
+        assert not self.monitor.pin_imbalance(), (
+            f"pin imbalance: {self.monitor.pin_imbalance()}")
+
+
+class UploadPoolCloseModel:
+    """`UploadPool.close` races `submit`: every job `submit` *accepted*
+    must execute before close returns; late submits must be refused
+    loudly, never silently dropped."""
+
+    def __init__(self, jobs: int = 3) -> None:
+        self.jobs = jobs
+        self.submitted: list[int] = []
+        self.executed: list[int] = []
+
+    def setup(self, monitor: ProtocolMonitor):
+        from ..io.write import UploadPool
+        self.pool = monitor.watch(UploadPool(), LIFECYCLE)
+        self.pool.ensure(1)
+
+        def submitter():
+            for i in range(self.jobs):
+                try:
+                    self.pool.submit(lambda i=i: self.executed.append(i))
+                except ValueError:
+                    return                 # pool closed under us: refused, fine
+                self.submitted.append(i)
+
+        def closer():
+            self.pool.close()
+
+        return [("submitter", submitter), ("closer", closer)]
+
+    def check(self) -> None:
+        assert self.pool._closed
+        assert sorted(self.executed) == self.submitted, (
+            f"accepted jobs dropped: submitted={self.submitted} "
+            f"executed={sorted(self.executed)}")
+
+
+class PeerFailoverModel:
+    """Concurrent `PeerGroup.note_failure` reports racing to the miss
+    limit: the peer must die exactly once (one death event, consistent
+    membership), no matter which reporter's update lands last."""
+
+    def setup(self, monitor: ProtocolMonitor):
+        from ..peer.group import PeerGroup, PeerSpec
+        self.group = PeerGroup(
+            0,
+            [PeerSpec(1, "sib-1", 1), PeerSpec(2, "sib-2", 1)],
+            heartbeat_interval_s=None,
+            miss_limit=2,
+        )
+
+        def reporter():
+            self.group.note_failure(1)
+
+        return [("reporter-a", reporter), ("reporter-b", reporter)]
+
+    def check(self) -> None:
+        g = self.group
+        assert not g.is_alive(1), "peer 1 should be dead at the miss limit"
+        assert g.deaths == 1, f"death double-counted: {g.deaths}"
+        assert g.alive_ids() == [0, 2]
+        g.close()

@@ -1,0 +1,334 @@
+"""Declarative typestate protocols for the repo's paired-resource APIs.
+
+One table, two interpreters. The specs below describe every protocol the
+concurrency core relies on — acquire→publish/abort, pin→unpin,
+reserve→commit/cancel, multipart start→complete/abort, open→close
+lifecycles — as small state machines: which call *creates* a resource,
+which calls *advance* it, and which states are legal to die in.
+
+`repro.analysis.typestate` walks these machines path-sensitively over
+the AST (rules RP009+); `repro.analysis.explore.ProtocolMonitor` runs
+the very same machines as runtime monitors over explored thread
+interleavings. Neither layer hard-codes a transition: change a spec
+here and both the static gate and the dynamic explorer change with it.
+
+The specs are deliberately under-approximating on the static side: a
+resource that *escapes* the function (returned, yielded, stored on
+self, appended to a collection, or passed to a call the spec does not
+recognize) transfers its obligation to whoever received it, and the
+path is not reported. The analysis never guesses.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+__all__ = [
+    "Creator",
+    "ProtocolSpec",
+    "PROTOCOLS",
+    "CACHE_ACQUIRE",
+    "RESERVATION",
+    "MULTIPART",
+    "LIFECYCLE",
+    "spec_for_rule",
+    "rule_ids",
+]
+
+
+@dataclass(frozen=True)
+class Creator:
+    """One way a protocol resource comes into being.
+
+    kind:
+      "method" — ``recv.<method>(...)``; the receiver must look like one
+                 of `receiver_types` (project class-table subclass match)
+                 or match the name hints (terminal attribute/variable
+                 name equality or suffix). Both checks are heuristic and
+                 deliberately narrow: no match, no resource, no finding.
+      "class"  — ``ClassName(...)`` (or ``mod.ClassName(...)``).
+
+    binds:
+      "tuple2" — ``kind, handle = recv.m(...)``: first target is the
+                 discriminator (refined by ``==``/``!=``/``assert``),
+                 second is the value handle. The creator's first
+                 argument's source text keys the resource as well (pins
+                 are named by block id, not by the tier handle).
+      "value"  — ``x = recv.m(...)``: x is the handle; a ``None`` check
+                 on x refines reserved-vs-none.
+      "bool"   — ``ok = recv.m(...)`` or ``if recv.m(...):``: the
+                 *receiver expression text* is the handle; the assigned
+                 name (if any) is the discriminator.
+    """
+
+    kind: str = "method"
+    method: str = ""
+    class_names: tuple[str, ...] = ()
+    receiver_types: tuple[str, ...] = ()
+    receiver_hints: tuple[str, ...] = ()
+    receiver_suffixes: tuple[str, ...] = ()
+    binds: str = "value"
+    #: never treat `self.<method>()` as creating a resource — a method
+    #: calling its own API is implementing the protocol, not consuming it.
+    allow_self_receiver: bool = False
+    #: substrings of the enclosing function name that exempt it — e.g.
+    #: reservation constructors (`reserve_space`, `_tier_reserve`) hand
+    #: their reservation to the caller *by contract*.
+    skip_in_functions: tuple[str, ...] = ()
+
+
+@dataclass(frozen=True)
+class ProtocolSpec:
+    """A typestate machine over one resource kind.
+
+    `events` maps a method name to {state: next_state}; calling an event
+    method in a state missing from its map is a no-op statically
+    (pass-through — the static pass under-approximates) but a violation
+    dynamically unless listed in `monitor_ignore_states`. `immediate`
+    transitions are violations for BOTH layers the moment they happen
+    (double-unpin does not wait for function exit). `exit_rules` maps a
+    non-final state to the (rule_id, message) reported when a path ends
+    with the resource still in it.
+    """
+
+    name: str
+    resource: str
+    creators: tuple[Creator, ...]
+    states: tuple[str, ...]
+    final: frozenset[str]
+    #: tuple2 creators: discriminator value -> initial state.
+    discriminants: dict[str, str] = field(default_factory=dict)
+    #: value creators: state when the handle is non-None / None.
+    initial: str = ""
+    initial_none: str = ""
+    #: method -> {state: next_state}. Match mode per event: "arg0" means
+    #: the event names the resource via its first argument (publish on a
+    #: flight var, unpin on a block-id expression); "receiver" means the
+    #: resource IS the receiver (tier.commit, mp.complete).
+    events: dict[str, dict[str, str]] = field(default_factory=dict)
+    event_match: str = "receiver"
+    #: method -> {state: message}: calling this in this state is a
+    #: violation right there (both layers).
+    immediate: dict[str, dict[str, str]] = field(default_factory=dict)
+    #: methods that *use* the resource (receiver match) without changing
+    #: state; using it in a state listed in `immediate_use` is a
+    #: violation (read-after-unpin).
+    uses: tuple[str, ...] = ()
+    immediate_use: dict[str, str] = field(default_factory=dict)
+    #: non-final state -> (rule_id, message template). `{state}` /
+    #: `{resource}` / `{line}` interpolated by the reporter.
+    exit_rules: dict[str, tuple[str, str]] = field(default_factory=dict)
+    #: "src"  — exception edges are checked only outside tests (a test
+    #:          that dies mid-protocol already fails loudly);
+    #: "none" — only normal exits (return / fall-off) are checked.
+    exception_paths: str = "src"
+    #: dynamic-monitor-only: states in which an event is silently legal
+    #: even though `events` has no transition for it.
+    monitor_ignore_states: frozenset[str] = frozenset()
+    #: dynamic-monitor-only: at most ONE live resource sharing a key may
+    #: occupy these states at a time (single-flight: one leader per
+    #: block id). Statically invisible — it is a cross-resource
+    #: invariant — so the explorer is the layer that checks it.
+    exclusive_states: frozenset[str] = frozenset()
+
+    def rule_ids(self) -> set[str]:
+        return {rid for rid, _ in self.exit_rules.values()}
+
+
+# ---------------------------------------------------------------------------
+# The protocols.
+# ---------------------------------------------------------------------------
+
+#: CacheIndex.acquire returns ("hit", tier) | ("leader", flight) |
+#: ("wait", flight). A leader MUST publish or abort the flight on every
+#: path — a leaked flight wedges every waiter until the reclaim TTL. A
+#: waiter MUST join or leave — a silent exit strands the waiter count.
+#: A hit pins the block — unpin exactly once, and never read after.
+CACHE_ACQUIRE = ProtocolSpec(
+    name="cache-acquire",
+    resource="CacheIndex.acquire handle",
+    creators=(
+        Creator(
+            kind="method", method="acquire", binds="tuple2",
+            receiver_types=("CacheIndex",),
+            receiver_hints=("index", "idx"),
+            receiver_suffixes=("index",),
+        ),
+    ),
+    states=("pinned", "leading", "waiting", "done", "released"),
+    final=frozenset({"done", "released"}),
+    discriminants={"hit": "pinned", "leader": "leading", "wait": "waiting"},
+    events={
+        "publish": {"leading": "done"},
+        "abort_fetch": {"leading": "done"},
+        "join": {"waiting": "done"},
+        "leave": {"waiting": "done"},
+        "unpin": {"pinned": "released"},
+    },
+    event_match="arg0",
+    immediate={
+        "unpin": {"released": "pin already released here (double unpin)"},
+    },
+    uses=("read",),
+    immediate_use={"released": "read after unpin (use-after-release)"},
+    # No exit rule for "pinned": engines park pins across function
+    # boundaries by design (unpinned at consumption); the dynamic
+    # monitor balances pin refcounts instead. RP010 is the immediate
+    # double-unpin / use-after-release rule.
+    exit_rules={
+        "leading": ("RP009",
+                    "leader flight from acquire() at line {line} can leak "
+                    "here without publish()/abort_fetch(); waiters stall "
+                    "until the reclaim TTL"),
+        "waiting": ("RP009",
+                    "waiter handle from acquire() at line {line} escapes "
+                    "here without join()/leave(); the flight's waiter "
+                    "count is stranded"),
+    },
+    exception_paths="src",
+    monitor_ignore_states=frozenset({"done", "released"}),
+    exclusive_states=frozenset({"leading"}),
+)
+
+#: reserve_space()/reserve() take capacity out of a tier's budget via
+#: `_inflight`; only commit()/cancel() give it back. A reservation
+#: leaked on an error edge shrinks the tier forever (verify_used counts
+#: inflight as legitimate).
+RESERVATION = ProtocolSpec(
+    name="reservation",
+    resource="tier capacity reservation",
+    creators=(
+        Creator(
+            kind="method", method="reserve_space", binds="value",
+            receiver_types=("CacheIndex",),
+            receiver_hints=("index", "idx"),
+            receiver_suffixes=("index",),
+            skip_in_functions=("reserve",),
+        ),
+        Creator(
+            kind="method", method="reserve", binds="bool",
+            receiver_types=("CacheTier",),
+            receiver_hints=("cand", "tier", "dst"),
+            receiver_suffixes=("tier",),
+            skip_in_functions=("reserve",),
+        ),
+    ),
+    states=("reserved", "none", "done"),
+    final=frozenset({"none", "done"}),
+    initial="reserved",
+    initial_none="none",
+    events={
+        "commit": {"reserved": "done"},
+        "cancel": {"reserved": "done"},
+    },
+    event_match="receiver",
+    uses=("write",),
+    exit_rules={
+        "reserved": ("RP011",
+                     "reservation from line {line} can reach here without "
+                     "commit()/cancel(); the tier's inflight budget leaks"),
+    },
+    exception_paths="src",
+    monitor_ignore_states=frozenset({"none", "done"}),
+)
+
+#: start_multipart() parks an .mpart directory (or provider upload id);
+#: only complete()/abort() retire it. A leaked handle is an orphaned
+#: partial object that costs money and confuses recovery.
+MULTIPART = ProtocolSpec(
+    name="multipart",
+    resource="multipart upload",
+    creators=(
+        Creator(
+            kind="method", method="start_multipart", binds="value",
+            receiver_types=("ObjectStore",),
+            receiver_hints=("store", "inner", "backing", "s3"),
+            receiver_suffixes=("store",),
+        ),
+    ),
+    states=("open", "done"),
+    final=frozenset({"done"}),
+    initial="open",
+    events={
+        "complete": {"open": "done"},
+        "abort": {"open": "done"},
+    },
+    event_match="receiver",
+    uses=("put_part",),
+    exit_rules={
+        "open": ("RP012",
+                 "multipart upload started at line {line} can reach here "
+                 "without complete()/abort(); the partial object is "
+                 "orphaned"),
+    },
+    exception_paths="src",
+    monitor_ignore_states=frozenset({"done"}),
+)
+
+#: Writer / UploadPool / DeviceFeeder hold threads, queues, and staged
+#: tier blocks; close()/abort()/join() is what releases them. Checked on
+#: normal exits only — an exception unwinding out of a scope that holds
+#: one of these is a crash the tests already surface; `with` blocks and
+#: try/finally discharge the obligation structurally.
+LIFECYCLE = ProtocolSpec(
+    name="lifecycle",
+    resource="open writer/pool/feeder",
+    creators=(
+        Creator(kind="method", method="open_write", binds="value"),
+        Creator(kind="class", class_names=("UploadPool", "DeviceFeeder"),
+                binds="value"),
+    ),
+    states=("open", "done"),
+    final=frozenset({"done"}),
+    initial="open",
+    events={
+        "close": {"open": "done"},
+        "abort": {"open": "done"},
+        "join": {"open": "done"},
+        "close_async": {"open": "done"},
+    },
+    event_match="receiver",
+    uses=("write", "flush", "submit", "ensure", "put", "get"),
+    exit_rules={
+        "open": ("RP013",
+                 "{resource} created at line {line} can reach here "
+                 "without close()/abort()/join()"),
+    },
+    exception_paths="none",
+    monitor_ignore_states=frozenset({"done"}),
+)
+
+PROTOCOLS: tuple[ProtocolSpec, ...] = (
+    CACHE_ACQUIRE, RESERVATION, MULTIPART, LIFECYCLE,
+)
+
+
+def rule_ids() -> list[str]:
+    """Every rule id any protocol can report, sorted."""
+    out: set[str] = set()
+    for spec in PROTOCOLS:
+        for rid, _ in spec.exit_rules.values():
+            out.add(rid)
+        if spec.immediate or spec.immediate_use:
+            out.add(_immediate_rule_id(spec))
+    return sorted(out)
+
+
+def _immediate_rule_id(spec: ProtocolSpec) -> str:
+    """Immediate violations (double-unpin, use-after-release) report
+    under the pin rule for cache-acquire, else the spec's first exit
+    rule id."""
+    if spec is CACHE_ACQUIRE:
+        return "RP010"
+    for rid, _ in spec.exit_rules.values():
+        return rid
+    return "RP000"
+
+
+def spec_for_rule(rule_id: str) -> ProtocolSpec | None:
+    for spec in PROTOCOLS:
+        if any(rid == rule_id for rid, _ in spec.exit_rules.values()):
+            return spec
+        if rule_id == _immediate_rule_id(spec):
+            return spec
+    return None

@@ -65,14 +65,17 @@ def register_rule(
     return deco
 
 
-def all_rules() -> list[RuleSpec]:
-    """Registered rules, sorted by ID (imports the rule module on demand)."""
-    import repro.analysis.rules  # noqa: F401 - registration side effect
+def _load_rule_modules() -> None:
+    import repro.analysis.rules      # noqa: F401 - registration side effect
+    import repro.analysis.typestate  # noqa: F401 - registration side effect
 
+
+def all_rules() -> list[RuleSpec]:
+    """Registered rules, sorted by ID (imports rule modules on demand)."""
+    _load_rule_modules()
     return [_RULES[k] for k in sorted(_RULES)]
 
 
 def get_rule(rule_id: str) -> RuleSpec:
-    import repro.analysis.rules  # noqa: F401 - registration side effect
-
+    _load_rule_modules()
     return _RULES[rule_id]

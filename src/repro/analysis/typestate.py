@@ -1,0 +1,1049 @@
+"""Path-sensitive typestate pass (rules RP009+) over the protocol specs.
+
+A small abstract interpreter walks each function body and forks the
+environment at every branch, loop, and exception edge, tracking the
+protocol resources created along the way (`repro.analysis.protocols`).
+A path that leaves a resource in a non-final state — a leader flight
+never published, a reservation never committed, a multipart upload
+never completed — is reported at the *creation* site, so the allow
+comment (when one is justified) sits on the line that took the
+obligation.
+
+What the interpreter models, and how it stays honest:
+
+* tuple-unpack creators (``kind, val = index.acquire(bid)``) bind a
+  discriminator; ``if kind == "leader"`` / ``assert kind == "hit"`` /
+  ``if tier is None`` refine the per-path state set, and an empty set
+  kills the path as infeasible;
+* every call can raise: each call-bearing statement forks an exception
+  edge that threads through enclosing try/except/finally (checked in
+  src only — a test dying mid-protocol already fails loudly);
+* escapes under-approximate: a resource that is returned, yielded,
+  stored into an attribute/container, captured by a nested function, or
+  passed to a call the spec does not recognize transfers its obligation
+  and is not reported;
+* loops run one abstract iteration; resources created *inside* a loop
+  body escape on the back edge (a later iteration may discharge them),
+  while resources from before the loop keep their state;
+* a per-function path budget bails out silently when branching
+  explodes — under-approximate, never guess.
+
+Immediate violations (double ``unpin``, read-after-unpin) are anchored
+at the offending call instead.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+
+from repro.analysis.core import Finding, FuncInfo, Module, Project
+from repro.analysis.protocols import PROTOCOLS, Creator, ProtocolSpec
+from repro.analysis.registry import register_rule
+
+__all__ = ["run_typestate", "TYPESTATE_RULES"]
+
+#: Per-function cap on concurrently-tracked environments. Past this the
+#: function is skipped (no findings) — under-approximation by design.
+_PATH_BUDGET = 4096
+
+_SCOPE_NODES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda,
+                ast.ClassDef)
+
+# Outcome kinds.
+_FALL, _RETURN, _RAISE, _BREAK, _CONTINUE = range(5)
+
+
+class _Bailout(Exception):
+    """Path budget exceeded — abandon the function without findings."""
+
+
+# ---------------------------------------------------------------------------
+# Resources and environments.
+# ---------------------------------------------------------------------------
+
+@dataclass
+class _Resource:
+    rid: int
+    spec: ProtocolSpec
+    creator: Creator
+    node: ast.AST                      # creation call (finding anchor)
+    #: Name identifiers inside the key expression (``b.block_id`` ->
+    #: {"b"}): passing any of them onward escapes the resource.
+    base_names: frozenset[str] = frozenset()
+    #: discriminator value -> initial atom; "__true__"/"__some__" style
+    #: pseudo-values for bool/None refinement.
+    dmap: dict[str, str] = field(default_factory=dict)
+    truthy_key: str | None = None
+    falsy_key: str | None = None
+
+
+class _Env:
+    """One path's knowledge. Copied on fork; tiny dicts in practice."""
+
+    __slots__ = ("states", "handles", "dvals", "escaped")
+
+    def __init__(self) -> None:
+        self.states: dict[int, frozenset[str]] = {}
+        self.handles: dict[str, int] = {}      # "v:name" / "t:text" -> rid
+        self.dvals: dict[str, tuple[int, frozenset[str]]] = {}
+        self.escaped: set[int] = set()
+
+    def copy(self) -> "_Env":
+        e = _Env.__new__(_Env)
+        e.states = dict(self.states)
+        e.handles = dict(self.handles)
+        e.dvals = dict(self.dvals)
+        e.escaped = set(self.escaped)
+        return e
+
+    def key(self):
+        return (
+            frozenset(self.states.items()),
+            frozenset(self.handles.items()),
+            frozenset(self.dvals.items()),
+            frozenset(self.escaped),
+        )
+
+    def unbind_var(self, name: str) -> None:
+        self.handles.pop("v:" + name, None)
+        self.dvals.pop(name, None)
+
+    def rid_of_expr(self, expr: ast.AST) -> int | None:
+        if isinstance(expr, ast.Name):
+            rid = self.handles.get("v:" + expr.id)
+            if rid is not None:
+                return rid
+        return self.handles.get("t:" + ast.unparse(expr))
+
+
+def _dedupe(envs: list[_Env]) -> list[_Env]:
+    seen, out = set(), []
+    for e in envs:
+        k = e.key()
+        if k not in seen:
+            seen.add(k)
+            out.append(e)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Per-function analysis context.
+# ---------------------------------------------------------------------------
+
+class _Fn:
+    def __init__(self, module: Module, project: Project, fi: FuncInfo) -> None:
+        self.module = module
+        self.project = project
+        self.fi = fi
+        self.name = fi.node.name
+        self.resources: dict[int, _Resource] = {}
+        self._next_rid = 0
+        self.budget = _PATH_BUDGET
+        #: dedupe key -> Finding
+        self.violations: dict[tuple, Finding] = {}
+
+    def new_resource(self, spec: ProtocolSpec, creator: Creator,
+                     node: ast.AST, **kw) -> _Resource:
+        res = _Resource(rid=self._next_rid, spec=spec, creator=creator,
+                        node=node, **kw)
+        self._next_rid += 1
+        self.resources[res.rid] = res
+        return res
+
+    def charge(self, n: int = 1) -> None:
+        self.budget -= n
+        if self.budget < 0:
+            raise _Bailout()
+
+    # -- reporting ----------------------------------------------------------
+    def report_exit(self, res: _Resource, atom: str) -> None:
+        rule, msg = res.spec.exit_rules.get(atom, (None, None))
+        if rule is None:
+            return
+        key = (rule, getattr(res.node, "lineno", 0), atom)
+        if key in self.violations:
+            return
+        line = getattr(res.node, "lineno", 0)
+        self.violations[key] = self.module.finding(
+            rule, res.node,
+            msg.format(line=line, resource=res.spec.resource,
+                       state=atom),
+        )
+
+    def report_immediate(self, rule: str, node: ast.AST, msg: str) -> None:
+        key = (rule, getattr(node, "lineno", 0), msg)
+        if key in self.violations:
+            return
+        self.violations[key] = self.module.finding(rule, node, msg)
+
+
+# ---------------------------------------------------------------------------
+# Creator matching.
+# ---------------------------------------------------------------------------
+
+def _terminal_name(expr: ast.AST) -> str | None:
+    if isinstance(expr, ast.Name):
+        return expr.id
+    if isinstance(expr, ast.Attribute):
+        return expr.attr
+    return None
+
+
+def _receiver_ok(fn: _Fn, recv: ast.AST, cr: Creator) -> bool:
+    if not (cr.receiver_types or cr.receiver_hints or cr.receiver_suffixes):
+        return True
+    t = fn.project.receiver_type(fn.fi, recv)
+    if t and any(fn.project.is_subclass_of(t, base)
+                 for base in cr.receiver_types):
+        return True
+    term = _terminal_name(recv)
+    if term is None:
+        return False
+    low = term.lower()
+    if low in cr.receiver_hints:
+        return True
+    return any(low.endswith(suf) for suf in cr.receiver_suffixes)
+
+
+def _creator_match(fn: _Fn,
+                   call: ast.Call) -> tuple[ProtocolSpec, Creator] | None:
+    func = call.func
+    for spec in PROTOCOLS:
+        for cr in spec.creators:
+            if cr.kind == "method":
+                if not isinstance(func, ast.Attribute) \
+                        or func.attr != cr.method:
+                    continue
+                if any(s in fn.name for s in cr.skip_in_functions):
+                    continue
+                recv = func.value
+                if isinstance(recv, ast.Name) and recv.id == "self" \
+                        and not cr.allow_self_receiver:
+                    continue
+                if _receiver_ok(fn, recv, cr):
+                    return spec, cr
+            else:
+                name = None
+                if isinstance(func, ast.Name):
+                    name = func.id
+                elif isinstance(func, ast.Attribute):
+                    name = func.attr
+                if name in cr.class_names:
+                    return spec, cr
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Call scanning: events, immediate violations, escapes.
+# ---------------------------------------------------------------------------
+
+#: Calls that cannot realistically raise and so do not fork an
+#: exception edge (keeps raise-path findings anchored to real risks).
+_NO_RAISE_BUILTINS = frozenset({
+    "len", "min", "max", "isinstance", "id", "abs", "bool", "range",
+    "enumerate", "zip", "repr", "hasattr",
+})
+_NO_RAISE_MODULES = frozenset({"time", "math"})
+
+
+def _call_may_raise(call: ast.Call) -> bool:
+    f = call.func
+    if isinstance(f, ast.Name) and f.id in _NO_RAISE_BUILTINS:
+        return False
+    if isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name) \
+            and f.value.id in _NO_RAISE_MODULES:
+        return False
+    return True
+
+
+def _shallow_calls(node: ast.AST):
+    if isinstance(node, ast.Call):
+        yield node
+    for child in ast.iter_child_nodes(node):
+        if isinstance(child, _SCOPE_NODES):
+            continue
+        yield from _shallow_calls(child)
+
+
+def _names_in(node: ast.AST):
+    """Every Name load in `node`, INCLUDING nested scopes (closure
+    capture escapes the resource)."""
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name):
+            yield n.id
+
+
+def _apply_event(fn: _Fn, env: _Env, spec: ProtocolSpec, rid: int,
+                 method: str, call: ast.Call) -> None:
+    res = fn.resources[rid]
+    atoms = env.states.get(rid)
+    if atoms is None:
+        return
+    ev_map = spec.events.get(method, {})
+    imm = spec.immediate.get(method, {})
+    new: set[str] = set()
+    for atom in atoms:
+        if atom in imm:
+            from repro.analysis.protocols import _immediate_rule_id
+            fn.report_immediate(_immediate_rule_id(spec), call, imm[atom])
+            new.add(atom)
+        elif atom in ev_map:
+            new.add(ev_map[atom])
+        else:
+            new.add(atom)
+    env.states[rid] = frozenset(new)
+    # A leader publish pins the block on the publisher's behalf: spawn
+    # the pin so a following double-unpin is caught.
+    if spec.name == "cache-acquire" and method == "publish" \
+            and "done" in new:
+        _spawn_publish_pin(fn, env, res, call)
+
+
+def _spawn_publish_pin(fn: _Fn, env: _Env, flight: _Resource,
+                       call: ast.Call) -> None:
+    key = None
+    for hkey, hrid in list(env.handles.items()):
+        if hrid == flight.rid and hkey.startswith("t:"):
+            key = hkey
+            break
+    if key is None:
+        return
+    pin = fn.new_resource(flight.spec, flight.creator, call,
+                          base_names=flight.base_names)
+    env.states[pin.rid] = frozenset({"pinned"})
+    env.handles[key] = pin.rid
+
+
+def _refinement_names(env: _Env, test: ast.AST) -> set[int]:
+    """id()s of bare discriminator/handle Name mentions inside a branch
+    test — ``if tier is None``, ``if kind == "leader"``, ``assert ok`` —
+    which refine the path rather than consume the resource, so they must
+    not count as escapes. A Name inside a Call subtree still escapes:
+    passing the handle onward transfers the obligation."""
+    in_calls: set[int] = set()
+    for n in ast.walk(test):
+        if isinstance(n, ast.Call):
+            for sub in ast.walk(n):
+                in_calls.add(id(sub))
+    out: set[int] = set()
+    for n in ast.walk(test):
+        if isinstance(n, ast.Name) and id(n) not in in_calls \
+                and n.id in env.dvals:
+            out.add(id(n))
+    return out
+
+
+def _scan_calls(fn: _Fn, env: _Env, node: ast.AST,
+                skip: ast.Call | None = None,
+                extra_excluded: set[int] | None = None) -> bool:
+    """Apply events/uses and escape resource references for every call
+    lexically inside `node`. Returns True if any call may raise."""
+    may_raise = False
+    consumed: set[int] = set()      # id() of arg nodes consumed by events
+    func_nodes: list[ast.AST] = []
+    for call in _shallow_calls(node):
+        if call is skip:
+            func_nodes.append(call.func)
+            continue
+        if _call_may_raise(call):
+            may_raise = True
+        func_nodes.append(call.func)
+        method = call.func.attr if isinstance(call.func, ast.Attribute) \
+            else None
+        if method is None:
+            continue
+        for spec in PROTOCOLS:
+            is_event = method in spec.events or method in spec.immediate
+            is_use = method in spec.uses
+            if not (is_event or is_use):
+                continue
+            if is_event:
+                if spec.event_match == "arg0":
+                    if not call.args:
+                        continue
+                    target: ast.AST = call.args[0]
+                else:
+                    target = call.func.value
+                rid = env.rid_of_expr(target)
+                if rid is None or fn.resources[rid].spec is not spec:
+                    continue
+                _apply_event(fn, env, spec, rid, method, call)
+                consumed.add(id(target))
+            if is_use:
+                rid = env.rid_of_expr(call.func.value)
+                if rid is not None and fn.resources[rid].spec is spec:
+                    atoms = env.states.get(rid, frozenset())
+                    for atom in atoms:
+                        if atom in spec.immediate_use:
+                            from repro.analysis.protocols import \
+                                _immediate_rule_id
+                            fn.report_immediate(
+                                _immediate_rule_id(spec), call,
+                                spec.immediate_use[atom])
+    # Escapes: resource names appearing anywhere in `node` other than as
+    # a call target (func chain), an event-consumed argument, or a
+    # caller-supplied refinement mention.
+    excluded: set[int] = consumed
+    if extra_excluded:
+        excluded |= extra_excluded
+    for f in func_nodes:
+        for n in ast.walk(f):
+            excluded.add(id(n))
+    _escape_names(fn, env, node, excluded)
+    return may_raise
+
+
+def _escape_names(fn: _Fn, env: _Env, node: ast.AST,
+                  excluded: set[int] | None = None) -> None:
+    excluded = excluded or set()
+    skip_subtrees: set[int] = set()
+    for n in ast.walk(node):
+        if id(n) in excluded:
+            for sub in ast.walk(n):
+                skip_subtrees.add(id(sub))
+    names: set[str] = set()
+    for n in ast.walk(node):
+        if id(n) in skip_subtrees:
+            continue
+        if isinstance(n, ast.Name):
+            names.add(n.id)
+    for name in names:
+        rid = env.handles.get("v:" + name)
+        if rid is not None:
+            env.escaped.add(rid)
+    for rid, res in fn.resources.items():
+        if rid in env.escaped or rid not in env.states:
+            continue
+        if res.base_names & names:
+            env.escaped.add(rid)
+
+
+# ---------------------------------------------------------------------------
+# Refinement.
+# ---------------------------------------------------------------------------
+
+def _restrict(env: _Env, res: _Resource, allowed: frozenset[str]) -> bool:
+    """Narrow a discriminated resource to `allowed` discriminator
+    values. Returns False if the path becomes infeasible."""
+    rid = res.rid
+    initial_atoms = set(res.dmap.values())
+    allowed_atoms = {res.dmap[v] for v in allowed if v in res.dmap}
+    atoms = env.states.get(rid)
+    if atoms is None:
+        return True
+    new = frozenset(a for a in atoms
+                    if a not in initial_atoms or a in allowed_atoms)
+    if not new:
+        return False
+    env.states[rid] = new
+    return True
+
+
+def _refine(fn: _Fn, env: _Env, test: ast.AST, branch: bool) -> bool:
+    """Refine `env` assuming `test` evaluated to `branch`. Returns False
+    when the path is infeasible."""
+    if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+        return _refine(fn, env, test.operand, not branch)
+    if isinstance(test, ast.BoolOp):
+        if isinstance(test.op, ast.And) and branch:
+            return all(_refine(fn, env, v, True) for v in test.values)
+        if isinstance(test.op, ast.Or) and not branch:
+            return all(_refine(fn, env, v, False) for v in test.values)
+        return True
+    if isinstance(test, ast.Name):
+        entry = env.dvals.get(test.id)
+        if entry is None:
+            return True
+        rid, vals = entry
+        res = fn.resources[rid]
+        key = res.truthy_key if branch else res.falsy_key
+        if key is None:
+            return True
+        new_vals = vals & {key}
+        if not new_vals:
+            return False
+        env.dvals[test.id] = (rid, new_vals)
+        return _restrict(env, res, new_vals)
+    if isinstance(test, ast.Compare) and len(test.ops) == 1:
+        op = test.ops[0]
+        left, right = test.left, test.comparators[0]
+        # `x is None` / `x is not None` on a value-bound handle.
+        if isinstance(op, (ast.Is, ast.IsNot)):
+            none_side = None
+            var_side = None
+            for a, b in ((left, right), (right, left)):
+                if isinstance(a, ast.Constant) and a.value is None \
+                        and isinstance(b, ast.Name):
+                    none_side, var_side = a, b
+            if var_side is not None:
+                entry = env.dvals.get(var_side.id)
+                if entry is None:
+                    return True
+                rid, vals = entry
+                res = fn.resources[rid]
+                if res.falsy_key is None:
+                    return True
+                is_none = isinstance(op, ast.Is) == branch
+                key = res.falsy_key if is_none else res.truthy_key
+                new_vals = vals & {key}
+                if not new_vals:
+                    return False
+                env.dvals[var_side.id] = (rid, new_vals)
+                return _restrict(env, res, new_vals)
+            return True
+        # `kind == "leader"` / `kind != "hit"` on a discriminator.
+        if isinstance(op, (ast.Eq, ast.NotEq)):
+            var = None
+            const = None
+            for a, b in ((left, right), (right, left)):
+                if isinstance(a, ast.Name) and isinstance(b, ast.Constant) \
+                        and isinstance(b.value, str):
+                    var, const = a, b.value
+            if var is None:
+                return True
+            entry = env.dvals.get(var.id)
+            if entry is None:
+                return True
+            rid, vals = entry
+            res = fn.resources[rid]
+            if const not in res.dmap:
+                return True
+            equal = isinstance(op, ast.Eq) == branch
+            new_vals = (vals & {const}) if equal else (vals - {const})
+            if not new_vals:
+                return False
+            env.dvals[var.id] = (rid, new_vals)
+            return _restrict(env, res, new_vals)
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Creation binding.
+# ---------------------------------------------------------------------------
+
+def _bind_creator(fn: _Fn, env: _Env, spec: ProtocolSpec, cr: Creator,
+                  call: ast.Call, targets: list[ast.expr]) -> bool:
+    """Bind a creator call's result. Returns True if a resource was
+    actually created (unsupported target shapes create nothing)."""
+    if cr.binds == "tuple2":
+        if len(targets) != 1 or not isinstance(targets[0], ast.Tuple) \
+                or len(targets[0].elts) != 2:
+            return False
+        kt, vt = targets[0].elts
+        if not (isinstance(kt, ast.Name) and isinstance(vt, ast.Name)):
+            return False
+        arg_text = ast.unparse(call.args[0]) if call.args else None
+        base = frozenset(n for n in _names_in(call.args[0])) \
+            if call.args else frozenset()
+        res = fn.new_resource(
+            spec, cr, call, base_names=base,
+            dmap=dict(spec.discriminants))
+        env.unbind_var(kt.id)
+        env.unbind_var(vt.id)
+        env.states[res.rid] = frozenset(spec.discriminants.values())
+        env.handles["v:" + vt.id] = res.rid
+        if arg_text is not None:
+            env.handles["t:" + arg_text] = res.rid
+        env.dvals[kt.id] = (res.rid, frozenset(spec.discriminants))
+        return True
+    if cr.binds == "value":
+        if len(targets) != 1 or not isinstance(targets[0], ast.Name):
+            return False
+        name = targets[0].id
+        nullable = bool(spec.initial_none)
+        dmap = {"__some__": spec.initial}
+        if nullable:
+            dmap["__none__"] = spec.initial_none
+        res = fn.new_resource(spec, cr, call, dmap=dmap,
+                              truthy_key="__some__",
+                              falsy_key="__none__" if nullable else None)
+        env.unbind_var(name)
+        env.states[res.rid] = frozenset(dmap.values())
+        env.handles["v:" + name] = res.rid
+        env.dvals[name] = (res.rid, frozenset(dmap))
+        return True
+    if cr.binds == "bool":
+        recv_text = ast.unparse(call.func.value)
+        base = frozenset(_names_in(call.func.value))
+        dmap = {"__true__": spec.initial, "__false__": spec.initial_none}
+        res = fn.new_resource(spec, cr, call, base_names=base, dmap=dmap,
+                              truthy_key="__true__", falsy_key="__false__")
+        env.states[res.rid] = frozenset(dmap.values())
+        env.handles["t:" + recv_text] = res.rid
+        if len(targets) == 1 and isinstance(targets[0], ast.Name):
+            name = targets[0].id
+            env.unbind_var(name)
+            env.dvals[name] = (res.rid, frozenset(dmap))
+        return True
+    return False
+
+
+def _bool_creator_in_test(fn: _Fn, test: ast.AST) \
+        -> tuple[ProtocolSpec, Creator, ast.Call] | None:
+    """`if cand.reserve(n):` — a bool-binding creator used directly as
+    the branch condition."""
+    if not isinstance(test, ast.Call):
+        return None
+    m = _creator_match(fn, test)
+    if m is None or m[1].binds != "bool":
+        return None
+    return m[0], m[1], test
+
+
+# ---------------------------------------------------------------------------
+# The interpreter.
+# ---------------------------------------------------------------------------
+
+def _exec_block(fn: _Fn, stmts: list[ast.stmt],
+                env: _Env) -> list[tuple[int, _Env]]:
+    outs: list[tuple[int, _Env]] = []
+    cur = [env]
+    for stmt in stmts:
+        nxt: list[_Env] = []
+        for e in cur:
+            fn.charge()
+            for kind, e2 in _exec_stmt(fn, stmt, e):
+                if kind == _FALL:
+                    nxt.append(e2)
+                else:
+                    outs.append((kind, e2))
+        cur = _dedupe(nxt)
+        if not cur:
+            break
+    outs.extend((_FALL, e) for e in cur)
+    return outs
+
+
+def _exec_stmt(fn: _Fn, stmt: ast.stmt,
+               env: _Env) -> list[tuple[int, _Env]]:
+    if isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+        return _exec_assign(fn, stmt, env)
+    if isinstance(stmt, ast.If):
+        return _exec_if(fn, stmt, env)
+    if isinstance(stmt, (ast.While, ast.For, ast.AsyncFor)):
+        return _exec_loop(fn, stmt, env)
+    if isinstance(stmt, (ast.Try, getattr(ast, "TryStar", ast.Try))):
+        return _exec_try(fn, stmt, env)
+    if isinstance(stmt, (ast.With, ast.AsyncWith)):
+        return _exec_with(fn, stmt, env)
+    if isinstance(stmt, ast.Return):
+        out: list[tuple[int, _Env]] = []
+        if stmt.value is not None:
+            if _scan_calls(fn, env, stmt.value):
+                out.append((_RAISE, env.copy()))
+            _escape_names(fn, env, stmt.value, _func_chains(stmt.value))
+        out.append((_RETURN, env))
+        return out
+    if isinstance(stmt, ast.Raise):
+        out = []
+        for part in (stmt.exc, stmt.cause):
+            if part is not None:
+                _scan_calls(fn, env, part)
+                _escape_names(fn, env, part, _func_chains(part))
+        out.append((_RAISE, env))
+        return out
+    if isinstance(stmt, ast.Expr):
+        may_raise = _scan_calls(fn, env, stmt.value)
+        out = []
+        if may_raise:
+            out.append((_RAISE, env.copy()))
+        out.append((_FALL, env))
+        return out
+    if isinstance(stmt, ast.Assert):
+        _scan_calls(fn, env, stmt.test,
+                    extra_excluded=_refinement_names(env, stmt.test))
+        if not _refine(fn, env, stmt.test, True):
+            return []          # assert proves this path impossible
+        return [(_FALL, env)]
+    if isinstance(stmt, ast.Break):
+        return [(_BREAK, env)]
+    if isinstance(stmt, ast.Continue):
+        return [(_CONTINUE, env)]
+    if isinstance(stmt, ast.Delete):
+        for t in stmt.targets:
+            if isinstance(t, ast.Name):
+                env.unbind_var(t.id)
+        return [(_FALL, env)]
+    if isinstance(stmt, _SCOPE_NODES):
+        # Nested def/class: anything it captures escapes.
+        _escape_names(fn, env, stmt)
+        return [(_FALL, env)]
+    if isinstance(stmt, (ast.Import, ast.ImportFrom, ast.Global,
+                         ast.Nonlocal, ast.Pass)):
+        return [(_FALL, env)]
+    # Fallback: scan for calls, keep going.
+    may_raise = _scan_calls(fn, env, stmt)
+    out = []
+    if may_raise:
+        out.append((_RAISE, env.copy()))
+    out.append((_FALL, env))
+    return out
+
+
+def _func_chains(node: ast.AST) -> set[int]:
+    """id()s of call-func subtrees (receiver chains don't escape)."""
+    out: set[int] = set()
+    for call in _shallow_calls(node):
+        out.add(id(call.func))
+    return out
+
+
+def _exec_assign(fn: _Fn, stmt: ast.stmt,
+                 env: _Env) -> list[tuple[int, _Env]]:
+    if isinstance(stmt, ast.Assign):
+        targets, value = stmt.targets, stmt.value
+    elif isinstance(stmt, ast.AnnAssign):
+        targets, value = [stmt.target], stmt.value
+    else:  # AugAssign
+        targets, value = [], stmt.value
+
+    creator = None
+    if isinstance(value, ast.Call):
+        creator = _creator_match(fn, value)
+
+    may_raise = False
+    if value is not None:
+        may_raise = _scan_calls(fn, env, value,
+                                skip=value if creator else None)
+        if creator:
+            # Arguments of the creator call can still raise / escape.
+            for arg in list(value.args) + [kw.value for kw in value.keywords]:
+                if _scan_calls(fn, env, arg):
+                    may_raise = True
+            may_raise = True
+    raise_env = env.copy() if may_raise else None
+
+    bound = False
+    if creator is not None and targets:
+        bound = _bind_creator(fn, env, creator[0], creator[1], value,
+                              targets)
+
+    if not bound and targets:
+        # Alias propagation and rebinding.
+        simple_alias = (
+            len(targets) == 1 and isinstance(targets[0], ast.Name)
+            and isinstance(value, ast.Name)
+        )
+        attr_target = any(not isinstance(t, (ast.Name, ast.Tuple))
+                          for t in targets)
+        if attr_target and value is not None:
+            # Stored into an attribute / subscript: escapes.
+            _escape_names(fn, env, value, _func_chains(value))
+        for t in targets:
+            names = [t] if isinstance(t, ast.Name) else [
+                e for e in getattr(t, "elts", []) if isinstance(e, ast.Name)]
+            for n in names:
+                env.unbind_var(n.id)
+        if simple_alias:
+            rid = env.handles.get("v:" + value.id)
+            if rid is not None:
+                env.handles["v:" + targets[0].id] = rid
+        elif value is not None and not attr_target:
+            # Value flows into a tuple/list/other expression bound to a
+            # plain name — treat embedded resources as escaped.
+            if not isinstance(value, (ast.Call, ast.Name, ast.Constant)):
+                _escape_names(fn, env, value, _func_chains(value))
+
+    out: list[tuple[int, _Env]] = []
+    if raise_env is not None:
+        out.append((_RAISE, raise_env))
+    out.append((_FALL, env))
+    return out
+
+
+def _exec_if(fn: _Fn, stmt: ast.If, env: _Env) -> list[tuple[int, _Env]]:
+    outs: list[tuple[int, _Env]] = []
+    bool_creator = _bool_creator_in_test(fn, stmt.test)
+    may_raise = _scan_calls(
+        fn, env, stmt.test,
+        skip=bool_creator[2] if bool_creator else None,
+        extra_excluded=_refinement_names(env, stmt.test))
+    if may_raise or bool_creator:
+        outs.append((_RAISE, env.copy()))
+
+    tenv = env.copy()
+    fenv = env
+    if bool_creator is not None:
+        spec, cr, call = bool_creator
+        for e, atom in ((tenv, spec.initial), (fenv, spec.initial_none)):
+            recv_text = ast.unparse(call.func.value)
+            res = fn.new_resource(
+                spec, cr, call,
+                base_names=frozenset(_names_in(call.func.value)),
+                dmap={"__true__": spec.initial,
+                      "__false__": spec.initial_none},
+                truthy_key="__true__", falsy_key="__false__")
+            e.states[res.rid] = frozenset({atom})
+            e.handles["t:" + recv_text] = res.rid
+        t_ok = f_ok = True
+    else:
+        t_ok = _refine(fn, tenv, stmt.test, True)
+        f_ok = _refine(fn, fenv, stmt.test, False)
+    if t_ok:
+        outs.extend(_exec_block(fn, stmt.body, tenv))
+    if f_ok:
+        outs.extend(_exec_block(fn, stmt.orelse, fenv))
+    return outs
+
+
+def _exec_loop(fn: _Fn, stmt: ast.stmt,
+               env: _Env) -> list[tuple[int, _Env]]:
+    outs: list[tuple[int, _Env]] = []
+    is_while = isinstance(stmt, ast.While)
+    infinite = (is_while and isinstance(stmt.test, ast.Constant)
+                and bool(stmt.test.value))
+    if is_while:
+        if _scan_calls(fn, env, stmt.test,
+                       extra_excluded=_refinement_names(env, stmt.test)):
+            outs.append((_RAISE, env.copy()))
+    else:
+        if _scan_calls(fn, env, stmt.iter):
+            outs.append((_RAISE, env.copy()))
+        for t in ast.walk(stmt.target):
+            if isinstance(t, ast.Name):
+                env.unbind_var(t.id)
+
+    loop_marker = fn._next_rid
+    body_env = env.copy()
+    feasible = True
+    if is_while:
+        feasible = _refine(fn, body_env, stmt.test, True)
+
+    exit_envs: list[_Env] = []
+    if not infinite:
+        zero = env.copy()
+        if not is_while or _refine(fn, zero, stmt.test, False):
+            exit_envs.append(zero)
+
+    if feasible:
+        for kind, e in _exec_block(fn, stmt.body, body_env):
+            if kind in (_FALL, _CONTINUE):
+                # Back edge: a later iteration may discharge anything
+                # created inside the body — escape those, keep earlier
+                # resources at their current state.
+                for rid in list(e.states):
+                    if rid >= loop_marker:
+                        e.escaped.add(rid)
+                if not infinite:
+                    exit_envs.append(e)
+            elif kind == _BREAK:
+                exit_envs.append(e)
+            else:
+                outs.append((kind, e))
+
+    for e in _dedupe(exit_envs):
+        if stmt.orelse:
+            outs.extend(_exec_block(fn, stmt.orelse, e.copy()))
+        else:
+            outs.append((_FALL, e))
+    return outs
+
+
+def _is_catch_all(handler: ast.ExceptHandler) -> bool:
+    t = handler.type
+    if t is None:
+        return True
+    names = []
+    if isinstance(t, (ast.Name, ast.Attribute)):
+        names = [_terminal_name(t)]
+    elif isinstance(t, ast.Tuple):
+        names = [_terminal_name(e) for e in t.elts]
+    return any(n in ("Exception", "BaseException") for n in names)
+
+
+def _exec_try(fn: _Fn, stmt, env: _Env) -> list[tuple[int, _Env]]:
+    body_outs = _exec_block(fn, stmt.body, env)
+    routed: list[tuple[int, _Env]] = []
+    has_catch_all = any(_is_catch_all(h) for h in stmt.handlers)
+
+    for kind, e in body_outs:
+        if kind == _RAISE and stmt.handlers:
+            for h in stmt.handlers:
+                he = e.copy()
+                if h.name:
+                    he.unbind_var(h.name)
+                routed.extend(_exec_block(fn, h.body, he))
+            if not has_catch_all:
+                routed.append((_RAISE, e))
+        elif kind == _FALL and stmt.orelse:
+            routed.extend(_exec_block(fn, stmt.orelse, e))
+        else:
+            routed.append((kind, e))
+
+    if not stmt.finalbody:
+        return routed
+    outs: list[tuple[int, _Env]] = []
+    for kind, e in routed:
+        fn.charge()
+        for fkind, fe in _exec_block(fn, stmt.finalbody, e):
+            outs.append((kind, fe) if fkind == _FALL else (fkind, fe))
+    return outs
+
+
+def _exec_with(fn: _Fn, stmt, env: _Env) -> list[tuple[int, _Env]]:
+    outs: list[tuple[int, _Env]] = []
+    may_raise = False
+    for item in stmt.items:
+        ce = item.context_expr
+        managed_creator = isinstance(ce, ast.Call) \
+            and _creator_match(fn, ce) is not None
+        if managed_creator:
+            # `with fs.open_write(k) as w:` — __exit__ discharges the
+            # obligation structurally; nothing to track.
+            for arg in list(ce.args) + [kw.value for kw in ce.keywords]:
+                if _scan_calls(fn, env, arg):
+                    may_raise = True
+            may_raise = True
+        else:
+            if _scan_calls(fn, env, ce):
+                may_raise = True
+            rid = env.rid_of_expr(ce)
+            if rid is not None:
+                # `with w:` on a tracked lifecycle resource: __exit__
+                # closes it on every path out of the block.
+                spec = fn.resources[rid].spec
+                env.states[rid] = frozenset(
+                    a if a in spec.final else next(iter(spec.final))
+                    for a in env.states[rid])
+        if item.optional_vars is not None:
+            for n in ast.walk(item.optional_vars):
+                if isinstance(n, ast.Name):
+                    env.unbind_var(n.id)
+    if may_raise:
+        outs.append((_RAISE, env.copy()))
+    outs.extend(_exec_block(fn, stmt.body, env))
+    return outs
+
+
+# ---------------------------------------------------------------------------
+# Function / module driver.
+# ---------------------------------------------------------------------------
+
+_CREATOR_METHODS = frozenset(
+    cr.method for spec in PROTOCOLS for cr in spec.creators if cr.method)
+_CREATOR_CLASSES = frozenset(
+    name for spec in PROTOCOLS for cr in spec.creators
+    for name in cr.class_names)
+
+
+def _mentions_creator(node: ast.AST) -> bool:
+    for call in ast.walk(node):
+        if not isinstance(call, ast.Call):
+            continue
+        f = call.func
+        if isinstance(f, ast.Attribute) and (f.attr in _CREATOR_METHODS
+                                             or f.attr in _CREATOR_CLASSES):
+            return True
+        if isinstance(f, ast.Name) and f.id in _CREATOR_CLASSES:
+            return True
+    return False
+
+
+def _check_function(module: Module, project: Project,
+                    fi: FuncInfo) -> list[Finding]:
+    if not _mentions_creator(fi.node):
+        return []
+    fn = _Fn(module, project, fi)
+    try:
+        outcomes = _exec_block(fn, fi.node.body, _Env())
+    except _Bailout:
+        return []
+    for kind, e in outcomes:
+        exceptional = kind == _RAISE
+        for rid, atoms in e.states.items():
+            if rid in e.escaped:
+                continue
+            res = fn.resources[rid]
+            spec = res.spec
+            if exceptional:
+                if spec.exception_paths == "none":
+                    continue
+                if spec.exception_paths == "src" and module.is_test:
+                    continue
+            for atom in atoms:
+                if atom in spec.final:
+                    continue
+                fn.report_exit(res, atom)
+    return list(fn.violations.values())
+
+
+def run_typestate(module: Module, project: Project) -> list[Finding]:
+    """All typestate findings for one module, across every protocol."""
+    findings: list[Finding] = []
+    seen_funcs: set[int] = set()
+    fi_by_node = {id(fi.node): fi for fi in project.funcs.values()
+                  if fi.module is module}
+    for node in ast.walk(module.tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if id(node) in seen_funcs:
+            continue
+        seen_funcs.add(id(node))
+        fi = fi_by_node.get(id(node))
+        if fi is None:
+            fi = FuncInfo(module=module, node=node, qualname=node.name)
+        findings.extend(_check_function(module, project, fi))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Rule registration: one rule id per protocol bug class, all served from
+# a single cached interpreter run per module.
+# ---------------------------------------------------------------------------
+
+_RESULT_CACHE: dict[int, tuple[Module, dict[str, list[Finding]]]] = {}
+
+
+def _bucketed(module: Module, project: Project) -> dict[str, list[Finding]]:
+    cached = _RESULT_CACHE.get(id(module))
+    if cached is not None and cached[0] is module:
+        return cached[1]
+    buckets: dict[str, list[Finding]] = {}
+    for f in run_typestate(module, project):
+        buckets.setdefault(f.rule, []).append(f)
+    if len(_RESULT_CACHE) > 4096:
+        _RESULT_CACHE.clear()
+    _RESULT_CACHE[id(module)] = (module, buckets)
+    return buckets
+
+
+def _typestate_rule(rid: str):
+    def rule(module: Module, project: Project) -> list[Finding]:
+        return _bucketed(module, project).get(rid, [])
+    rule.__name__ = f"rule_{rid.lower()}"
+    return rule
+
+
+TYPESTATE_RULES: dict[str, tuple[str, str]] = {
+    "RP009": (
+        "acquire() leader/waiter handles reach publish/abort or "
+        "join/leave on every path",
+        "a leaked leader flight wedges every waiter until the reclaim "
+        "TTL — the bug class PR 4's engine-shutdown fixes were full of",
+    ),
+    "RP010": (
+        "unpin() balances pins: no double release, no read after release",
+        "an extra unpin frees a block another reader still trusts; a "
+        "read after unpin races eviction",
+    ),
+    "RP011": (
+        "reserve_space()/reserve() commit or cancel on every path",
+        "a leaked reservation permanently shrinks the tier: inflight "
+        "bytes count as legitimate forever",
+    ),
+    "RP012": (
+        "start_multipart() completes or aborts on every path",
+        "an orphaned multipart upload is a stranded partial object — "
+        "storage cost and recovery confusion",
+    ),
+    "RP013": (
+        "Writer/UploadPool/DeviceFeeder close on every normal path",
+        "unclosed writers strand staged tier blocks; unclosed "
+        "pools/feeders strand threads",
+    ),
+}
+
+for _rid, (_summary, _rationale) in TYPESTATE_RULES.items():
+    register_rule(_rid, _summary, rationale=_rationale)(
+        _typestate_rule(_rid))

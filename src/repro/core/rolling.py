@@ -418,6 +418,9 @@ class RollingPrefetcher:
         stream should exit."""
         group: list[tuple[Block, CacheFlight]] = []
         for pos, b in enumerate(run):
+            # repro: allow[RP009] — the only call between acquire and
+            # discharge is _flush_group, which handles every fetch error
+            # internally (leak-free by construction, see _fail_group).
             kind, val = self.index.acquire(b.block_id, self.io_class)
             if kind == "leader":
                 group.append((b, val))
@@ -483,7 +486,14 @@ class RollingPrefetcher:
                     self._unclaim([b for b, _ in group])
                     return False
             total = sum(b.size for b, _ in group)
-            tier = self._reserve(total)
+            try:
+                tier = self._reserve(total)
+            except Exception as e:  # repro: allow[RP005] — flights MUST abort:
+                # _reserve runs eviction I/O (tier deletes); if that
+                # blows up with the group's flights registered, every
+                # waiter parks until the TTL. Fail the group leak-free.
+                self._fail_group(group, e)
+                return False
             if tier is None and len(group) > 1:
                 # The full group doesn't fit anywhere — give back the tail
                 # and try the head block alone before parking.
@@ -510,19 +520,25 @@ class RollingPrefetcher:
                 # included) until their patience fallback, and this
                 # reader's blocks would stay FETCHING forever.
                 tier.cancel(total)
-                err = e if isinstance(e, StoreError) else StoreError(
-                    f"fetch failed for blocks "
-                    f"{group[0][0].block_id}..{group[-1][0].block_id}: {e}"
-                )
-                with self._cond:
-                    for b, fl in group:
-                        self.index.abort_fetch(fl, err)
-                        self._info[b.index].state = BlockState.FAILED
-                        self._info[b.index].error = err
-                    self._cond.notify_all()
-                log.error("blocks %s..%s failed permanently: %s",
-                          group[0][0].block_id, group[-1][0].block_id, e)
+                self._fail_group(group, e)
                 return False
+
+    def _fail_group(self, group: list[tuple[Block, CacheFlight]],
+                    e: Exception) -> None:
+        """Abort every flight in `group` and mark its blocks FAILED —
+        the one leak-free way out of a group that cannot be fetched."""
+        err = e if isinstance(e, StoreError) else StoreError(
+            f"fetch failed for blocks "
+            f"{group[0][0].block_id}..{group[-1][0].block_id}: {e}"
+        )
+        with self._cond:
+            for b, fl in group:
+                self.index.abort_fetch(fl, err)
+                self._info[b.index].state = BlockState.FAILED
+                self._info[b.index].error = err
+            self._cond.notify_all()
+        log.error("blocks %s..%s failed permanently: %s",
+                  group[0][0].block_id, group[-1][0].block_id, e)
 
     def _join_flight(self, b: Block, flight: CacheFlight) -> bool:
         """Another reader is fetching `b` right now: wait for its flight

@@ -347,8 +347,24 @@ class Writer:
             index = self._next_index
             self._next_index += 1
             self._sealed += 1
-        part = self._stage(index, data)
-        self._pool.submit(lambda: self._upload(part))
+        part = None
+        try:
+            part = self._stage(index, data)
+            self._pool.submit(lambda: self._upload(part))
+        except BaseException:
+            # Staging failed (tier I/O error) or the pool refused the job
+            # (closed underneath us): no upload will ever bump `_done`
+            # for this seal, so `_sealed` must be unwound or every later
+            # barrier — flush(), close(), join() — wedges forever. A
+            # part that did get staged also gives its tier budget back.
+            with self._cond:
+                self._sealed -= 1
+                self._cond.notify_all()
+            if part is not None and part.tier is not None:
+                with suppress(Exception):
+                    part.tier.delete(part.block_id)
+                    part.tier.release(part.size)
+            raise
 
     def _stage(self, index: int, data: bytes) -> _Part:
         """Park the sealed part in the first tier with budget; block (the
@@ -376,11 +392,19 @@ class Writer:
                         if self.index.evict_from(cand, len(data)) > 0:
                             reserved = cand.reserve(len(data))
                     if reserved:
-                        # durable=False: staged parts are transient — a
-                        # persistent DirTier must not journal them (a
-                        # crashed producer's staging is garbage-collected
-                        # at recovery, never resurrected into the cache).
-                        cand.write(block_id, data, durable=False)
+                        try:
+                            # durable=False: staged parts are transient — a
+                            # persistent DirTier must not journal them (a
+                            # crashed producer's staging is garbage-collected
+                            # at recovery, never resurrected into the cache).
+                            cand.write(block_id, data, durable=False)
+                        except Exception:
+                            # ENOSPC / torn tier write: hand the budget
+                            # back or the tier's inflight accounting
+                            # shrinks it forever (verify_used treats
+                            # inflight bytes as legitimate).
+                            cand.cancel(len(data))
+                            raise
                         cand.commit(len(data))
                         digest = None
                         if self.policy.verify == "full":

@@ -388,7 +388,14 @@ class BlockServer:
         if kind == "wait":
             self.index.leave(val)  # someone is fetching it right now
             return "stored"
-        tier = self.index.reserve_space(len(payload), self.io_class)
+        try:
+            tier = self.index.reserve_space(len(payload), self.io_class)
+        except Exception:   # repro: allow[RP005] — adoption is best-effort
+            # reserve_space can run eviction I/O; if that fails the
+            # pushed flight must still be aborted or a racing local
+            # fetch waits on it until the TTL.
+            self.index.abort_fetch(val)
+            return "rejected"
         if tier is None:
             self.index.abort_fetch(val)
             return "rejected"

@@ -1,0 +1,733 @@
+"""Deterministic cooperative scheduler for interleaving exploration.
+
+Real OS threads, exactly one runnable at a time: every task parks on a
+private gate and the driver loop wakes exactly one per step, chosen by a
+pluggable *picker* over the name-sorted runnable set. Scheduling points
+sit where real races live — lock acquire, condition wait, thread
+start/join, sleep — so a decision sequence IS an interleaving, and the
+same decision sequence replays the same interleaving bit-for-bit.
+
+Code under test is captured the same way the ``traced_locks`` fixture
+captures it: the ``threading`` module's ``Lock`` / ``RLock`` /
+``Condition`` / ``Thread`` constructor names are swapped while a
+scheduler is active (`CoopScheduler.activate`), so anything built during
+the window — including ``threading.Event`` and ``queue.Queue``, whose
+initialisers resolve those names at call time — becomes cooperative
+without touching the code under test. ``time.monotonic`` / ``time.time``
+/ ``time.perf_counter`` / ``time.sleep`` are bound to a virtual clock
+that only advances when every task is blocked on a deadline, so TTL and
+timeout paths run instantly and deterministically.
+
+`repro.analysis.explore` builds seeded schedule fuzzing and
+preemption-bounded exhaustive exploration on top of the decision log
+recorded here.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import random
+import threading
+import time as _time_mod
+
+__all__ = [
+    "CoopScheduler",
+    "SchedLock",
+    "SchedRLock",
+    "SchedCondition",
+    "SchedThread",
+    "SchedulerAbort",
+    "DeadlockError",
+    "LivelockError",
+    "TaskFailed",
+    "RandomPicker",
+    "ReplayPicker",
+    "patch_threading_ctors",
+]
+
+# Captured at import, before any patching can happen (conftest imports
+# this module at collection time for the same reason).
+_RealLock = threading.Lock
+_RealRLock = threading.RLock
+_RealCondition = threading.Condition
+_RealThread = threading.Thread
+
+_REAL_TIME = ("monotonic", "time", "perf_counter", "sleep")
+
+#: Real-seconds ceiling on any single driver<->task handshake. A healthy
+#: handshake is microseconds; hitting this means a task escaped the
+#: cooperative discipline (e.g. blocked on an unpatched primitive).
+_HANDSHAKE_TIMEOUT_S = 30.0
+
+#: Owner token for primitives used from the driver thread (model
+#: ``setup()``/``check()`` run outside any task).
+_DRIVER = object()
+
+
+class SchedulerAbort(BaseException):
+    """Raised inside task threads at scheduling points during teardown.
+
+    BaseException so user-level ``except Exception`` cleanup cannot
+    swallow it; the task bootstrap catches it and exits the thread.
+    """
+
+
+class DeadlockError(RuntimeError):
+    """Every non-daemon task is blocked with no deadline to advance to."""
+
+
+class LivelockError(RuntimeError):
+    """The schedule exceeded ``max_steps`` without completing."""
+
+
+class TaskFailed(RuntimeError):
+    """A task died on an uncaught exception; the schedule is aborted."""
+
+    def __init__(self, name: str, exc: BaseException) -> None:
+        super().__init__(f"task {name!r} died: {exc!r}")
+        self.task_name = name
+        self.exc = exc
+
+
+def patch_threading_ctors(lock=None, rlock=None, condition=None, thread=None):
+    """Swap the ``threading`` module's constructor names; returns a
+    restore callable. Shared by `CoopScheduler.activate` and the test
+    suite's ``traced_locks`` fixture — one mechanism, two instruments."""
+    saved = (threading.Lock, threading.RLock, threading.Condition,
+             threading.Thread)
+    if lock is not None:
+        threading.Lock = lock
+    if rlock is not None:
+        threading.RLock = rlock
+    if condition is not None:
+        threading.Condition = condition
+    if thread is not None:
+        threading.Thread = thread
+
+    def restore() -> None:
+        (threading.Lock, threading.RLock, threading.Condition,
+         threading.Thread) = saved
+
+    return restore
+
+
+@contextlib.contextmanager
+def _ctors_unpatched():
+    """Temporarily restore the real constructors. Used while creating
+    the real OS thread behind a task: ``Thread.__init__`` builds its
+    internal events from the (patched) threading-module globals."""
+    saved = (threading.Lock, threading.RLock, threading.Condition,
+             threading.Thread)
+    (threading.Lock, threading.RLock, threading.Condition,
+     threading.Thread) = (_RealLock, _RealRLock, _RealCondition, _RealThread)
+    try:
+        yield
+    finally:
+        (threading.Lock, threading.RLock, threading.Condition,
+         threading.Thread) = saved
+
+
+class _Gate:
+    """A real event immune to constructor patching (a ``threading.Event``
+    created during an active patch would itself become cooperative)."""
+
+    __slots__ = ("_cond", "_flag")
+
+    def __init__(self) -> None:
+        self._cond = _RealCondition(_RealLock())
+        self._flag = False
+
+    def set(self) -> None:
+        with self._cond:
+            self._flag = True
+            self._cond.notify_all()
+
+    def clear(self) -> None:
+        with self._cond:
+            self._flag = False
+
+    def wait(self, timeout: float | None) -> bool:
+        with self._cond:
+            self._cond.wait_for(lambda: self._flag, timeout)
+            return self._flag
+
+
+class _Task:
+    __slots__ = ("name", "daemon", "thread", "gate", "state", "reason",
+                 "deadline", "timed_out", "exc", "joiners")
+
+    def __init__(self, name: str, daemon: bool) -> None:
+        self.name = name
+        self.daemon = daemon
+        self.thread: threading.Thread | None = None
+        self.gate = _Gate()
+        self.state = "ready"            # ready | blocked | done
+        self.reason = ""
+        self.deadline: float | None = None
+        self.timed_out = False
+        self.exc: BaseException | None = None
+        self.joiners: list[_Task] = []
+
+
+# The active scheduler; SchedThread construction resolves through this.
+_ACTIVE: CoopScheduler | None = None
+
+
+class RandomPicker:
+    """Seeded uniform choice over the runnable set — schedule fuzzing."""
+
+    def __init__(self, seed) -> None:
+        self._rng = random.Random(seed)
+
+    def __call__(self, names: tuple[str, ...], cur: int | None) -> int:
+        return self._rng.randrange(len(names))
+
+
+class ReplayPicker:
+    """Follow a decision prefix, then run nonpreemptively (stay with the
+    current task while it is runnable). An empty prefix is the baseline
+    schedule; `repro.analysis.explore` branches prefixes off it."""
+
+    def __init__(self, prefix=()) -> None:
+        self.prefix = tuple(prefix)
+        self._i = 0
+
+    def __call__(self, names: tuple[str, ...], cur: int | None) -> int:
+        i = self._i
+        self._i += 1
+        if i < len(self.prefix):
+            return min(self.prefix[i], len(names) - 1)
+        return cur if cur is not None else 0
+
+
+class CoopScheduler:
+    """Drives a set of tasks through one deterministic interleaving.
+
+    Usage::
+
+        sched = CoopScheduler(ReplayPicker(()))
+        with sched.activate():
+            ... build objects (their locks become cooperative) ...
+            sched.spawn(body_a, name="a")
+            sched.spawn(body_b, name="b")
+            sched.run()
+            ... assert on final state ...
+
+    `run` returns when every non-daemon task finished; daemon tasks
+    still parked (an upload pool's idle workers) are aborted on exit
+    from the ``activate`` block. The schedule's decision log is in
+    ``decisions`` / ``points`` and the human-readable step log in
+    ``trace`` — both are pure functions of (model, picker).
+    """
+
+    def __init__(self, picker=None, *, max_steps: int = 20000) -> None:
+        self.picker = picker if picker is not None else ReplayPicker(())
+        self.max_steps = max_steps
+        self.now = 0.0
+        self.trace: list[str] = []
+        #: one entry per decision: (runnable names, chosen idx, idx of the
+        #: previously-running task if still runnable else None).
+        self.points: list[tuple[tuple[str, ...], int, int | None]] = []
+        self.decisions: list[int] = []
+        self._tasks: dict[str, _Task] = {}
+        self._order: list[_Task] = []
+        self._by_ident: dict[int, _Task] = {}
+        self._wake = _Gate()
+        self._current: _Task | None = None
+        self._aborting = False
+
+    # -- patching -----------------------------------------------------------
+    @contextlib.contextmanager
+    def activate(self):
+        """Install the cooperative primitives and the virtual clock for
+        the duration of the block; tears the schedule down on exit."""
+        global _ACTIVE
+        if _ACTIVE is not None:
+            raise RuntimeError("another CoopScheduler is already active")
+        _ACTIVE = self
+        sched = self
+        restore_ctors = patch_threading_ctors(
+            lock=lambda: SchedLock(sched),
+            rlock=lambda: SchedRLock(sched),
+            condition=lambda lock=None: SchedCondition(sched, lock),
+            thread=SchedThread,
+        )
+        saved_time = {k: getattr(_time_mod, k) for k in _REAL_TIME}
+        _time_mod.monotonic = lambda: sched.now
+        _time_mod.time = lambda: sched.now
+        _time_mod.perf_counter = lambda: sched.now
+        _time_mod.sleep = sched.sleep
+        try:
+            yield self
+        finally:
+            # Teardown runs with the patches still active: aborted tasks
+            # unwind through user ``finally`` blocks that touch the
+            # cooperative primitives (which no-op while aborting).
+            self.shutdown()
+            for k, v in saved_time.items():
+                setattr(_time_mod, k, v)
+            restore_ctors()
+            _ACTIVE = None
+
+    # -- task management ----------------------------------------------------
+    def spawn(self, fn, name: str | None = None, daemon: bool = False) -> _Task:
+        base = name or f"task-{len(self._order)}"
+        name, i = base, 1
+        while name in self._tasks:
+            name = f"{base}-{i}"
+            i += 1
+        task = _Task(name, daemon)
+        self._tasks[name] = task
+        self._order.append(task)
+
+        def bootstrap() -> None:
+            self._by_ident[threading.get_ident()] = task
+            task.gate.wait(None)
+            task.gate.clear()
+            if not self._aborting:
+                try:
+                    fn()
+                except SchedulerAbort:
+                    pass
+                except BaseException as e:  # repro: allow[RP005] — harness boundary: every task exception is rethrown by run() as TaskFailed
+                    task.exc = e
+            task.state = "done"
+            for j in task.joiners:
+                self._make_ready(j)
+            task.joiners.clear()
+            self._wake.set()
+
+        with _ctors_unpatched():
+            t = _RealThread(target=bootstrap, name=name, daemon=True)
+            task.thread = t
+            t.start()
+        return task
+
+    def current_task(self) -> _Task | None:
+        return self._by_ident.get(threading.get_ident())
+
+    # -- driver loop --------------------------------------------------------
+    def run(self) -> None:
+        steps = 0
+        while True:
+            failed = next((t for t in self._order if t.exc is not None), None)
+            if failed is not None:
+                exc, failed.exc = failed.exc, None
+                self._abort_tasks()
+                raise TaskFailed(failed.name, exc) from exc
+            live = [t for t in self._order if t.state != "done"]
+            if not any(not t.daemon for t in live):
+                return                      # program exit: daemons die with it
+            runnable = sorted((t for t in live if t.state == "ready"),
+                              key=lambda t: t.name)
+            if not runnable:
+                timed = [t for t in live if t.deadline is not None]
+                if not timed:
+                    blocked = ", ".join(
+                        f"{t.name}({t.reason})" for t in live if not t.daemon)
+                    self._abort_tasks()
+                    raise DeadlockError(f"all tasks blocked: {blocked}")
+                target = min(t.deadline for t in timed)
+                if target > self.now:
+                    self.now = target
+                    self.trace.append(f"clock {self.now:.6f}")
+                for t in timed:
+                    if t.deadline is not None and t.deadline <= self.now:
+                        t.deadline = None
+                        t.timed_out = True
+                        t.state = "ready"
+                        t.reason = ""
+                continue
+            steps += 1
+            if steps > self.max_steps:
+                self._abort_tasks()
+                raise LivelockError(
+                    f"schedule exceeded {self.max_steps} steps")
+            names = tuple(t.name for t in runnable)
+            cur = (runnable.index(self._current)
+                   if self._current in runnable else None)
+            chosen = self.picker(names, cur)
+            chosen = max(0, min(int(chosen), len(runnable) - 1))
+            self.points.append((names, chosen, cur))
+            self.decisions.append(chosen)
+            task = runnable[chosen]
+            self.trace.append(f"run {task.name}")
+            self._resume(task)
+
+    def _resume(self, task: _Task) -> None:
+        self._current = task
+        self._wake.clear()
+        task.gate.set()
+        if not self._wake.wait(_HANDSHAKE_TIMEOUT_S):
+            self._abort_tasks()
+            raise RuntimeError(
+                f"task {task.name} never handed control back "
+                f"(blocked on an unpatched primitive?)")
+
+    # -- task-side switch points -------------------------------------------
+    def _switch_out(self, task: _Task) -> None:
+        self._wake.set()
+        task.gate.wait(None)
+        task.gate.clear()
+        if self._aborting:
+            raise SchedulerAbort()
+
+    def yield_point(self, reason: str) -> None:
+        """A scheduling point: the running task offers the driver a
+        chance to preempt it. No-op outside a task (driver context)."""
+        task = self.current_task()
+        if task is None:
+            return
+        if self._aborting:
+            raise SchedulerAbort()
+        task.state = "ready"
+        task.reason = reason
+        self.trace.append(f"{task.name} {reason}")
+        self._switch_out(task)
+
+    def block(self, reason: str, deadline: float | None = None) -> bool:
+        """Park the calling task until `_make_ready` or the virtual
+        clock reaches `deadline`. Returns True when woken by deadline.
+
+        From driver context a bounded wait just advances the clock (the
+        run is over, nobody will notify); an unbounded one is a
+        programming error in the model's ``check()``."""
+        task = self.current_task()
+        if task is None:
+            if deadline is not None:
+                if deadline > self.now:
+                    self.now = deadline
+                return True
+            raise DeadlockError(f"driver would block forever on {reason}")
+        if self._aborting:
+            raise SchedulerAbort()
+        task.state = "blocked"
+        task.reason = reason
+        task.deadline = deadline
+        task.timed_out = False
+        self.trace.append(f"{task.name} blocked {reason}")
+        self._switch_out(task)
+        return task.timed_out
+
+    def _make_ready(self, task: _Task) -> None:
+        if task.state == "blocked":
+            task.state = "ready"
+            task.deadline = None
+            task.timed_out = False
+            task.reason = ""
+
+    def sleep(self, seconds: float) -> None:
+        if seconds is not None and seconds > 0:
+            self.block(f"sleep {seconds:g}", self.now + seconds)
+        else:
+            self.yield_point("sleep 0")
+
+    # -- teardown -----------------------------------------------------------
+    def _abort_tasks(self) -> None:
+        self._aborting = True
+        for t in self._order:
+            if t.state != "done":
+                t.gate.set()
+
+    def shutdown(self) -> None:
+        self._abort_tasks()
+        for t in self._order:
+            if t.thread is not None:
+                t.thread.join(timeout=_HANDSHAKE_TIMEOUT_S)
+
+
+# ---------------------------------------------------------------------------
+# Cooperative primitives. While the scheduler is aborting, every
+# operation degrades to a benign no-op success so unwinding user
+# ``finally`` blocks cannot wedge the teardown.
+# ---------------------------------------------------------------------------
+
+class SchedLock:
+    """Cooperative ``threading.Lock`` stand-in."""
+
+    def __init__(self, sched: CoopScheduler) -> None:
+        self._sched = sched
+        self._owner = None
+        self._waiters: list[_Task] = []
+
+    def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
+        sched = self._sched
+        if sched._aborting:
+            return True
+        task = sched.current_task()
+        if task is None:
+            if self._owner is None:
+                self._owner = _DRIVER
+                return True
+            raise DeadlockError("driver blocked on a lock held by a task")
+        sched.yield_point("lock.acquire")
+        if timeout is not None and timeout < 0:
+            timeout = None
+        deadline = None if timeout is None else sched.now + timeout
+        while self._owner is not None:
+            if not blocking:
+                return False
+            if deadline is not None and sched.now >= deadline:
+                return False
+            self._waiters.append(task)
+            try:
+                timed_out = sched.block("lock.wait", deadline)
+            finally:
+                try:
+                    self._waiters.remove(task)
+                except ValueError:
+                    pass
+            if timed_out and self._owner is not None:
+                return False
+        self._owner = task
+        return True
+
+    def release(self) -> None:
+        sched = self._sched
+        if sched._aborting:
+            return
+        if self._owner is None:
+            raise RuntimeError("release unlocked lock")
+        self._owner = None
+        for w in list(self._waiters):
+            sched._make_ready(w)
+
+    def locked(self) -> bool:
+        return self._owner is not None
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    # Condition-protocol hooks (mirror threading.Lock's use).
+    def _release_save(self):
+        self.release()
+        return None
+
+    def _acquire_restore(self, state) -> None:
+        self.acquire()
+
+    def _is_owned(self) -> bool:
+        me = self._sched.current_task() or _DRIVER
+        return self._owner is me
+
+
+class SchedRLock:
+    """Cooperative ``threading.RLock`` stand-in."""
+
+    def __init__(self, sched: CoopScheduler) -> None:
+        self._sched = sched
+        self._owner = None
+        self._count = 0
+        self._waiters: list[_Task] = []
+
+    def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
+        sched = self._sched
+        if sched._aborting:
+            return True
+        me = sched.current_task() or _DRIVER
+        if self._owner is me:
+            self._count += 1
+            return True
+        if me is _DRIVER:
+            if self._owner is None:
+                self._owner, self._count = me, 1
+                return True
+            raise DeadlockError("driver blocked on an rlock held by a task")
+        sched.yield_point("rlock.acquire")
+        if timeout is not None and timeout < 0:
+            timeout = None
+        deadline = None if timeout is None else sched.now + timeout
+        while self._owner is not None:
+            if not blocking:
+                return False
+            if deadline is not None and sched.now >= deadline:
+                return False
+            self._waiters.append(me)
+            try:
+                timed_out = sched.block("rlock.wait", deadline)
+            finally:
+                try:
+                    self._waiters.remove(me)
+                except ValueError:
+                    pass
+            if timed_out and self._owner is not None:
+                return False
+        self._owner, self._count = me, 1
+        return True
+
+    def release(self) -> None:
+        sched = self._sched
+        if sched._aborting:
+            return
+        if self._count <= 0:
+            raise RuntimeError("release unlocked rlock")
+        self._count -= 1
+        if self._count == 0:
+            self._owner = None
+            for w in list(self._waiters):
+                sched._make_ready(w)
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    def _release_save(self):
+        state = (self._count, self._owner)
+        self._count = 0
+        self._owner = None
+        for w in list(self._waiters):
+            self._sched._make_ready(w)
+        return state
+
+    def _acquire_restore(self, state) -> None:
+        self.acquire()
+        self._count = state[0]
+
+    def _is_owned(self) -> bool:
+        me = self._sched.current_task() or _DRIVER
+        return self._owner is me
+
+
+class SchedCondition:
+    """Cooperative ``threading.Condition`` stand-in. `notify` removes
+    the woken waiters from the queue (like the real one), so successive
+    single notifies wake distinct waiters."""
+
+    def __init__(self, sched: CoopScheduler, lock=None) -> None:
+        self._sched = sched
+        self._lock = lock if lock is not None else SchedRLock(sched)
+        self._waiters: list[_Task] = []
+
+    def acquire(self, *args, **kwargs) -> bool:
+        return self._lock.acquire(*args, **kwargs)
+
+    def release(self) -> None:
+        self._lock.release()
+
+    def __enter__(self):
+        self._lock.acquire()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self._lock.release()
+
+    def _is_owned(self) -> bool:
+        return self._lock._is_owned()
+
+    def wait(self, timeout: float | None = None) -> bool:
+        sched = self._sched
+        if sched._aborting:
+            raise SchedulerAbort()
+        task = sched.current_task()
+        if task is None:
+            if timeout is not None:
+                sched.block("cond.wait", sched.now + timeout)
+                return False
+            raise DeadlockError("driver cond.wait() with no timeout")
+        deadline = None if timeout is None else sched.now + timeout
+        saved = self._lock._release_save()
+        self._waiters.append(task)
+        try:
+            timed_out = sched.block("cond.wait", deadline)
+        finally:
+            try:
+                self._waiters.remove(task)
+            except ValueError:
+                pass
+            self._lock._acquire_restore(saved)
+        return not timed_out
+
+    def wait_for(self, predicate, timeout: float | None = None):
+        sched = self._sched
+        deadline = None if timeout is None else sched.now + timeout
+        result = predicate()
+        while not result:
+            remaining = None
+            if deadline is not None:
+                remaining = deadline - sched.now
+                if remaining <= 0:
+                    break
+            self.wait(remaining)
+            result = predicate()
+        return result
+
+    def notify(self, n: int = 1) -> None:
+        if self._sched._aborting:
+            return
+        woken = self._waiters[:n]
+        del self._waiters[:len(woken)]
+        for w in woken:
+            self._sched._make_ready(w)
+
+    def notify_all(self) -> None:
+        self.notify(len(self._waiters))
+
+
+class SchedThread:
+    """``threading.Thread`` stand-in under an active CoopScheduler.
+    Covers the subset the codebase uses: target/name/daemon ctor,
+    `start`, `join(timeout)`, `is_alive`, `name`."""
+
+    def __init__(self, group=None, target=None, name=None, args=(),
+                 kwargs=None, *, daemon=None) -> None:
+        sched = _ACTIVE
+        if sched is None:
+            raise RuntimeError("SchedThread outside an active CoopScheduler")
+        self._sched = sched
+        self._target = target
+        self._args = tuple(args)
+        self._kwargs = dict(kwargs or {})
+        self.name = name or f"SchedThread-{len(sched._order)}"
+        self.daemon = bool(daemon) if daemon is not None else False
+        self._task: _Task | None = None
+
+    def run(self) -> None:
+        if self._target is not None:
+            self._target(*self._args, **self._kwargs)
+
+    def start(self) -> None:
+        if self._task is not None:
+            raise RuntimeError("threads can only be started once")
+        self._task = self._sched.spawn(self.run, name=self.name,
+                                       daemon=self.daemon)
+        self.name = self._task.name
+        self._sched.yield_point("thread.start")
+
+    def join(self, timeout: float | None = None) -> None:
+        sched = self._sched
+        task = self._task
+        if task is None:
+            raise RuntimeError("cannot join thread before it is started")
+        cur = sched.current_task()
+        if cur is task:
+            raise RuntimeError("cannot join current thread")
+        deadline = None if timeout is None else sched.now + timeout
+        while task.state != "done":
+            if sched._aborting:
+                raise SchedulerAbort()
+            if deadline is not None and sched.now >= deadline:
+                return
+            if cur is None:
+                if deadline is None:
+                    raise DeadlockError(
+                        f"driver join() on live task {task.name}")
+                sched.block(f"join {task.name}", deadline)
+                continue
+            task.joiners.append(cur)
+            try:
+                sched.block(f"join {task.name}", deadline)
+            finally:
+                try:
+                    task.joiners.remove(cur)
+                except ValueError:
+                    pass
+
+    def is_alive(self) -> bool:
+        return self._task is not None and self._task.state != "done"

@@ -107,6 +107,12 @@ def _install_hypothesis_fallback() -> None:
 
 _install_hypothesis_fallback()
 
+# Imported at collection time, before any fixture patches threading's
+# constructor names — repro.sched captures the real ones at import, and
+# both this file's traced locks and the interleaving explorer's
+# cooperative locks go through the same patch mechanism.
+from repro.sched import patch_threading_ctors  # noqa: E402
+
 
 # ---------------------------------------------------------------------------
 # Instrumented locks: record runtime acquisition order, check it against
@@ -236,7 +242,12 @@ class _TracedCondition(_TracedLock):
         self._inner.notify_all()
 
 
+_restore_lock_ctors = None
+
+
 def _patch_lock_ctors(recorder: LockOrderRecorder):
+    global _restore_lock_ctors
+
     def make_lock():
         return _TracedLock(recorder, _REAL_LOCK())
 
@@ -248,15 +259,15 @@ def _patch_lock_ctors(recorder: LockOrderRecorder):
             lock = lock._inner
         return _TracedCondition(recorder, _REAL_CONDITION(lock))
 
-    threading.Lock = make_lock
-    threading.RLock = make_rlock
-    threading.Condition = make_condition
+    _restore_lock_ctors = patch_threading_ctors(
+        lock=make_lock, rlock=make_rlock, condition=make_condition)
 
 
 def _unpatch_lock_ctors() -> None:
-    threading.Lock = _REAL_LOCK
-    threading.RLock = _REAL_RLOCK
-    threading.Condition = _REAL_CONDITION
+    global _restore_lock_ctors
+    if _restore_lock_ctors is not None:
+        _restore_lock_ctors()
+        _restore_lock_ctors = None
 
 
 @pytest.fixture(scope="session")

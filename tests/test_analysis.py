@@ -262,6 +262,119 @@ def test_pick():
     assert random.randint(0, 5) >= 0
 """,
     ),
+    "RP009": (
+        # bad: leader flight leaks if prepare() raises; the waiter
+        # branch exits without join()/leave()
+        """
+def fetch(index, bid, data, prepare):
+    kind, handle = index.acquire(bid)
+    if kind == "leader":
+        prepare(data)
+        index.publish(handle, data, len(data))
+""",
+        # good: leader aborts on the error edge, waiter joins or leaves
+        """
+def fetch(index, bid, data):
+    kind, handle = index.acquire(bid)
+    if kind == "leader":
+        try:
+            index.publish(handle, data, len(data))
+        except BaseException:
+            index.abort_fetch(handle)
+            raise
+    elif kind == "wait":
+        if index.join(handle, timeout=5.0) is None:
+            index.leave(handle)
+""",
+    ),
+    "RP010": (
+        # bad: the pin is released twice
+        """
+def read_block(index, bid):
+    kind, tier = index.acquire(bid)
+    assert kind == "hit"
+    data = tier.read(bid, 0, 10)
+    index.unpin(bid)
+    index.unpin(bid)
+    return data
+""",
+        # good: read while pinned, exactly one unpin
+        """
+def read_block(index, bid):
+    kind, tier = index.acquire(bid)
+    assert kind == "hit"
+    data = tier.read(bid, 0, 10)
+    index.unpin(bid)
+    return data
+""",
+    ),
+    "RP011": (
+        # bad: reservation leaks on the write error edge and on the
+        # normal exit (never committed)
+        """
+def stage(index, bid, payload):
+    tier = index.reserve_space(len(payload))
+    if tier is None:
+        raise MemoryError("no space")
+    tier.write(bid, payload)
+""",
+        # good: commit on success, cancel on the error edge
+        """
+def stage(index, bid, payload):
+    tier = index.reserve_space(len(payload))
+    if tier is None:
+        raise MemoryError("no space")
+    try:
+        tier.write(bid, payload)
+    except BaseException:
+        tier.cancel(len(payload))
+        raise
+    tier.commit(len(payload))
+""",
+    ),
+    "RP012": (
+        # bad: a put_part failure orphans the multipart upload
+        """
+def push(store, key, data):
+    mp = store.start_multipart(key)
+    mp.put_part(0, data)
+    mp.complete()
+""",
+        # good: abort on the error edge
+        """
+def push(store, key, data):
+    mp = store.start_multipart(key)
+    try:
+        mp.put_part(0, data)
+    except BaseException:
+        mp.abort()
+        raise
+    mp.complete()
+""",
+    ),
+    "RP013": (
+        # bad: pool constructed, submitted to, never closed
+        """
+from repro.io.write import UploadPool
+
+def drain(jobs):
+    pool = UploadPool()
+    for job in jobs:
+        pool.submit(job)
+""",
+        # good: close() on every normal path
+        """
+from repro.io.write import UploadPool
+
+def drain(jobs):
+    pool = UploadPool()
+    try:
+        for job in jobs:
+            pool.submit(job)
+    finally:
+        pool.close()
+""",
+    ),
 }
 
 
@@ -505,6 +618,88 @@ def test_cli_write_baseline_then_gate_passes(tmp_path):
     assert proc.returncode == 0, proc.stdout + proc.stderr
     proc = _run_cli([str(tmp_path), "--baseline", bl], cwd=str(tmp_path))
     assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_cli_check_baseline_fails_on_stale_fingerprints(tmp_path):
+    bad, good = RULE_FIXTURES["RP005"]
+    src = tmp_path / "fx.py"
+    src.write_text(bad)
+    bl = str(tmp_path / "bl.json")
+    proc = _run_cli([str(tmp_path), "--baseline", bl, "--write-baseline"],
+                    cwd=str(tmp_path))
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    # The finding gets fixed; its baseline fingerprint is now stale.
+    src.write_text(good)
+    proc = _run_cli([str(tmp_path), "--baseline", bl], cwd=str(tmp_path))
+    assert proc.returncode == 0      # without the flag: lenient
+    proc = _run_cli([str(tmp_path), "--baseline", bl, "--check-baseline"],
+                    cwd=str(tmp_path))
+    assert proc.returncode == 1
+    assert "stale" in proc.stdout + proc.stderr
+
+
+def test_cli_check_locks_md_freshness(tmp_path):
+    code = RULE_FIXTURES["RP001"][1]     # has a real lock attribute
+    (tmp_path / "fx.py").write_text(code)
+    md = tmp_path / "LOCKS.md"
+    proc = _run_cli([str(tmp_path), "--locks-md", str(md)],
+                    cwd=str(tmp_path))
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    proc = _run_cli([str(tmp_path), "--check-locks-md", str(md)],
+                    cwd=str(tmp_path))
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    md.write_text(md.read_text() + "\nout of date\n")
+    proc = _run_cli([str(tmp_path), "--check-locks-md", str(md)],
+                    cwd=str(tmp_path))
+    assert proc.returncode == 1
+    assert "stale" in proc.stdout + proc.stderr
+    # Missing file counts as stale too.
+    proc = _run_cli([str(tmp_path), "--check-locks-md",
+                     str(tmp_path / "absent.md")], cwd=str(tmp_path))
+    assert proc.returncode == 1
+
+
+def test_cli_check_locks_md_conflicts_with_no_lock_graph(tmp_path):
+    (tmp_path / "fx.py").write_text("x = 1\n")
+    proc = _run_cli([str(tmp_path), "--no-lock-graph",
+                     "--check-locks-md", str(tmp_path / "LOCKS.md")],
+                    cwd=str(tmp_path))
+    assert proc.returncode == 2
+
+
+# --------------------------------------------------------------------------- #
+# Analyzer robustness: damaged inputs become per-file findings, never a
+# crashed analyzer.
+# --------------------------------------------------------------------------- #
+
+def test_syntax_error_file_is_rp000_not_crash(tmp_path):
+    (tmp_path / "broken.py").write_text("def broken(:\n")
+    (tmp_path / "ok.py").write_text("x = 1\n")
+    project, findings = load_project([str(tmp_path)])
+    assert fired(findings) == {"RP000"}
+    # The healthy file still got analyzed.
+    assert any(m.path.endswith("ok.py") for m in project.modules)
+
+
+def test_null_byte_file_is_rp000_not_crash(tmp_path):
+    (tmp_path / "nul.py").write_bytes(b"x = 1\x00\n")
+    _, findings = load_project([str(tmp_path)])
+    assert fired(findings) == {"RP000"}
+
+
+def test_non_utf8_file_is_rp000_not_crash(tmp_path):
+    (tmp_path / "latin.py").write_bytes(b"s = '\xff\xfe'\n")
+    _, findings = load_project([str(tmp_path)])
+    assert fired(findings) == {"RP000"}
+
+
+def test_unreadable_file_is_rp000_not_crash(tmp_path):
+    # A dangling symlink raises OSError at open() even for root.
+    (tmp_path / "gone.py").symlink_to(tmp_path / "no-such-target.py")
+    (tmp_path / "ok.py").write_text("x = 1\n")
+    project, findings = load_project([str(tmp_path)])
+    assert fired(findings) == {"RP000"}
+    assert any(m.path.endswith("ok.py") for m in project.modules)
 
 
 # --------------------------------------------------------------------------- #

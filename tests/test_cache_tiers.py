@@ -361,7 +361,8 @@ class TestCacheIndex:
     def test_keep_cached_defers_to_capacity_pressure(self):
         tier = self._tier()
         idx = CacheIndex([tier], keep_cached=True)
-        _, flight = idx.acquire("b")
+        kind, flight = idx.acquire("b")
+        assert kind == "leader"
         tier.reserve(4)
         tier.write("b", b"data")
         tier.commit(4)
@@ -389,13 +390,16 @@ class TestCacheIndex:
 
     def test_leader_failure_lets_waiters_take_over(self):
         idx = CacheIndex([self._tier()])
-        _, flight = idx.acquire("b")
-        _, same = idx.acquire("b")
+        kind, flight = idx.acquire("b")
+        assert kind == "leader"
+        kind, same = idx.acquire("b")
+        assert kind == "wait"
         idx.abort_fetch(flight, StoreError("boom"))
         kind, err = idx.join(same)
         assert kind == "failed" and isinstance(err, StoreError)
-        kind, _ = idx.acquire("b")
+        kind, retry = idx.acquire("b")
         assert kind == "leader"    # the waiter retries as the new leader
+        idx.abort_fetch(retry)
 
     def test_primes_from_persistent_tier(self, tmp_path):
         root = str(tmp_path / "cache")

@@ -1,0 +1,345 @@
+"""Tests for the deterministic interleaving explorer and its scheduler.
+
+Calibration contract: the known-racy single-flight fixture MUST be
+caught (by fuzzing and by bounded exhaustive search), its fixed twin
+MUST pass, and the real concurrency-core models (CacheIndex single
+flight, UploadPool close-vs-submit, PeerGroup failover) MUST pass
+within the preemption bound. Determinism is the other half: identical
+seed, identical trace and verdict, bit for bit.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import pytest
+
+from repro.analysis.explore import (
+    PeerFailoverModel,
+    RacySingleFlightModel,
+    SafeSingleFlightModel,
+    SingleFlightModel,
+    UploadPoolCloseModel,
+    explore,
+    fuzz,
+    replay,
+)
+from repro.sched import (
+    CoopScheduler,
+    DeadlockError,
+    RandomPicker,
+    ReplayPicker,
+    TaskFailed,
+)
+
+
+# --------------------------------------------------------------------------- #
+# Determinism: same seed, same everything.
+# --------------------------------------------------------------------------- #
+
+def test_fuzz_is_deterministic_on_racy_model():
+    a = fuzz(RacySingleFlightModel, seed=7, runs=25)
+    b = fuzz(RacySingleFlightModel, seed=7, runs=25)
+    assert not a.ok
+    assert a.schedules == b.schedules
+    assert a.trace == b.trace
+    assert a.decisions == b.decisions
+    assert a.violations == b.violations
+    assert a.error == b.error
+
+
+def test_fuzz_is_deterministic_on_safe_model():
+    a = fuzz(SafeSingleFlightModel, seed=7, runs=10)
+    b = fuzz(SafeSingleFlightModel, seed=7, runs=10)
+    assert a.ok and b.ok
+    assert a.trace == b.trace
+    assert a.decisions == b.decisions
+
+
+def test_different_seeds_may_visit_different_schedules():
+    a = fuzz(SafeSingleFlightModel, seed=1, runs=1)
+    b = fuzz(SafeSingleFlightModel, seed=2, runs=1)
+    # Both clean, but the point of seeding is varied coverage; the
+    # decision logs exist either way.
+    assert a.ok and b.ok
+    assert a.decisions and b.decisions
+
+
+def test_trace_has_no_wall_clock_entries():
+    v = fuzz(SafeSingleFlightModel, seed=3, runs=2)
+    # Virtual-clock entries are "clock <t>"; everything else is
+    # "<task> <reason>". No timestamps from the host clock.
+    for line in v.trace:
+        head = line.split()[0]
+        assert head == "clock" or not head.replace(".", "").isdigit()
+
+
+# --------------------------------------------------------------------------- #
+# Replay: a recorded decision sequence reproduces the verdict.
+# --------------------------------------------------------------------------- #
+
+def test_replay_reproduces_fuzzed_violation():
+    v = fuzz(RacySingleFlightModel, seed=7, runs=25)
+    assert not v.ok
+    r = replay(RacySingleFlightModel, v.decisions)
+    assert not r.ok
+    assert r.trace == v.trace
+    assert r.violations == v.violations and r.error == v.error
+
+
+def test_replay_empty_prefix_is_nonpreemptive_baseline():
+    r = replay(RacySingleFlightModel, ())
+    # The nonpreemptive schedule runs each reader to completion — the
+    # race needs a preemption, so the baseline is clean.
+    assert r.ok, r.describe()
+
+
+# --------------------------------------------------------------------------- #
+# Bounded exhaustive exploration.
+# --------------------------------------------------------------------------- #
+
+def test_explore_catches_racy_fixture_at_bound_one():
+    v = explore(RacySingleFlightModel, preemption_bound=1,
+                max_schedules=100)
+    assert not v.ok, v.describe()
+    # The duplicate fetch is the observable symptom at one preemption.
+    assert v.error and "fetches" in v.error
+
+
+def test_explore_catches_monitor_violation_at_bound_two():
+    v = explore(RacySingleFlightModel, preemption_bound=2,
+                max_schedules=400)
+    assert not v.ok
+
+
+def test_explore_verdict_replays():
+    v = explore(RacySingleFlightModel, preemption_bound=1,
+                max_schedules=100)
+    assert not v.ok
+    r = replay(RacySingleFlightModel, v.decisions)
+    assert not r.ok
+    assert r.error == v.error and r.violations == v.violations
+
+
+def test_explore_passes_safe_fixture():
+    v = explore(SafeSingleFlightModel, preemption_bound=2,
+                max_schedules=400)
+    assert v.ok, v.describe()
+    assert v.schedules > 1          # it actually branched
+
+
+def test_explore_is_deterministic():
+    a = explore(RacySingleFlightModel, preemption_bound=1,
+                max_schedules=100)
+    b = explore(RacySingleFlightModel, preemption_bound=1,
+                max_schedules=100)
+    assert a.schedules == b.schedules
+    assert a.decisions == b.decisions
+    assert a.trace == b.trace
+
+
+# --------------------------------------------------------------------------- #
+# The real concurrency core, under the monitor.
+# --------------------------------------------------------------------------- #
+
+def test_real_single_flight_passes_bounded_exploration():
+    v = explore(SingleFlightModel, preemption_bound=1, max_schedules=200)
+    assert v.ok, v.describe()
+
+
+def test_real_single_flight_passes_fuzz():
+    v = fuzz(SingleFlightModel, seed=11, runs=20)
+    assert v.ok, v.describe()
+
+
+def test_upload_pool_close_vs_submit_passes():
+    v = explore(UploadPoolCloseModel, preemption_bound=1,
+                max_schedules=200)
+    assert v.ok, v.describe()
+
+
+def test_peer_failover_passes():
+    v = explore(PeerFailoverModel, preemption_bound=2, max_schedules=200)
+    assert v.ok, v.describe()
+
+
+# --------------------------------------------------------------------------- #
+# Scheduler mechanics.
+# --------------------------------------------------------------------------- #
+
+class _ABBADeadlockModel:
+    """Classic lock-order inversion: one preemption away from deadlock."""
+
+    def setup(self, monitor):
+        a = threading.Lock()
+        b = threading.Lock()
+
+        def t1():
+            with a:
+                with b:
+                    pass
+
+        def t2():
+            with b:
+                with a:
+                    pass
+
+        return [("t1", t1), ("t2", t2)]
+
+    def check(self) -> None:
+        pass
+
+
+def test_explore_finds_abba_deadlock():
+    v = explore(_ABBADeadlockModel, preemption_bound=1, max_schedules=50)
+    assert not v.ok
+    assert v.error and v.error.startswith("deadlock")
+    # And the deadlock replays from its decision log.
+    r = replay(_ABBADeadlockModel, v.decisions)
+    assert r.error == v.error
+
+
+def test_virtual_clock_runs_sleeps_instantly():
+    sched = CoopScheduler(ReplayPicker(()))
+    with sched.activate():
+        def sleeper():
+            time.sleep(300.0)
+
+        sched.spawn(sleeper, name="sleeper")
+        sched.run()
+    # The 300 virtual seconds elapsed on the scheduler's clock; the test
+    # itself returns in milliseconds of real time.
+    assert sched.now >= 300.0
+    assert any(line.startswith("clock") for line in sched.trace)
+
+
+def test_condition_timeout_uses_virtual_clock():
+    sched = CoopScheduler(ReplayPicker(()))
+    with sched.activate():
+        out = {}
+
+        def waiter():
+            cond = threading.Condition()
+            with cond:
+                out["signalled"] = cond.wait(timeout=60.0)
+
+        sched.spawn(waiter, name="waiter")
+        sched.run()
+    assert out["signalled"] is False
+    assert sched.now >= 60.0
+
+
+def test_task_exception_surfaces_as_task_failed():
+    sched = CoopScheduler(ReplayPicker(()))
+    with sched.activate():
+        def boom():
+            raise ValueError("kaboom")
+
+        sched.spawn(boom, name="boom")
+        with pytest.raises(TaskFailed, match="kaboom"):
+            sched.run()
+
+
+def test_self_deadlock_detected():
+    sched = CoopScheduler(ReplayPicker(()))
+    with sched.activate():
+        def stuck():
+            lock = threading.Lock()
+            lock.acquire()
+            lock.acquire()          # non-reentrant: blocks forever
+
+        sched.spawn(stuck, name="stuck")
+        with pytest.raises(DeadlockError):
+            sched.run()
+
+
+def test_queue_handoff_is_cooperative():
+    import queue
+
+    sched = CoopScheduler(RandomPicker("q"))
+    got = []
+    with sched.activate():
+        # A Queue built during the window resolves the patched ctors, so
+        # its mutex/conditions are cooperative.
+        q = queue.Queue(maxsize=1)
+        assert type(q.mutex).__name__ == "SchedLock"
+
+        def producer():
+            for i in range(3):
+                q.put(i)
+
+        def consumer():
+            for _ in range(3):
+                got.append(q.get())
+
+        sched.spawn(producer, name="producer")
+        sched.spawn(consumer, name="consumer")
+        sched.run()
+    assert got == [0, 1, 2]
+
+
+def test_condition_notify_wakes_distinct_waiters():
+    sched = CoopScheduler(ReplayPicker(()))
+    woken = []
+    with sched.activate():
+        cond = threading.Condition()
+        ready = []
+
+        def waiter(tag):
+            with cond:
+                ready.append(tag)
+                cond.wait()
+                woken.append(tag)
+
+        def notifier():
+            # Two successive single notifies must wake two DIFFERENT
+            # waiters.
+            while True:
+                with cond:
+                    if len(ready) == 2:
+                        cond.notify()
+                        cond.notify()
+                        return
+                time.sleep(0.01)
+
+        sched.spawn(lambda: waiter("a"), name="waiter-a")
+        sched.spawn(lambda: waiter("b"), name="waiter-b")
+        sched.spawn(notifier, name="notifier")
+        sched.run()
+    assert sorted(woken) == ["a", "b"]
+
+
+def test_daemon_task_does_not_block_shutdown():
+    sched = CoopScheduler(ReplayPicker(()))
+    with sched.activate():
+        def forever():
+            lock = threading.Lock()
+            lock.acquire()
+            lock.acquire()          # parks forever
+
+        def work():
+            pass
+
+        sched.spawn(forever, name="bg", daemon=True)
+        sched.spawn(work, name="work")
+        sched.run()                 # returns once `work` is done
+    assert True
+
+
+def test_thread_start_join_inside_schedule():
+    sched = CoopScheduler(RandomPicker("t"))
+    seen = []
+    with sched.activate():
+        def child():
+            seen.append("child")
+
+        def parent():
+            t = threading.Thread(target=child, name="child")
+            t.start()
+            t.join()
+            seen.append("parent")
+
+        sched.spawn(parent, name="parent")
+        sched.run()
+    assert seen == ["child", "parent"]

@@ -274,6 +274,7 @@ class TestDemotion:
         fast, slow = fast_slow_tiers(mem_cap=2048)
         idx = HSMIndex([fast, slow], mover_interval_s=None)
         kind, flight = idx.acquire("pinned")
+        assert kind == "leader"
         tier = idx.reserve_space(1024)
         tier.write("pinned", payload(1024))
         tier.commit(1024)

@@ -240,7 +240,8 @@ class TestQuarantine:
     def test_quarantine_ignores_pins(self):
         tiers = [MemTier(1 << 20)]
         index = CacheIndex(tiers, keep_cached=True)
-        _, fl = index.acquire("b@0-4")
+        kind, fl = index.acquire("b@0-4")
+        assert kind == "leader"
         tiers[0].write("b@0-4", b"data")
         index.publish(fl, tiers[0], 4)
         # publish leaves the leader pin; quarantine must not wait on it —

@@ -189,6 +189,28 @@ class TestServerClient:
         assert self.store.fetches == 0
         assert self.server.snapshot()["misses"] == 1
 
+    def test_push_rejected_when_reserve_space_raises_aborts_flight(self):
+        # reserve_space can run eviction I/O; if it blows up mid-adoption
+        # the pushed flight must be aborted, or a racing local fetch
+        # waits on the zombie until the reclaim TTL.
+        blob = self.data[:4096]
+
+        def broken_reserve(*a, **kw):
+            raise RuntimeError("eviction I/O failed")
+
+        orig = self.index.reserve_space
+        self.index.reserve_space = broken_reserve
+        try:
+            assert self.server._store_pushed("obj", 0, 4096, blob) == "rejected"
+        finally:
+            self.index.reserve_space = orig
+        # No leaked flight: a local acquire leads immediately instead of
+        # parking behind the failed push.
+        assert not self.index._flights
+        kind, flight = self.index.acquire(span_block_id("obj", 0, 4096))
+        assert kind == "leader"
+        self.index.abort_fetch(flight)
+
     def test_put_then_probe_serves_pushed_bytes(self):
         blob = self.data[8192:12288]
         assert self.client.put("obj", 8192, 12288, blob)
@@ -644,7 +666,10 @@ class TestFlightReclamation:
     def test_waiter_join_reclaims_stale_flight(self):
         tiers = [MemTier(1 << 20)]
         index = CacheIndex(tiers, flight_ttl_s=0.05)
-        _, leader = index.acquire("b@0-4")
+        # repro: allow[RP009] — stale leader deliberately left in flight
+        # so the waiter's join reclaims it past the TTL.
+        kind, leader = index.acquire("b@0-4")
+        assert kind == "leader"
         kind, fl = index.acquire("b@0-4")
         assert kind == "wait"
         time.sleep(0.06)
@@ -652,15 +677,17 @@ class TestFlightReclamation:
         assert st == "failed"
         assert "reclaimed" in str(err)
         # The waiter re-acquires and becomes the new leader.
-        kind, _ = index.acquire("b@0-4")
+        kind, takeover = index.acquire("b@0-4")
         assert kind == "leader"
+        index.abort_fetch(takeover)
 
     def test_zombie_leader_publish_is_harmless(self):
         """A reclaimed leader that wakes up late must not clobber the new
         leader's world: its publish registers nothing."""
         tiers = [MemTier(1 << 20)]
         index = CacheIndex(tiers, flight_ttl_s=0.05)
-        _, zombie = index.acquire("b@0-4")
+        kind, zombie = index.acquire("b@0-4")
+        assert kind == "leader"
         time.sleep(0.06)
         kind, new_leader = index.acquire("b@0-4")   # reclaims the zombie
         assert kind == "leader"
@@ -675,7 +702,8 @@ class TestFlightReclamation:
     def test_zombie_abort_does_not_unregister_new_flight(self):
         tiers = [MemTier(1 << 20)]
         index = CacheIndex(tiers, flight_ttl_s=0.05)
-        _, zombie = index.acquire("b@0-4")
+        kind, zombie = index.acquire("b@0-4")
+        assert kind == "leader"
         time.sleep(0.06)
         kind, new_leader = index.acquire("b@0-4")
         assert kind == "leader"
@@ -688,7 +716,8 @@ class TestFlightReclamation:
     def test_ttl_none_disables_reclamation(self):
         tiers = [MemTier(1 << 20)]
         index = CacheIndex(tiers, flight_ttl_s=None)
-        _, leader = index.acquire("b@0-4")
+        kind, leader = index.acquire("b@0-4")
+        assert kind == "leader"
         time.sleep(0.02)
         kind, fl = index.acquire("b@0-4")
         assert kind == "wait"
@@ -698,7 +727,8 @@ class TestFlightReclamation:
     def test_live_leader_unaffected_within_ttl(self):
         tiers = [MemTier(1 << 20)]
         index = CacheIndex(tiers, flight_ttl_s=30.0)
-        _, leader = index.acquire("b@0-4")
+        kind, leader = index.acquire("b@0-4")
+        assert kind == "leader"
         tiers[0].write("b@0-4", b"data")
         index.publish(leader, tiers[0], 4)
         assert index.contains("b@0-4")

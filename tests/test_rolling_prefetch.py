@@ -271,6 +271,30 @@ class TestRollingPrefetch:
                 got.extend(chunk)
         assert bytes(got) == b"".join(objects[m.key] for m in metas(store))
 
+    def test_reserve_failure_fails_group_without_leaking_flights(self):
+        # _reserve runs eviction I/O; if it raises with the group's
+        # flights registered, those flights must be aborted — a leaked
+        # flight parks every waiter (this reader included) until the
+        # reclaim TTL.
+        objects = {"a": payload(1024)}
+        store = make_store(objects)
+        pf = RollingPrefetcher(
+            store, metas(store), [MemTier(4096)], blocksize=256,
+            eviction_interval_s=10.0,
+        )
+
+        def broken_reserve(nbytes):
+            raise RuntimeError("eviction I/O exploded")
+
+        pf._reserve = broken_reserve
+        with pf:
+            with pytest.raises(StoreError):
+                pf.read_range(0, 256)
+            # Every flight the failed group registered was aborted.
+            assert not pf.index._flights
+            failed = [i for i in pf._info if i.state == BlockState.FAILED]
+            assert failed and all(i.error is not None for i in failed)
+
 
 # --------------------------------------------------------------------------- #
 # Sequential baseline equivalence

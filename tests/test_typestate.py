@@ -1,0 +1,288 @@
+"""Tests for the path-sensitive typestate pass (rules RP009–RP013).
+
+The paired good/bad snippet per rule lives in test_analysis.py's
+RULE_FIXTURES (so the every-rule-has-a-fixture invariant covers them);
+this file exercises the *interpreter semantics* the pass relies on:
+discriminator refinement, exception edges, try/finally and `with`
+discharge, escape-to-caller transfer, loop back-edge behaviour, the
+publish-spawned pin, and suppression plumbing.
+"""
+
+from __future__ import annotations
+
+from repro.analysis import analyze
+
+
+_runs = 0
+
+
+def run_on(tmp_path, sources: dict[str, str]):
+    # Each call gets its own subtree so two runs in one test don't see
+    # each other's files.
+    global _runs
+    _runs += 1
+    root = tmp_path / f"run{_runs}"
+    for rel, code in sources.items():
+        p = root / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(code)
+    _, findings = analyze([str(root)])
+    return findings
+
+
+def fired(findings) -> set[str]:
+    return {f.rule for f in findings if not f.suppressed}
+
+
+# --------------------------------------------------------------------------- #
+# Discriminator refinement.
+# --------------------------------------------------------------------------- #
+
+def test_assert_kills_infeasible_discriminants(tmp_path):
+    # `assert kind == "hit"` proves the leader/waiter obligations away.
+    findings = run_on(tmp_path, {"fx.py": """
+def read_block(index, bid):
+    kind, tier = index.acquire(bid)
+    assert kind == "hit"
+    return tier.read(bid, 0, 10)
+"""})
+    assert fired(findings) == set()
+
+
+def test_unrefined_acquire_reports_both_obligations(tmp_path):
+    # No refinement at all: leader AND waiter leaks, anchored at the
+    # acquire() call.
+    findings = run_on(tmp_path, {"fx.py": """
+def peek(index, bid):
+    kind, handle = index.acquire(bid)
+    return kind
+"""})
+    assert fired(findings) == {"RP009"}
+    msgs = " ".join(f.message for f in findings)
+    assert "leader flight" in msgs and "waiter handle" in msgs
+
+
+def test_elif_chain_discharges_every_arm(tmp_path):
+    findings = run_on(tmp_path, {"fx.py": """
+def fetch(index, bid, data):
+    kind, handle = index.acquire(bid)
+    if kind == "leader":
+        try:
+            index.publish(handle, data, len(data))
+        except BaseException:
+            index.abort_fetch(handle)
+            raise
+    elif kind == "wait":
+        index.join(handle, timeout=5.0)
+    else:
+        index.unpin(bid)
+"""})
+    assert fired(findings) == set()
+
+
+def test_none_check_refines_value_handle_without_escaping(tmp_path):
+    # `if tier is None` is a refinement mention, not an escape — the
+    # reserved-path leak must still be reported.
+    findings = run_on(tmp_path, {"fx.py": """
+def stage(index, bid, payload):
+    tier = index.reserve_space(len(payload))
+    if tier is None:
+        return None
+    tier.write(bid, payload)
+"""})
+    assert fired(findings) == {"RP011"}
+
+
+def test_bool_creator_in_if_test(tmp_path):
+    # `if tier.reserve(n):` — true arm owns a reservation.
+    bad = """
+def place(tier, bid, data):
+    if tier.reserve(len(data)):
+        tier.write(bid, data)
+"""
+    good = """
+def place(tier, bid, data):
+    if tier.reserve(len(data)):
+        try:
+            tier.write(bid, data)
+        except BaseException:
+            tier.cancel(len(data))
+            raise
+        tier.commit(len(data))
+"""
+    assert fired(run_on(tmp_path, {"fx.py": bad})) == {"RP011"}
+    assert fired(run_on(tmp_path, {"ok.py": good})) == set()
+
+
+# --------------------------------------------------------------------------- #
+# Immediate rules: double-unpin, use-after-release.
+# --------------------------------------------------------------------------- #
+
+def test_use_after_release_is_rp010(tmp_path):
+    findings = run_on(tmp_path, {"fx.py": """
+def read_block(index, bid):
+    kind, tier = index.acquire(bid)
+    assert kind == "hit"
+    index.unpin(bid)
+    return tier.read(bid, 0, 10)
+"""})
+    assert fired(findings) == {"RP010"}
+    assert any("use-after-release" in f.message for f in findings)
+
+
+def test_publish_spawns_pin_so_double_unpin_after_publish_fires(tmp_path):
+    bad = """
+def lead(index, bid, data):
+    kind, handle = index.acquire(bid)
+    assert kind == "leader"
+    index.publish(handle, data, len(data))
+    index.unpin(bid)
+    index.unpin(bid)
+"""
+    good = """
+def lead(index, bid, data):
+    kind, handle = index.acquire(bid)
+    assert kind == "leader"
+    index.publish(handle, data, len(data))
+    index.unpin(bid)
+"""
+    assert fired(run_on(tmp_path, {"fx.py": bad})) == {"RP010"}
+    assert fired(run_on(tmp_path, {"ok.py": good})) == set()
+
+
+def test_double_unpin_only_on_the_path_that_released(tmp_path):
+    # The release happens on one branch only; the merge point unpin is
+    # a double release on that path alone — still reported.
+    findings = run_on(tmp_path, {"fx.py": """
+def maybe(index, bid, early):
+    kind, tier = index.acquire(bid)
+    assert kind == "hit"
+    if early:
+        index.unpin(bid)
+    index.unpin(bid)
+"""})
+    assert fired(findings) == {"RP010"}
+
+
+# --------------------------------------------------------------------------- #
+# Structural discharge: try/finally, with, escapes.
+# --------------------------------------------------------------------------- #
+
+def test_try_finally_discharges_lifecycle(tmp_path):
+    findings = run_on(tmp_path, {"fx.py": """
+from repro.io.write import UploadPool
+
+def drain(jobs):
+    pool = UploadPool()
+    try:
+        for job in jobs:
+            pool.submit(job)
+    finally:
+        pool.close()
+"""})
+    assert fired(findings) == set()
+
+
+def test_with_block_discharges_managed_creator(tmp_path):
+    findings = run_on(tmp_path, {"fx.py": """
+def put(fs, key, data):
+    with fs.open_write(key) as w:
+        w.write(data)
+"""})
+    assert fired(findings) == set()
+
+
+def test_return_escapes_obligation_to_caller(tmp_path):
+    findings = run_on(tmp_path, {"fx.py": """
+def begin(index, bid):
+    kind, handle = index.acquire(bid)
+    assert kind == "leader"
+    return handle
+"""})
+    assert fired(findings) == set()
+
+
+def test_attribute_store_escapes_obligation(tmp_path):
+    findings = run_on(tmp_path, {"fx.py": """
+def park(self, index, bid):
+    kind, handle = index.acquire(bid)
+    assert kind == "leader"
+    self.flight = handle
+"""})
+    assert fired(findings) == set()
+
+
+def test_passing_handle_to_unknown_call_escapes(tmp_path):
+    findings = run_on(tmp_path, {"fx.py": """
+def hand_off(index, bid, finisher):
+    kind, handle = index.acquire(bid)
+    assert kind == "leader"
+    finisher(handle)
+"""})
+    assert fired(findings) == set()
+
+
+def test_loop_back_edge_escapes_inner_resources(tmp_path):
+    # A resource created inside a loop body may be discharged by a later
+    # iteration — under-approximate, not reported.
+    findings = run_on(tmp_path, {"fx.py": """
+def sweep(index, bids):
+    for bid in bids:
+        kind, handle = index.acquire(bid)
+        assert kind == "leader"
+"""})
+    assert fired(findings) == set()
+
+
+def test_resource_from_before_loop_keeps_its_state(tmp_path):
+    findings = run_on(tmp_path, {"fx.py": """
+def lead(index, bid, chunks):
+    kind, handle = index.acquire(bid)
+    assert kind == "leader"
+    for c in chunks:
+        len(c)
+"""})
+    assert fired(findings) == {"RP009"}
+
+
+# --------------------------------------------------------------------------- #
+# Exception-path gating and suppression.
+# --------------------------------------------------------------------------- #
+
+def test_exception_edges_not_checked_in_tests(tmp_path):
+    # Leak only on the raise edge: reported in src, silent in a test
+    # module (a test dying mid-protocol already fails loudly).
+    code = """
+def stage(index, bid, payload):
+    tier = index.reserve_space(len(payload))
+    if tier is None:
+        return None
+    tier.write(bid, payload)
+    tier.commit(len(payload))
+    return tier
+"""
+    assert fired(run_on(tmp_path, {"fx.py": code})) == {"RP011"}
+    assert fired(run_on(tmp_path, {"tests/test_fx.py": code})) == set()
+
+
+def test_suppression_with_reason_silences_typestate(tmp_path):
+    findings = run_on(tmp_path, {"fx.py": """
+def peek(index, bid):
+    # repro: allow[RP009] — probe intentionally leaves the flight for reclaim
+    kind, handle = index.acquire(bid)
+    return kind
+"""})
+    assert fired(findings) == set()
+    assert any(f.rule == "RP009" and f.suppressed for f in findings)
+
+
+def test_self_receiver_does_not_create_obligation(tmp_path):
+    # A CacheIndex method calling its own acquire() is implementing the
+    # protocol, not consuming it.
+    findings = run_on(tmp_path, {"fx.py": """
+class CacheIndex:
+    def reacquire(self, bid):
+        kind, handle = self.acquire(bid)
+        return kind, handle
+"""})
+    assert fired(findings) == set()

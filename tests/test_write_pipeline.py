@@ -235,6 +235,51 @@ class TestWriter:
         assert fs.store.backing.get("h") == data
         assert w.stats.snapshot()["hedges"] >= 1
 
+    def test_pool_refusing_job_unwinds_seal_barrier(self):
+        # If the pool is closed underneath the writer, the seal's barrier
+        # count must be unwound — otherwise flush()/close() wait forever
+        # for an upload job that was never queued.
+        fs = make_fs()
+        w = fs.open_write("refused")
+
+        class _ClosedPool:
+            def submit(self, job):
+                raise ValueError("submit on closed UploadPool")
+
+        orig_pool = w._pool
+        w._pool = _ClosedPool()
+        with pytest.raises(ValueError):
+            w.write(payload(2048))      # seals part 0, pool refuses
+        # Barrier accounting balanced: flush() returns instead of hanging
+        # forever on an upload job that was never queued.
+        assert w._sealed == w._done
+        w._pool = orig_pool
+        w.flush()
+        w.abort()
+        fs.close()
+
+    def test_staging_tier_write_failure_returns_budget_and_raises(self):
+        fs = make_fs()
+        w = fs.open_write("torn")
+        tier = w.tiers[0]
+        free_before = tier.available()
+
+        def torn_write(*a, **kw):
+            raise OSError("disk gone")
+
+        orig = tier.write
+        tier.write = torn_write
+        try:
+            with pytest.raises(OSError):
+                w.write(payload(2048))
+        finally:
+            tier.write = orig
+        # The failed reservation was cancelled, not leaked.
+        assert tier.available() == free_before
+        assert w._sealed == w._done
+        w.abort()
+        fs.close()
+
     def test_write_after_close_and_join_without_close_async(self):
         fs = make_fs()
         w = fs.open_write("x")
@@ -451,9 +496,8 @@ class TestSatellites:
         def writer_worker(tid):
             try:
                 for i in range(n_iters):
-                    w = fs.open_write(f"out/{tid}/{i}", blocksize=4096)
-                    w.write(payload(1000, seed=tid))
-                    w.close()
+                    with fs.open_write(f"out/{tid}/{i}", blocksize=4096) as w:
+                        w.write(payload(1000, seed=tid))
                     fs.stats()
             except Exception as e:  # repro: allow[RP005] — stashed; asserted after join
                 errors.append(e)
